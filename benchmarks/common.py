@@ -1,0 +1,50 @@
+"""Shared benchmark harness utilities (one benchmark per paper table/figure)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import DDPGConfig, MagpieAgent, Scalarizer, Tuner
+from repro.core.baselines import BestConfigTuner
+from repro.envs import LustreSimEnv
+
+
+def make_magpie(env, weights, seed: int):
+    scal = Scalarizer(weights=weights, specs=env.metric_specs)
+    agent = MagpieAgent(
+        DDPGConfig(state_dim=env.state_dim, action_dim=env.action_dim),
+        seed=seed)
+    return Tuner(env, scal, agent), scal
+
+
+def make_bestconfig(env, weights, seed: int, round_size: int = 100):
+    scal = Scalarizer(weights=weights, specs=env.metric_specs)
+    return BestConfigTuner(env, scal, seed=seed, round_size=round_size), scal
+
+
+def run_pair(workload: str, weights, steps: int, seeds) -> dict:
+    """Run Magpie + BestConfig over seeds; return mean/sd gains per metric."""
+    out = {"magpie": {}, "bestconfig": {}}
+    metrics = list(weights)
+    acc = {m: {k: [] for k in metrics} for m in out}
+    for seed in seeds:
+        tuner, _ = make_magpie(LustreSimEnv(workload, seed=seed), weights,
+                               seed)
+        res = tuner.run(steps)
+        for k in metrics:
+            acc["magpie"][k].append(res.gain(k))
+        bc, _ = make_bestconfig(LustreSimEnv(workload, seed=seed + 100),
+                                weights, seed)
+        res_b = bc.run(steps)
+        for k in metrics:
+            acc["bestconfig"][k].append(res_b.gain(k))
+    for method in acc:
+        for k in metrics:
+            vals = np.asarray(acc[method][k])
+            out[method][k] = {"mean": float(vals.mean()),
+                              "sd": float(vals.std())}
+    return out
+
+
+def csv_row(*cols) -> str:
+    return ",".join(str(c) for c in cols)

@@ -1,0 +1,34 @@
+"""Paper Fig. 6: 30 vs 100 tuning steps. Magpie keeps improving with more
+steps (it resumes from the 30-step agent state — 'Magpie 100 makes use of the
+tuning experience from Magpie 30'); BestConfig mostly does not.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row, make_bestconfig, make_magpie
+from repro.envs import WORKLOADS, LustreSimEnv
+
+
+def run(seeds=(0, 1), workloads=None) -> list:
+    rows = [csv_row("workload", "method", "steps", "throughput_gain_pct")]
+    weights = {"throughput": 1.0}
+    for wl in workloads or list(WORKLOADS):
+        for seed in seeds:
+            tuner, _ = make_magpie(LustreSimEnv(wl, seed=seed), weights, seed)
+            r30 = tuner.run(30)          # Magpie 30
+            r100 = tuner.run(70)         # +70 on the same agent -> Magpie 100
+            bc30, _ = make_bestconfig(LustreSimEnv(wl, seed=seed + 100),
+                                      weights, seed)
+            b30 = bc30.run(30)
+            b100 = bc30.run(70)          # continues its recursive search
+            rows.append(csv_row(wl, "magpie", 30, f"{r30.gain('throughput')*100:.1f}"))
+            rows.append(csv_row(wl, "magpie", 100, f"{r100.gain('throughput')*100:.1f}"))
+            rows.append(csv_row(wl, "bestconfig", 30, f"{b30.gain('throughput')*100:.1f}"))
+            rows.append(csv_row(wl, "bestconfig", 100, f"{b100.gain('throughput')*100:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,93 @@
+"""Benchmark harness entry point: one benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all (paper set)
+    PYTHONPATH=src python -m benchmarks.run --quick    # reduced seeds
+    PYTHONPATH=src python -m benchmarks.run --only fig4
+
+The dry-run/roofline table (the per-arch benchmark of this framework) is
+produced by `python -m repro.launch.dryrun`; its JSON is summarized here if
+present.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def _dryrun_summary(path="benchmarks/results/dryrun.json") -> list:
+    if not os.path.exists(path):
+        return [f"(no dry-run results at {path}; run python -m "
+                f"repro.launch.dryrun)"]
+    with open(path) as f:
+        recs = json.load(f)
+    rows = ["arch,shape,mesh,status,mem_gb,compute_s,memory_s,collective_s,"
+            "dominant,useful_ratio"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["status"] != "ok":
+            rows.append(f"{r['arch']},{r['shape']},{r['mesh']},{r['status']},"
+                        ",,,,,")
+            continue
+        t = r["roofline"]
+        rows.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},ok,"
+            f"{r['memory']['peak_estimate_bytes']/1e9:.2f},"
+            f"{t['compute_s']:.4f},{t['memory_s']:.4f},"
+            f"{t['collective_s']:.4f},{t['dominant']},"
+            f"{r['useful_flops_ratio']:.2f}")
+    n_ok = sum(r["status"] == "ok" for r in recs)
+    n_skip = sum(r["status"] == "skip" for r in recs)
+    n_fail = sum(r["status"] == "fail" for r in recs)
+    rows.append(f"summary,,,{n_ok} ok / {n_skip} skip / {n_fail} fail,,,,,,")
+    return rows
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true", help="reduced seeds/steps")
+    p.add_argument("--only", default="",
+                   help="fig4|fig5|fig6|fig7|table3|dryrun")
+    args = p.parse_args()
+
+    seeds = (0,) if args.quick else (0, 1, 2)
+    steps = 20 if args.quick else 30
+
+    from benchmarks import (fig4_single_objective, fig5_multi_objective,
+                            fig6_steps, fig7_progressive, table3_timing)
+
+    benches = {
+        "fig4": ("Fig. 4 — single-objective throughput tuning (30 steps)",
+                 lambda: fig4_single_objective.run(seeds=seeds, steps=steps)),
+        "fig5": ("Fig. 5 — multi-objective throughput+IOPS tuning",
+                 lambda: fig5_multi_objective.run(seeds=seeds, steps=steps)),
+        "fig6": ("Fig. 6 — 30 vs 100 tuning steps",
+                 lambda: fig6_steps.run(
+                     seeds=(0,) if args.quick else (0, 1),
+                     workloads=["video_server", "random_rw"] if args.quick
+                     else None)),
+        "fig7": ("Fig. 7 — progressive tuning on Video Server",
+                 lambda: fig7_progressive.run(
+                     increments=5 if args.quick else 10)),
+        "table3": ("Table III — per-iteration timing",
+                   lambda: table3_timing.run(steps=steps)),
+        "dryrun_baseline": (
+            "Dry-run / roofline table — paper-faithful BASELINE",
+            lambda: _dryrun_summary(
+                "benchmarks/results/dryrun_baseline.json")),
+        "dryrun": ("Dry-run / roofline table — post-hillclimb (optimized)",
+                   _dryrun_summary),
+    }
+    for name, (title, fn) in benches.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        print(f"\n=== {name}: {title} ===", flush=True)
+        for row in fn():
+            print(row, flush=True)
+        print(f"[{name} done in {time.time()-t0:.1f}s]", flush=True)
+
+
+if __name__ == "__main__":
+    main()

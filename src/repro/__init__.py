@@ -1,0 +1,22 @@
+"""repro: Magpie (DDPG static-parameter auto-tuning) as a first-class feature of a
+multi-pod JAX training/serving framework.
+
+Subpackages
+-----------
+core        The paper's contribution: DDPG tuner, replay buffer, action mapping,
+            scalarization, and the BestConfig baseline.
+envs        Tuning environments: the calibrated Lustre/Filebench simulator (paper
+            reproduction) and the sharding environment (the framework tuning itself).
+models      Model substrate for the 10 assigned architectures.
+kernels     Pallas TPU kernels (+ pure-jnp oracles) for the compute hot-spots.
+sharding    Logical-axis sharding rules.
+optim       AdamW / Adafactor / schedules (used by both the RL agent and LM training).
+data        Deterministic sharded synthetic data pipeline.
+checkpoint  Fault-tolerant checkpointing.
+training    train_step / serve_step / trainer loop.
+launch      Production mesh, multi-pod dry-run, end-to-end drivers.
+roofline    Roofline-term extraction from compiled artifacts.
+configs     One config per assigned architecture + the paper's Lustre tuning config.
+"""
+
+__version__ = "1.0.0"

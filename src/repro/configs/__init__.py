@@ -1,0 +1,140 @@
+"""Architecture registry + assigned input-shape sets + input_specs().
+
+Every assigned (architecture x shape) cell resolves here: ``get_config`` /
+``get_smoke_config`` return ArchConfigs; ``input_specs`` builds the
+weak-type-correct ShapeDtypeStruct stand-ins the dry-run lowers against;
+``cell_supported`` encodes the assignment's skip rules (long_500k only for
+sub-quadratic archs)."""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ArchConfig
+
+_MODULES = {
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "zamba2-7b": "zamba2_7b",
+    "whisper-large-v3": "whisper_large_v3",
+    "arctic-480b": "arctic_480b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "minicpm3-4b": "minicpm3_4b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "yi-9b": "yi_9b",
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "rwkv6-3b": "rwkv6_3b",
+}
+
+ARCH_NAMES = list(_MODULES)
+
+
+def _mod(name: str):
+    if name not in _MODULES:
+        raise ValueError(f"unknown arch {name!r}; choose from {ARCH_NAMES}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get_config(name: str) -> ArchConfig:
+    return _mod(name).config()
+
+
+def get_smoke_config(name: str) -> ArchConfig:
+    return _mod(name).smoke_config()
+
+
+# ---------------------------------------------------------------------------
+# Assigned shapes (LM-family: seq_len x global_batch)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str        # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+SHAPE_NAMES = list(SHAPES)
+
+
+def cell_supported(cfg: ArchConfig, shape_name: str) -> tuple:
+    """(supported, reason). Encodes the assignment's own skip rules."""
+    shape = SHAPES[shape_name]
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("SKIP(full-attention): 500k-token dense-attention KV "
+                       "decode is infeasible by design; run only for "
+                       "SSM/hybrid archs per the assignment")
+    return True, ""
+
+
+def input_specs(cfg: ArchConfig, shape_name: str, *,
+                batch_override: int = 0) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train:    {tokens, labels[, positions][, input_embeds/encoder frames]}
+    prefill:  {tokens[, input_embeds]}           (cache is built inside)
+    decode:   {tokens[B,1], cache_index}          (cache specs live in
+               models.transformer.abstract_cache; the serve_step assembles)
+    """
+    shape = SHAPES[shape_name]
+    B = batch_override or shape.batch
+    S = shape.seq
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+        if cfg.mrope_sections:
+            specs["positions"] = jax.ShapeDtypeStruct((B, 3, S), i32)
+        if cfg.family == "vlm":
+            specs["input_embeds"] = jax.ShapeDtypeStruct(
+                (B, S, cfg.d_model), cfg.compute_dtype)
+        if cfg.is_encdec:
+            specs["input_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), cfg.compute_dtype)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.mrope_sections:
+            specs["positions"] = jax.ShapeDtypeStruct((B, 3, S), i32)
+        if cfg.is_encdec:
+            specs["input_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), cfg.compute_dtype)
+        return specs
+    # decode: one new token against a seq-long cache
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+        "cache_index": jax.ShapeDtypeStruct((), i32),
+    }
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Paper config (the Lustre tuning experiment)
+# ---------------------------------------------------------------------------
+
+def paper_lustre():
+    """Everything the paper's experiments need, bundled."""
+    from repro.envs.lustre_sim import paper_param_space
+    return {
+        "param_space": paper_param_space(),
+        "workloads": ["file_server", "video_server", "seq_write",
+                      "seq_read", "random_rw"],
+        "single_objective": {"throughput": 1.0},
+        "multi_objective": {"throughput": 1.0, "iops": 1.0},
+        "tuning_steps": 30,
+        "extended_steps": 100,
+        "eval_runs": 3,
+    }

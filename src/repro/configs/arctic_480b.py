@@ -1,0 +1,34 @@
+"""arctic-480b [moe]: 35L d_model=7168 56H (GQA kv=8) d_ff=4864 vocab=32000,
+MoE 128e top-2 + dense residual [hf:Snowflake/snowflake-arctic-base].
+
+Dense-MoE hybrid: every layer sums a dense d_ff=4864 MLP branch with a
+128-expert top-2 MoE (expert d_ff 4864). fp32 params + Adafactor (AdamW
+states do not fit 256 x 16 GB — DESIGN.md §6)."""
+
+import jax.numpy as jnp
+
+from repro.models.base import ArchConfig, MoEConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="arctic-480b", family="moe",
+        num_layers=35, d_model=7168, num_heads=56, num_kv_heads=8,
+        d_ff=4864, vocab_size=32000,
+        attention="gqa", rope_theta=1e6,
+        moe=MoEConfig(num_experts=128, top_k=2, d_ff_expert=4864,
+                      dense_residual=True, capacity_factor=1.25),
+        param_dtype=jnp.float32, compute_dtype=jnp.bfloat16,
+        notes="Adafactor optimizer (AdamW state does not fit; DESIGN §6)",
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name="arctic-480b-smoke", family="moe",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=96, vocab_size=512,
+        attention="gqa",
+        moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=96,
+                      dense_residual=True, capacity_factor=1.5),
+    )

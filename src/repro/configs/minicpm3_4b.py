@@ -1,0 +1,37 @@
+"""minicpm3-4b [dense]: 62L d_model=2560 40H (GQA kv=40) d_ff=6400
+vocab=73448 — MLA [hf:openbmb/MiniCPM3-4B].
+
+Multi-head Latent Attention: q_lora 768, kv_lora 256, qk_nope 64, qk_rope 32,
+v_head 64. The serving cache stores only the (c, k_pe) latents — the MLA
+memory win; decode uses the absorbed form."""
+
+import jax.numpy as jnp
+
+from repro.models.base import ArchConfig, MLAConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="minicpm3-4b", family="dense",
+        num_layers=62, d_model=2560, num_heads=40, num_kv_heads=40,
+        d_ff=6400, vocab_size=73448, head_dim=64,
+        attention="mla",
+        mla=MLAConfig(q_lora_rank=768, kv_lora_rank=256,
+                      qk_nope_head_dim=64, qk_rope_head_dim=32,
+                      v_head_dim=64),
+        rope_theta=1e4, tie_embeddings=True,
+        param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name="minicpm3-4b-smoke", family="dense",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=128, vocab_size=512, head_dim=16,
+        attention="mla",
+        mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                      qk_nope_head_dim=16, qk_rope_head_dim=8,
+                      v_head_dim=16),
+        tie_embeddings=True,
+    )

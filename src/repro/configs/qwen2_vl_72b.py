@@ -1,0 +1,32 @@
+"""qwen2-vl-72b [vlm]: 80L d_model=8192 64H (GQA kv=8) d_ff=29568
+vocab=152064 — M-RoPE, dynamic resolution [arXiv:2409.12191; hf].
+
+Backbone only: the vision frontend is a stub; input_specs provides
+pre-computed patch embeddings. M-RoPE: (t, h, w) sections (16, 24, 24) over
+the 64 rotary frequency bands (head_dim 128)."""
+
+import jax.numpy as jnp
+
+from repro.models.base import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="qwen2-vl-72b", family="vlm",
+        num_layers=80, d_model=8192, num_heads=64, num_kv_heads=8,
+        d_ff=29568, vocab_size=152064,
+        attention="gqa", qkv_bias=True, rope_theta=1e6,
+        mrope_sections=(16, 24, 24),
+        param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+        notes="vision frontend stubbed (precomputed patch embeddings)",
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name="qwen2-vl-72b-smoke", family="vlm",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=128, vocab_size=512,
+        attention="gqa", qkv_bias=True, rope_theta=1e6,
+        mrope_sections=(2, 3, 3),  # half-dim = 8
+    )

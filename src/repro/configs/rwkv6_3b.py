@@ -1,0 +1,26 @@
+"""rwkv6-3b [ssm]: 32L d_model=2560 (attn-free) d_ff=8960 vocab=65536 —
+Finch, data-dependent decay [arXiv:2404.05892]. head_size 64 -> 40 heads.
+O(1) recurrent state for decode; chunked-parallel WKV for train/prefill."""
+
+import jax.numpy as jnp
+
+from repro.models.base import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="rwkv6-3b", family="ssm",
+        num_layers=32, d_model=2560, num_heads=40, num_kv_heads=40,
+        d_ff=8960, vocab_size=65536,
+        attention="none", rwkv_head_size=64,
+        param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name="rwkv6-3b-smoke", family="ssm",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=128, vocab_size=512,
+        attention="none", rwkv_head_size=16,
+    )

@@ -1,0 +1,35 @@
+"""whisper-large-v3 [audio]: 32L d_model=1280 20H (GQA kv=20) d_ff=5120
+vocab=51866 — enc-dec, conv frontend (stub) [arXiv:2212.04356].
+
+32 encoder + 32 decoder layers; the mel/conv frontend is a stub —
+input_specs provides (B, 1500, 1280) frame embeddings. GELU MLPs,
+layernorm, no RoPE (sinusoidal positions; decoder positions sinusoidal as an
+approximation of Whisper's learned ones — see DESIGN.md)."""
+
+import jax.numpy as jnp
+
+from repro.models.base import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="whisper-large-v3", family="encdec",
+        num_layers=32, d_model=1280, num_heads=20, num_kv_heads=20,
+        d_ff=5120, vocab_size=51866,
+        attention="gqa", act="gelu", norm="layernorm",
+        encoder_layers=32, encoder_seq=1500,
+        tie_embeddings=True,
+        param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+        notes="conv frontend stubbed; sinusoidal decoder positions (approx)",
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name="whisper-large-v3-smoke", family="encdec",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=128, vocab_size=512,
+        attention="gqa", act="gelu", norm="layernorm",
+        encoder_layers=2, encoder_seq=30,
+        tie_embeddings=True,
+    )

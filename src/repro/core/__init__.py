@@ -1,0 +1,24 @@
+"""The paper's primary contribution: DDPG-based static-parameter tuning.
+
+Public API:
+    ParamSpec / ParamSpace       -- the m-dimensional static parameter space
+    MetricSpec / Scalarizer      -- state normalization + multi-objective reward
+    ReplayBuffer                 -- FIFO memory pool
+    DDPGConfig / MagpieAgent     -- the RL agent
+    Tuner                        -- the Fig.1 tuning loop
+    baselines.BestConfigTuner    -- the paper's baseline
+"""
+
+from repro.core.action_mapping import ParamSpec, ParamSpace
+from repro.core.scalarization import MetricSpec, Scalarizer, normalize_state
+from repro.core.replay_buffer import ReplayBuffer, Transition
+from repro.core.ddpg import DDPGConfig, DDPGState, OUNoise, ddpg_init, ddpg_update
+from repro.core.agent import MagpieAgent
+from repro.core.tuner import Tuner, TuningResult, StepRecord
+
+__all__ = [
+    "ParamSpec", "ParamSpace", "MetricSpec", "Scalarizer", "normalize_state",
+    "ReplayBuffer", "Transition", "DDPGConfig", "DDPGState", "OUNoise",
+    "ddpg_init", "ddpg_update", "MagpieAgent", "Tuner", "TuningResult",
+    "StepRecord",
+]

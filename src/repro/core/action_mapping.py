@@ -1,0 +1,119 @@
+"""Action <-> configuration mapping (paper §II-C-1, "Action Mapping").
+
+The DDPG actor emits actions in [0,1]^m. Each coordinate is inverse-mapped to the
+parameter's real range:
+
+  continuous:  lambda_i = a(i) * (max - min) + min
+  discrete:    lambda_i = floor(a(i) * (max - min) + min + 0.5)
+
+Discrete parameters may also be defined over an explicit value list (e.g. power-of-two
+stripe sizes); then the formula indexes the list. Box constraints (paper §II-A,
+C_i := lambda_j ⊕ B_i) are enforced by construction (the map's image is the box) and
+validated for externally supplied configs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One tunable (static) parameter."""
+
+    name: str
+    kind: str  # "continuous" | "discrete" | "choice"
+    minimum: float = 0.0
+    maximum: float = 1.0
+    values: tuple = ()  # for kind == "choice": explicit, ordered value list
+    default: Any = None
+
+    def __post_init__(self):
+        if self.kind not in ("continuous", "discrete", "choice"):
+            raise ValueError(f"unknown parameter kind {self.kind!r}")
+        if self.kind == "choice":
+            if len(self.values) < 1:
+                raise ValueError(f"choice parameter {self.name} needs values")
+        elif self.maximum < self.minimum:
+            raise ValueError(f"{self.name}: max < min")
+
+    def from_unit(self, a: float):
+        """Paper's inverse mapping for a single coordinate a in [0,1]."""
+        a = float(min(1.0, max(0.0, a)))
+        if self.kind == "continuous":
+            return a * (self.maximum - self.minimum) + self.minimum
+        if self.kind == "discrete":
+            v = int(np.floor(a * (self.maximum - self.minimum) + self.minimum + 0.5))
+            return int(min(self.maximum, max(self.minimum, v)))
+        # choice: treat the index space [0, len-1] as the discrete range
+        idx = int(np.floor(a * (len(self.values) - 1) + 0.5))
+        idx = min(len(self.values) - 1, max(0, idx))
+        return self.values[idx]
+
+    def to_unit(self, value) -> float:
+        """Forward map (used to seed the buffer with known configs)."""
+        if self.kind == "choice":
+            idx = self.values.index(value)
+            return idx / max(1, len(self.values) - 1)
+        if self.maximum == self.minimum:
+            return 0.0
+        return (float(value) - self.minimum) / (self.maximum - self.minimum)
+
+    def validate(self, value) -> bool:
+        if self.kind == "choice":
+            return value in self.values
+        if self.kind == "discrete":
+            return float(value).is_integer() and self.minimum <= value <= self.maximum
+        return self.minimum <= value <= self.maximum
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpace:
+    """The m-dimensional static-parameter space Lambda (paper §II-A)."""
+
+    specs: tuple
+
+    def __post_init__(self):
+        names = [s.name for s in self.specs]
+        if len(set(names)) != len(names):
+            raise ValueError("duplicate parameter names")
+
+    @property
+    def names(self) -> list:
+        return [s.name for s in self.specs]
+
+    @property
+    def dim(self) -> int:
+        return len(self.specs)
+
+    def to_config(self, action: Sequence[float]) -> dict:
+        if len(action) != self.dim:
+            raise ValueError(f"action dim {len(action)} != param dim {self.dim}")
+        return {s.name: s.from_unit(a) for s, a in zip(self.specs, action)}
+
+    def to_action(self, config: dict) -> np.ndarray:
+        return np.array([s.to_unit(config[s.name]) for s in self.specs], np.float32)
+
+    def default_config(self) -> dict:
+        out = {}
+        for s in self.specs:
+            if s.default is not None:
+                out[s.name] = s.default
+            elif s.kind == "choice":
+                out[s.name] = s.values[0]
+            else:
+                out[s.name] = s.from_unit(0.0)
+        return out
+
+    def validate(self, config: dict) -> bool:
+        return all(s.validate(config[s.name]) for s in self.specs)
+
+    def grid(self, points_per_dim: int) -> list:
+        """Cartesian grid of unit actions (used by the grid-search baseline)."""
+        axes = [np.linspace(0.0, 1.0, points_per_dim) for _ in self.specs]
+        mesh = np.meshgrid(*axes, indexing="ij")
+        flat = np.stack([m.reshape(-1) for m in mesh], axis=-1)
+        return [self.to_config(a) for a in flat]

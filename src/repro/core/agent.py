@@ -1,0 +1,115 @@
+"""MagpieAgent — the paper's agent: act (policy + exploration), observe, learn.
+
+Combines the DDPG learner (core.ddpg), the FIFO replay buffer (§II-D) and the
+exploration noise. Checkpointable so tuning sessions can be resumed (§III-E:
+'users can still resume tuning ... at a later point in time').
+"""
+
+from __future__ import annotations
+
+import pickle
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core.ddpg import (
+    DDPGConfig,
+    DDPGState,
+    OUNoise,
+    actor_apply,
+    ddpg_init,
+    ddpg_update,
+)
+from repro.core.replay_buffer import ReplayBuffer
+
+
+class MagpieAgent:
+    def __init__(self, cfg: DDPGConfig, buffer_capacity: int = 64, seed: int = 0,
+                 warmup_steps: int = 8):
+        """``warmup_steps``: number of initial exploratory actions before the
+        policy takes over — standard DDPG cold-start practice; gives the critic
+        something off-policy to regress on when history is empty. Warmup
+        actions are *stratified* (Latin-hypercube over the unit action box)
+        rather than i.i.d.-uniform so the tiny budget still covers the space."""
+        self.cfg = cfg
+        self.warmup_steps = warmup_steps
+        self.state, (self._actor_tx, self._critic_tx) = ddpg_init(
+            jax.random.PRNGKey(seed), cfg
+        )
+        self.buffer = ReplayBuffer(buffer_capacity, cfg.state_dim, cfg.action_dim)
+        self.noise = OUNoise(cfg.action_dim, seed=seed + 1)
+        self._np_rng = np.random.default_rng(seed + 2)
+        self.steps_taken = 0
+        self.last_metrics: dict = {}
+        # Latin-hypercube warmup plan: each warmup step lands in a distinct
+        # 1/warmup_steps interval of every action coordinate.
+        plan = np.empty((warmup_steps, cfg.action_dim), np.float32)
+        for j in range(cfg.action_dim):
+            perm = self._np_rng.permutation(warmup_steps)
+            plan[:, j] = (perm + self._np_rng.uniform(size=warmup_steps)) / max(
+                1, warmup_steps)
+        self._warmup_plan = plan
+
+    # -- acting -------------------------------------------------------------
+
+    def act(self, state: np.ndarray, explore: bool = True) -> np.ndarray:
+        """Action in [0,1]^m for the given normalized metric state."""
+        if explore and self.steps_taken < self.warmup_steps:
+            a = self._warmup_plan[self.steps_taken]
+        else:
+            a = np.asarray(actor_apply(self.state.actor, state.astype(np.float32)))
+            if explore:
+                a = a + self.noise()
+        self.steps_taken += 1
+        return np.clip(a, 0.0, 1.0).astype(np.float32)
+
+    # -- learning -----------------------------------------------------------
+
+    def observe(self, state, action, reward, next_state) -> None:
+        self.buffer.add(state, action, float(reward), next_state)
+
+    def learn(self, updates: Optional[int] = None) -> dict:
+        """Run ``updates`` (default cfg.updates_per_step) minibatch gradient steps."""
+        if len(self.buffer) == 0:
+            return {}
+        n = self.cfg.updates_per_step if updates is None else updates
+        metrics = {}
+        for _ in range(n):
+            batch = self.buffer.sample(self._np_rng, self.cfg.batch_size)
+            self.state, metrics = ddpg_update(
+                self.state, batch, self.cfg, self._actor_tx, self._critic_tx
+            )
+        self.last_metrics = {k: float(v) for k, v in metrics.items()}
+        return self.last_metrics
+
+    # -- persistence (resume tuning) ----------------------------------------
+
+    def state_dict(self) -> dict:
+        return {
+            "ddpg": jax.tree_util.tree_map(np.asarray, self.state),
+            "buffer": self.buffer.state_dict(),
+            "noise": self.noise.state_dict(),
+            "np_rng": self._np_rng.bit_generator.state,
+            "steps_taken": self.steps_taken,
+            "cfg": tuple(self.cfg),
+        }
+
+    def load_state_dict(self, d: dict) -> None:
+        if tuple(self.cfg) != tuple(d["cfg"]):
+            raise ValueError("agent config mismatch on resume")
+        self.state = DDPGState(*jax.tree_util.tree_map(
+            lambda x: x, tuple(d["ddpg"])
+        ))
+        self.buffer.load_state_dict(d["buffer"])
+        self.noise.load_state_dict(d["noise"])
+        self._np_rng.bit_generator.state = d["np_rng"]
+        self.steps_taken = int(d["steps_taken"])
+
+    def save(self, path: str) -> None:
+        with open(path, "wb") as f:
+            pickle.dump(self.state_dict(), f)
+
+    def load(self, path: str) -> None:
+        with open(path, "rb") as f:
+            self.load_state_dict(pickle.load(f))

@@ -1,0 +1,5 @@
+from repro.core.baselines.bestconfig import BestConfigTuner
+from repro.core.baselines.random_search import RandomSearchTuner
+from repro.core.baselines.grid_search import GridSearchTuner
+
+__all__ = ["BestConfigTuner", "RandomSearchTuner", "GridSearchTuner"]

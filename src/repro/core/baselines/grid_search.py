@@ -1,0 +1,64 @@
+"""Exhaustive grid search (oracle-ish baseline for small spaces; used by tests
+to find the true optimum of the simulator so Magpie's regret can be asserted)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.scalarization import Scalarizer
+from repro.core.tuner import StepRecord, TuningResult
+
+
+class GridSearchTuner:
+    def __init__(self, env, scalarizer: Scalarizer, points_per_dim: int = 8,
+                 eval_runs: int = 3):
+        self.env = env
+        self.scalarizer = scalarizer
+        self.points_per_dim = points_per_dim
+        self.eval_runs = eval_runs
+        self.history: list = []
+        self.simulated_restart_seconds = 0.0
+        self.default_config = env.param_space.default_config()
+        self.default_metrics = self._evaluate(self.default_config, runs=eval_runs)
+        self._cur_config = dict(self.default_config)
+        self.best_config = dict(self.default_config)
+        self.best_metrics = dict(self.default_metrics)
+        self.best_objective = scalarizer.objective(self.default_metrics)
+
+    def _evaluate(self, config: dict, runs: int) -> dict:
+        acc: dict = {}
+        for _ in range(runs):
+            m = self.env.apply(config, eval_run=True)
+            for k, v in m.items():
+                acc[k] = acc.get(k, 0.0) + v / runs
+        return acc
+
+    def run(self, steps: int = 0, learn: bool = True) -> TuningResult:
+        """Ignores ``steps``; visits the full grid."""
+        del steps, learn
+        t_wall = time.perf_counter()
+        for i, config in enumerate(self.env.param_space.grid(self.points_per_dim)):
+            metrics = self._evaluate(config, runs=self.eval_runs)
+            restart = self.env.restart_cost(config, self._cur_config)
+            self.simulated_restart_seconds += restart
+            objective = self.scalarizer.objective(metrics)
+            if objective > self.best_objective:
+                self.best_objective = objective
+                self.best_config = dict(config)
+                self.best_metrics = dict(metrics)
+            self.history.append(StepRecord(
+                step=i, config=config, metrics=metrics, objective=objective,
+                reward=0.0, restart_seconds=restart, action_seconds=0.0,
+                learn_seconds=0.0,
+            ))
+            self._cur_config = config
+        return TuningResult(
+            best_config=dict(self.best_config),
+            best_objective=self.best_objective,
+            best_metrics=dict(self.best_metrics),
+            default_config=dict(self.default_config),
+            default_metrics=dict(self.default_metrics),
+            history=list(self.history),
+            simulated_restart_seconds=self.simulated_restart_seconds,
+            wall_seconds=time.perf_counter() - t_wall,
+        )

@@ -1,0 +1,67 @@
+"""Uniform random search over the unit parameter box (sanity baseline)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.scalarization import Scalarizer
+from repro.core.tuner import StepRecord, TuningResult
+
+
+class RandomSearchTuner:
+    def __init__(self, env, scalarizer: Scalarizer, eval_runs: int = 3, seed: int = 0):
+        self.env = env
+        self.scalarizer = scalarizer
+        self.eval_runs = eval_runs
+        self._rng = np.random.default_rng(seed)
+        self.history: list = []
+        self.simulated_restart_seconds = 0.0
+        self.default_config = env.param_space.default_config()
+        self.default_metrics = self._evaluate(self.default_config, runs=eval_runs)
+        self._cur_config = dict(self.default_config)
+        self.best_config = dict(self.default_config)
+        self.best_metrics = dict(self.default_metrics)
+        self.best_objective = scalarizer.objective(self.default_metrics)
+
+    def _evaluate(self, config: dict, runs: int) -> dict:
+        acc: dict = {}
+        for _ in range(runs):
+            m = self.env.apply(config, eval_run=True)
+            for k, v in m.items():
+                acc[k] = acc.get(k, 0.0) + v / runs
+        return acc
+
+    def run(self, steps: int, learn: bool = True) -> TuningResult:
+        del learn
+        t_wall = time.perf_counter()
+        start = len(self.history)
+        for i in range(start, start + steps):
+            unit = self._rng.uniform(0.0, 1.0, self.env.param_space.dim)
+            config = self.env.param_space.to_config(unit)
+            metrics = self.env.apply(config)
+            restart = self.env.restart_cost(config, self._cur_config)
+            self.simulated_restart_seconds += restart
+            objective = self.scalarizer.objective(metrics)
+            if objective > self.best_objective:
+                self.best_objective = objective
+                self.best_config = dict(config)
+                self.best_metrics = dict(metrics)
+            self.history.append(StepRecord(
+                step=i, config=config, metrics=metrics, objective=objective,
+                reward=0.0, restart_seconds=restart, action_seconds=0.0,
+                learn_seconds=0.0,
+            ))
+            self._cur_config = config
+        best_metrics = self._evaluate(self.best_config, runs=self.eval_runs)
+        return TuningResult(
+            best_config=dict(self.best_config),
+            best_objective=self.scalarizer.objective(best_metrics),
+            best_metrics=best_metrics,
+            default_config=dict(self.default_config),
+            default_metrics=dict(self.default_metrics),
+            history=list(self.history),
+            simulated_restart_seconds=self.simulated_restart_seconds,
+            wall_seconds=time.perf_counter() - t_wall,
+        )

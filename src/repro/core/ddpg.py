@@ -1,0 +1,193 @@
+"""DDPG (Lillicrap et al.) in pure JAX — the paper's RL algorithm (§II-C).
+
+The actor maps the metric state s_t in [0,1]^k to an action a in [0,1]^m (one
+coordinate per static parameter; the action-mapping layer turns it into a real
+configuration). The critic is the Q function Q_phi(s, a). Both are small MLPs —
+the paper trains them on a single RTX 5000; at this size CPU training is faithful.
+
+Learning follows §II-C exactly:
+  critic:  argmin_phi E[(Q_phi(s,a) - (r + gamma * Q_targ(s', mu_targ(s'))))^2]
+  actor:   argmax_theta E[Q_phi(s, mu_theta(s))]
+with Polyak-averaged target networks for both.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key: jax.Array, sizes: Sequence[int]) -> list:
+    """He-uniform MLP init; returns a list of {"w","b"} layer dicts."""
+    params = []
+    keys = jax.random.split(key, len(sizes) - 1)
+    for k, (fan_in, fan_out) in zip(keys, zip(sizes[:-1], sizes[1:])):
+        bound = float(np.sqrt(6.0 / fan_in))
+        w = jax.random.uniform(k, (fan_in, fan_out), jnp.float32, -bound, bound)
+        params.append({"w": w, "b": jnp.zeros((fan_out,), jnp.float32)})
+    return params
+
+
+def mlp_apply(params: list, x: jnp.ndarray) -> jnp.ndarray:
+    """ReLU MLP; no activation on the final layer (callers add their own)."""
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i + 1 < len(params):
+            x = jax.nn.relu(x)
+    return x
+
+
+def actor_apply(params: list, state: jnp.ndarray) -> jnp.ndarray:
+    """Deterministic policy mu_theta: state -> action in [0,1]^m (sigmoid head)."""
+    return jax.nn.sigmoid(mlp_apply(params, state))
+
+
+def critic_apply(params: list, state: jnp.ndarray, action: jnp.ndarray) -> jnp.ndarray:
+    """Q_phi(s, a) -> scalar (last axis squeezed)."""
+    x = jnp.concatenate([state, action], axis=-1)
+    return jnp.squeeze(mlp_apply(params, x), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# DDPG learner state + update
+# ---------------------------------------------------------------------------
+
+class DDPGConfig(NamedTuple):
+    state_dim: int
+    action_dim: int
+    hidden: tuple = (64, 64)
+    actor_lr: float = 1e-3
+    critic_lr: float = 2e-3
+    gamma: float = 0.9          # tuning steps are near-bandit; short horizon
+    tau: float = 0.02           # Polyak coefficient for target networks
+    updates_per_step: int = 96  # gradient steps per environment step (Table III)
+    batch_size: int = 16
+
+
+class DDPGState(NamedTuple):
+    actor: Any
+    critic: Any
+    actor_targ: Any
+    critic_targ: Any
+    actor_opt: Any
+    critic_opt: Any
+    step: jnp.ndarray
+
+
+def ddpg_init(key: jax.Array, cfg: DDPGConfig) -> tuple:
+    """Returns (DDPGState, (actor_tx, critic_tx)). Target nets start as copies."""
+    ka, kc = jax.random.split(key)
+    actor = mlp_init(ka, (cfg.state_dim, *cfg.hidden, cfg.action_dim))
+    critic = mlp_init(kc, (cfg.state_dim + cfg.action_dim, *cfg.hidden, 1))
+    actor_tx = optim.adam(cfg.actor_lr)
+    critic_tx = optim.adam(cfg.critic_lr)
+    state = DDPGState(
+        actor=actor,
+        critic=critic,
+        actor_targ=jax.tree_util.tree_map(jnp.copy, actor),
+        critic_targ=jax.tree_util.tree_map(jnp.copy, critic),
+        actor_opt=actor_tx.init(actor),
+        critic_opt=critic_tx.init(critic),
+        step=jnp.zeros((), jnp.int32),
+    )
+    return state, (actor_tx, critic_tx)
+
+
+def _polyak(target, online, tau: float):
+    return jax.tree_util.tree_map(lambda t, o: (1 - tau) * t + tau * o, target, online)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "actor_tx", "critic_tx"))
+def ddpg_update(
+    state: DDPGState,
+    batch: tuple,  # (s, a, r, s2) each [B, ...] float32
+    cfg: DDPGConfig,
+    actor_tx: optim.GradientTransformation,
+    critic_tx: optim.GradientTransformation,
+) -> tuple:
+    """One critic + one actor gradient step + Polyak. Returns (state, metrics)."""
+    s, a, r, s2 = batch
+
+    # --- critic: Bellman regression against the frozen targets -------------
+    a2 = actor_apply(state.actor_targ, s2)
+    q_targ = r + cfg.gamma * critic_apply(state.critic_targ, s2, a2)
+    q_targ = jax.lax.stop_gradient(q_targ)
+
+    def critic_loss_fn(critic):
+        q = critic_apply(critic, s, a)
+        return jnp.mean(jnp.square(q - q_targ))
+
+    critic_loss, critic_grads = jax.value_and_grad(critic_loss_fn)(state.critic)
+    c_updates, critic_opt = critic_tx.update(critic_grads, state.critic_opt, state.critic)
+    critic = optim.apply_updates(state.critic, c_updates)
+
+    # --- actor: ascend Q_phi(s, mu_theta(s)) with the critic frozen --------
+    def actor_loss_fn(actor):
+        return -jnp.mean(critic_apply(critic, s, actor_apply(actor, s)))
+
+    actor_loss, actor_grads = jax.value_and_grad(actor_loss_fn)(state.actor)
+    a_updates, actor_opt = actor_tx.update(actor_grads, state.actor_opt, state.actor)
+    actor = optim.apply_updates(state.actor, a_updates)
+
+    new_state = DDPGState(
+        actor=actor,
+        critic=critic,
+        actor_targ=_polyak(state.actor_targ, actor, cfg.tau),
+        critic_targ=_polyak(state.critic_targ, critic, cfg.tau),
+        actor_opt=actor_opt,
+        critic_opt=critic_opt,
+        step=state.step + 1,
+    )
+    metrics = {"critic_loss": critic_loss, "actor_loss": actor_loss,
+               "q_mean": jnp.mean(critic_apply(critic, s, a))}
+    return new_state, metrics
+
+
+# ---------------------------------------------------------------------------
+# Exploration noise
+# ---------------------------------------------------------------------------
+
+class OUNoise:
+    """Ornstein-Uhlenbeck process (standard DDPG exploration), with linear
+    sigma decay so late tuning steps fine-tune rather than explore (§III-E:
+    'Magpie ... then uses additional tuning steps for parameter fine-tuning')."""
+
+    def __init__(self, dim: int, sigma: float = 0.40, theta: float = 0.15,
+                 sigma_min: float = 0.05, decay_steps: int = 50, seed: int = 0):
+        self.dim = dim
+        self.sigma0 = sigma
+        self.sigma_min = sigma_min
+        self.theta = theta
+        self.decay_steps = decay_steps
+        self._rng = np.random.default_rng(seed)
+        self._x = np.zeros(dim, np.float32)
+        self._t = 0
+
+    def reset(self) -> None:
+        self._x[...] = 0.0
+
+    def __call__(self) -> np.ndarray:
+        frac = min(1.0, self._t / max(1, self.decay_steps))
+        sigma = self.sigma0 + frac * (self.sigma_min - self.sigma0)
+        self._x += -self.theta * self._x + sigma * self._rng.standard_normal(self.dim)
+        self._t += 1
+        return self._x.astype(np.float32)
+
+    def state_dict(self) -> dict:
+        return {"x": self._x.copy(), "t": self._t,
+                "bitgen": self._rng.bit_generator.state}
+
+    def load_state_dict(self, d: dict) -> None:
+        self._x[...] = d["x"]
+        self._t = int(d["t"])
+        self._rng.bit_generator.state = d["bitgen"]

@@ -1,0 +1,76 @@
+"""FIFO replay buffer (paper §II-D).
+
+Limited size; once full, the oldest transition is evicted (FIFO) so the model
+neither overfits stale history nor forgets recent experience. Stored on host
+(numpy) — tuning trajectories are tiny (30-100 steps) and the agent samples
+minibatches into jax arrays at update time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Transition:
+    state: np.ndarray
+    action: np.ndarray
+    reward: float
+    next_state: np.ndarray
+
+
+class ReplayBuffer:
+    def __init__(self, capacity: int, state_dim: int, action_dim: int):
+        if capacity <= 0:
+            raise ValueError("capacity must be positive")
+        self.capacity = capacity
+        self._s = np.zeros((capacity, state_dim), np.float32)
+        self._a = np.zeros((capacity, action_dim), np.float32)
+        self._r = np.zeros((capacity,), np.float32)
+        self._s2 = np.zeros((capacity, state_dim), np.float32)
+        self._next = 0  # next write slot
+        self._size = 0
+
+    def __len__(self) -> int:
+        return self._size
+
+    def add(self, state, action, reward, next_state) -> None:
+        i = self._next
+        self._s[i] = state
+        self._a[i] = action
+        self._r[i] = reward
+        self._s2[i] = next_state
+        self._next = (i + 1) % self.capacity  # FIFO eviction once full
+        self._size = min(self._size + 1, self.capacity)
+
+    def sample(self, rng: np.random.Generator, batch_size: int):
+        """Uniform sample with replacement (buffer may be smaller than the batch)."""
+        if self._size == 0:
+            raise ValueError("cannot sample from an empty buffer")
+        idx = rng.integers(0, self._size, size=batch_size)
+        return self._s[idx], self._a[idx], self._r[idx], self._s2[idx]
+
+    def as_arrays(self):
+        return (
+            self._s[: self._size].copy(),
+            self._a[: self._size].copy(),
+            self._r[: self._size].copy(),
+            self._s2[: self._size].copy(),
+        )
+
+    def state_dict(self) -> dict:
+        """For checkpoint/resume of a tuning session (paper §III-E: resume tuning)."""
+        return {
+            "s": self._s.copy(), "a": self._a.copy(), "r": self._r.copy(),
+            "s2": self._s2.copy(), "next": self._next, "size": self._size,
+        }
+
+    def load_state_dict(self, d: dict) -> None:
+        self._s[...] = d["s"]
+        self._a[...] = d["a"]
+        self._r[...] = d["r"]
+        self._s2[...] = d["s2"]
+        self._next = int(d["next"])
+        self._size = int(d["size"])

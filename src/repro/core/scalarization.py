@@ -1,0 +1,60 @@
+"""Multi-objective scalarization + reward (paper §II-A, §II-B-5).
+
+State: each metric is min-max normalized to [0,1] with bounds from the metric specs
+(domain knowledge) or inferred from data. Objective: weighted sum of normalized
+performance indicators. Reward: proportional change of the weighted sum:
+
+    r_t = (sum_i w_i s_{t+1}(i) - sum_i w_i s_t(i)) / sum_i w_i s_t(i)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricSpec:
+    """Normalization bounds for one metric (paper Table I rows + objectives)."""
+
+    name: str
+    minimum: float
+    maximum: float
+    scope: str = ""  # e.g. "OSC", "MDS", informational
+    description: str = ""
+
+    def norm(self, value: float) -> float:
+        if self.maximum <= self.minimum:
+            return 0.0
+        return float(np.clip((value - self.minimum) / (self.maximum - self.minimum), 0.0, 1.0))
+
+
+def normalize_state(metrics: Mapping[str, float], specs: Mapping[str, MetricSpec], order: list) -> np.ndarray:
+    """s_t = [norm(P_1), ..., norm(P_k)] in a fixed metric order."""
+    return np.array([specs[name].norm(metrics[name]) for name in order], np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Scalarizer:
+    """Linear scalarization of the optimization objectives.
+
+    ``weights`` maps objective metric name -> w_i. Objectives are a subset of the
+    state metrics (throughput, IOPS, ...).
+    """
+
+    weights: Mapping[str, float]
+    specs: Mapping[str, MetricSpec]
+
+    def objective(self, metrics: Mapping[str, float]) -> float:
+        """G(P) = sum_i w_i * norm(P_i)."""
+        return float(
+            sum(w * self.specs[name].norm(metrics[name]) for name, w in self.weights.items())
+        )
+
+    def reward(self, prev_metrics: Mapping[str, float], new_metrics: Mapping[str, float]) -> float:
+        """Proportional performance change (paper's r_t)."""
+        prev = self.objective(prev_metrics)
+        new = self.objective(new_metrics)
+        return (new - prev) / max(prev, 1e-6)

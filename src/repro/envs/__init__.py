@@ -1,0 +1,12 @@
+from repro.envs.base import TuningEnvironment
+from repro.envs.metrics import MetricsCollector, lustre_metric_specs
+from repro.envs.workloads import WORKLOADS, Workload
+from repro.envs.lustre_sim import LustreSimEnv
+
+__all__ = [
+    "TuningEnvironment", "MetricsCollector", "lustre_metric_specs",
+    "WORKLOADS", "Workload", "LustreSimEnv",
+]
+
+# NB: envs.sharding_env is imported lazily (it pulls in launch/roofline);
+# `from repro.envs.sharding_env import ShardingEnv` where needed.

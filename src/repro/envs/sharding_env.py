@@ -1,0 +1,152 @@
+"""The framework-tuning environment: Magpie's technique applied to *this
+system's own* static parameters (beyond-paper, DESIGN.md §2).
+
+A distributed JAX training job has exactly the paper's problem shape:
+  * static parameters whose change forces an expensive recompile ("restart"):
+    gradient-accumulation microbatches, remat policy, layer-scan unroll;
+  * rich internal metrics that explain performance (the compiled artifact's
+    roofline terms, per-device memory, collective counts) — the analogue of
+    the paper's OSC/MDS metrics;
+  * a scalar objective: steps/second upper bound = 1 / max(roofline terms),
+    with OOM configurations behaving like crashed runs (near-zero reward).
+
+The DDPG agent, replay buffer, scalarization and tuning loop are the SAME
+code as the paper reproduction — only the environment differs. The restart
+cost is the real, measured compile time.
+"""
+
+from __future__ import annotations
+
+import time
+import traceback
+from typing import Optional
+
+import numpy as np
+
+from repro.core.action_mapping import ParamSpace, ParamSpec
+from repro.core.scalarization import MetricSpec
+from repro.envs.base import TuningEnvironment
+
+
+SHARDING_STATE_METRICS = [
+    "compute_s", "memory_s", "collective_s", "mem_gb", "useful_ratio",
+    "compile_s", "coll_count", "fits", "steps_per_s",
+]
+
+
+def sharding_metric_specs():
+    specs = [
+        MetricSpec("compute_s", 0.0, 10.0, "roofline", "compute term"),
+        MetricSpec("memory_s", 0.0, 10.0, "roofline", "HBM term"),
+        MetricSpec("collective_s", 0.0, 10.0, "roofline", "ICI term"),
+        MetricSpec("mem_gb", 0.0, 64.0, "device", "peak HBM estimate"),
+        MetricSpec("useful_ratio", 0.0, 2.0, "roofline",
+                   "model flops / structural flops"),
+        MetricSpec("compile_s", 0.0, 600.0, "host", "restart analogue"),
+        MetricSpec("coll_count", 0.0, 200.0, "hlo", "collective op count"),
+        MetricSpec("fits", 0.0, 1.0, "device", "fits in 16 GB HBM"),
+        MetricSpec("steps_per_s", 0.0, 20.0, "objective",
+                   "1 / max(roofline terms), 0 if OOM"),
+    ]
+    return {s.name: s for s in specs}
+
+
+class ShardingEnv(TuningEnvironment):
+    """Tunes TrainConfig's static parameters for one (arch x shape x mesh)."""
+
+    def __init__(self, arch: str, shape: str = "train_4k", mesh=None,
+                 smoke: bool = False, seed: int = 0,
+                 microbatch_choices=(1, 2, 4, 8, 16, 32),
+                 batch_override: int = 0, seq_override: int = 0):
+        from repro.launch.mesh import make_production_mesh
+        self.arch = arch
+        self.shape = shape
+        self.smoke = smoke
+        # smoke mode reduces the cell shape too (CPU test budget)
+        self.batch_override = batch_override or (8 if smoke else 0)
+        self.seq_override = seq_override or (64 if smoke else 0)
+        self.mesh = mesh if mesh is not None else make_production_mesh()
+        default_mb = (8 if 8 in microbatch_choices
+                      else microbatch_choices[len(microbatch_choices) // 2])
+        self.param_space = ParamSpace(specs=(
+            ParamSpec("microbatches", "choice", values=microbatch_choices,
+                      default=default_mb),
+            ParamSpec("remat", "choice", values=("none", "dots", "full"),
+                      default="full"),
+            ParamSpec("scan_unroll", "choice", values=(1, 2, 4), default=1),
+            ParamSpec("gather_weights_once", "choice", values=(0, 1),
+                      default=0),
+        ))
+        self.metric_specs = sharding_metric_specs()
+        self.state_metrics = list(SHARDING_STATE_METRICS)
+        self._last_compile_s = 0.0
+        self._cache: dict = {}
+        self.evals = 0
+
+    def apply(self, config: dict, eval_run: bool = False) -> dict:
+        del eval_run  # the dry-run is deterministic; no long-run variant
+        key = tuple(sorted(config.items()))
+        if key in self._cache:
+            return dict(self._cache[key])
+        from repro.launch.cells import build_cell
+        from repro.roofline.analysis import (
+            collective_bytes_from_hlo, model_flops, roofline_terms,
+        )
+        from repro.roofline.hw import TPU_V5E
+        from repro.roofline.structural import structural_costs
+        from repro.training.steps import TrainConfig
+        from repro import configs as cfgs
+
+        self.evals += 1
+        tc = TrainConfig(microbatches=int(config["microbatches"]),
+                         remat=str(config["remat"]),
+                         scan_unroll=int(config["scan_unroll"]),
+                         gather_weights_once=bool(
+                             config.get("gather_weights_once", 0)))
+        t0 = time.time()
+        metrics = {name: 0.0 for name in self.state_metrics}
+        try:
+            cell = build_cell(self.arch, self.shape, self.mesh, tc=tc,
+                              smoke=self.smoke,
+                              batch_override=self.batch_override,
+                              seq_override=self.seq_override)
+            B = cell.args[2]["tokens"].shape[0] if cell.kind == "train" else 0
+            if B and B % tc.microbatches != 0:
+                raise ValueError("microbatches must divide global batch")
+            compiled = cell.lower(self.mesh).compile()
+            self._last_compile_s = time.time() - t0
+            chips = int(np.prod(list(self.mesh.shape.values())))
+            sc = structural_costs(cell.fn, *cell.args)
+            coll = collective_bytes_from_hlo(compiled.as_text())
+            terms = roofline_terms(sc["flops"] / chips, sc["bytes"] / chips,
+                                   coll["weighted_bytes"])
+            ma = compiled.memory_analysis()
+            peak = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                    + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+            fits = peak < TPU_V5E.hbm_bytes or self.smoke
+            shape = cfgs.SHAPES[self.shape]
+            cfg = (cfgs.get_smoke_config(self.arch) if self.smoke
+                   else cfgs.get_config(self.arch))
+            mf = model_flops(cfg, shape.kind, shape.batch, shape.seq)
+            metrics.update(
+                compute_s=terms["compute_s"], memory_s=terms["memory_s"],
+                collective_s=terms["collective_s"], mem_gb=peak / 1e9,
+                useful_ratio=mf / chips / max(sc["flops"] / chips, 1e-9),
+                compile_s=self._last_compile_s,
+                coll_count=float(sum(coll["counts"].values())),
+                fits=float(fits),
+                steps_per_s=(1.0 / terms["step_s_lower_bound"] if fits
+                             else 1e-3),
+            )
+        except Exception:  # infeasible config == crashed run
+            self._last_compile_s = time.time() - t0
+            metrics["compile_s"] = self._last_compile_s
+            metrics["steps_per_s"] = 1e-3
+        self._cache[key] = dict(metrics)
+        return metrics
+
+    def restart_cost(self, config: dict, prev_config: dict) -> float:
+        """The measured recompile time IS the static-parameter restart cost."""
+        if config == prev_config:
+            return 0.0
+        return self._last_compile_s

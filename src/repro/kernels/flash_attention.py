@@ -1,0 +1,299 @@
+"""Blocked causal GQA flash attention — Pallas TPU kernel (fwd + bwd).
+
+VMEM tiling: q/k/v blocks (block_q|block_k, head_dim) with fp32 accumulators;
+online-softmax running (m, l) scratch persists across the kv grid dimension
+(TPU grids iterate sequentially, minor-most fastest, so accumulating across
+the last grid dim into revisited output blocks is legal).
+
+Backward is the standard two-kernel flash bwd: dq accumulates over kv blocks;
+dk/dv accumulate over (group-head, q-block) pairs — the GQA group dim is
+pre-folded into the fastest grid dim so each dk/dv output block is visited in
+consecutive grid steps only.
+
+Layouts: q [B, H, S, D]; k/v [B, Kv, S, D]; H = g * Kv.
+Validated against kernels.ref.attention_ref in interpret mode (CPU); the TPU
+path is selected by kernels.ops when jax.default_backend() == 'tpu'.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BLOCK = 128
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, acc_ref, *,
+                scale, block_q, block_k, causal):
+    i, j = pl.program_id(2), pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        if causal:
+            qpos = i * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(kpos <= qpos, s, -jnp.inf)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.where(jnp.isfinite(m_new)[:, None],
+                      jnp.exp(s - safe_m[:, None]), 0.0)
+        alpha = jnp.where(jnp.isfinite(m_prev),
+                          jnp.exp(m_prev - safe_m), 0.0)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p, v_ref[0, 0].astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:  # statically skip blocks strictly above the diagonal
+        pl.when(j * block_k <= i * block_q + block_q - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(j == nk - 1)
+    def _fin():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0] = jnp.where(jnp.isfinite(m_ref[...]),
+                                  m_ref[...] + jnp.log(l), 0.0)
+
+
+def _flash_fwd(q, k, v, *, causal, block_q, block_k, interpret):
+    B, H, S, D = q.shape
+    Kv, Sk = k.shape[1], k.shape[2]
+    g = H // Kv
+    scale = 1.0 / math.sqrt(D)
+    nq, nk = S // block_q, Sk // block_k
+    grid = (B, H, nq, nk)
+    out, lse = pl.pallas_call(
+        functools.partial(_fwd_kernel, scale=scale, block_q=block_q,
+                          block_k=block_k, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j: (b, h // g, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, i, j: (b, h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+            jax.ShapeDtypeStruct((B, H, S), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out, lse
+
+
+# ---------------------------------------------------------------------------
+# Backward
+# ---------------------------------------------------------------------------
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               acc_ref, *, scale, block_q, block_k, causal):
+    i, j = pl.program_id(2), pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale
+        k = k_ref[0, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        if causal:
+            qpos = i * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(kpos <= qpos, s, -jnp.inf)
+        p = jnp.exp(s - lse_ref[0, 0][:, None])            # (bq, bk)
+        dp = jnp.dot(do_ref[0, 0].astype(jnp.float32),
+                     v_ref[0, 0].astype(jnp.float32).T,
+                     preferred_element_type=jnp.float32)
+        ds = p * (dp - delta_ref[0, 0][:, None])
+        acc_ref[...] += jnp.dot(ds, k, preferred_element_type=jnp.float32)
+
+    if causal:
+        pl.when(j * block_k <= i * block_q + block_q - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(j == nk - 1)
+    def _fin():
+        dq_ref[0, 0] = (acc_ref[...] * scale).astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, do_ref, lse_ref, delta_ref, k_ref, v_ref,
+                dk_ref, dv_ref, dk_acc, dv_acc, *,
+                scale, block_q, block_k, causal, nq):
+    j, t = pl.program_id(2), pl.program_id(3)  # kv block, (g, qblock) folded
+    nt = pl.num_programs(3)
+    i = t % nq                                             # q block index
+
+    @pl.when(t == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    def _compute():
+        q = q_ref[0, 0, 0].astype(jnp.float32) * scale      # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        if causal:
+            qpos = i * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(kpos <= qpos, s, -jnp.inf)
+        p = jnp.exp(s - lse_ref[0, 0, 0][:, None])
+        do = do_ref[0, 0, 0].astype(jnp.float32)
+        dv_acc[...] += jnp.dot(p.T, do, preferred_element_type=jnp.float32)
+        dp = jnp.dot(do, v_ref[0, 0].astype(jnp.float32).T,
+                     preferred_element_type=jnp.float32)
+        ds = p * (dp - delta_ref[0, 0, 0][:, None])
+        dk_acc[...] += jnp.dot(ds.T, q / scale,
+                               preferred_element_type=jnp.float32) * scale
+
+    if causal:
+        pl.when(j * block_k <= i * block_q + block_q - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(t == nt - 1)
+    def _fin():
+        dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def _flash_bwd(res, dout, *, causal, block_q, block_k, interpret):
+    q, k, v, out, lse = res
+    B, H, S, D = q.shape
+    Kv, Sk = k.shape[1], k.shape[2]
+    g = H // Kv
+    scale = 1.0 / math.sqrt(D)
+    nq, nk = S // block_q, Sk // block_k
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1)                               # [B, H, S]
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, scale=scale, block_q=block_q,
+                          block_k=block_k, causal=causal),
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, i, j: (b, h, i)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, i, j: (b, h, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, dout, lse, delta)
+
+    # group-major views so (g, q-block) folds into ONE fastest grid dim
+    qg = q.reshape(B, Kv, g, S, D)
+    dog = dout.reshape(B, Kv, g, S, D)
+    lseg = lse.reshape(B, Kv, g, S)
+    deltag = delta.reshape(B, Kv, g, S)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, scale=scale, block_q=block_q,
+                          block_k=block_k, causal=causal, nq=nq),
+        grid=(B, Kv, nk, g * nq),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, block_q, D),
+                         lambda b, kv, j, t: (b, kv, t // nq, t % nq, 0)),
+            pl.BlockSpec((1, 1, 1, block_q, D),
+                         lambda b, kv, j, t: (b, kv, t // nq, t % nq, 0)),
+            pl.BlockSpec((1, 1, 1, block_q),
+                         lambda b, kv, j, t: (b, kv, t // nq, t % nq)),
+            pl.BlockSpec((1, 1, 1, block_q),
+                         lambda b, kv, j, t: (b, kv, t // nq, t % nq)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, kv, j, t: (b, kv, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, kv, j, t: (b, kv, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_k, D), lambda b, kv, j, t: (b, kv, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, kv, j, t: (b, kv, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(k.shape, k.dtype),
+            jax.ShapeDtypeStruct(v.shape, v.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_k, D), jnp.float32),
+            pltpu.VMEM((block_k, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, dog, lseg, deltag, k, v)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# Public entry (custom VJP)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal: bool = True,
+                    block_q: int = DEFAULT_BLOCK, block_k: int = DEFAULT_BLOCK,
+                    interpret: bool = False):
+    """q [B,H,S,D]; k/v [B,Kv,S,D] -> [B,H,S,D]. S divisible by blocks."""
+    out, _ = _flash_fwd(q, k, v, causal=causal, block_q=block_q,
+                        block_k=block_k, interpret=interpret)
+    return out
+
+
+def _vjp_fwd(q, k, v, causal, block_q, block_k, interpret):
+    out, lse = _flash_fwd(q, k, v, causal=causal, block_q=block_q,
+                          block_k=block_k, interpret=interpret)
+    return out, (q, k, v, out, lse)
+
+
+def _vjp_bwd(causal, block_q, block_k, interpret, res, dout):
+    return _flash_bwd(res, dout, causal=causal, block_q=block_q,
+                      block_k=block_k, interpret=interpret)
+
+
+flash_attention.defvjp(_vjp_fwd, _vjp_bwd)

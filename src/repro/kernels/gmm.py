@@ -1,0 +1,59 @@
+"""Grouped (per-expert) matmul — Pallas TPU kernel for the MoE hot spot.
+
+out[e] = x[e] @ w[e] for e in experts, blocked (bc x bf x bd) with a fp32
+VMEM accumulator across the contraction grid dim (sequential minor dim).
+Block shapes default to MXU-aligned 128s; callers pad C/D/F to multiples.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref):
+    kd = pl.program_id(3)
+    nd = pl.num_programs(3)
+
+    @pl.when(kd == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[0].astype(jnp.float32),
+                            w_ref[0].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(kd == nd - 1)
+    def _fin():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def gmm(x, w, *, block_c: int = 128, block_f: int = 128, block_d: int = 512,
+        interpret: bool = False):
+    """x [E, C, D] @ w [E, D, F] -> [E, C, F]."""
+    E, C, D = x.shape
+    F = w.shape[-1]
+    block_c = min(block_c, C)
+    block_f = min(block_f, F)
+    block_d = min(block_d, D)
+    assert C % block_c == 0 and F % block_f == 0 and D % block_d == 0
+    grid = (E, C // block_c, F // block_f, D // block_d)
+    return pl.pallas_call(
+        _gmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_c, block_d),
+                         lambda e, i, j, kd: (e, i, kd)),
+            pl.BlockSpec((1, block_d, block_f),
+                         lambda e, i, j, kd: (e, kd, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_f),
+                               lambda e, i, j, kd: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

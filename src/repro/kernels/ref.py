@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel. Simple, obviously-correct,
+O(S^2)/sequential implementations used by the allclose test sweeps.
+
+These deliberately avoid the chunked/blocked tricks of the fast paths: the
+flash oracle materializes scores; the SSM/WKV oracles scan one timestep at a
+time.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q [B,Sq,H,D]; k/v [B,Sk,Kv,D] (GQA). fp32 softmax."""
+    B, Sq, H, D = q.shape
+    Sk, Kv = k.shape[1], k.shape[2]
+    g = H // Kv
+    qg = q.reshape(B, Sq, Kv, g, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    s = s / math.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        s = jnp.where(mask, s, jnp.finfo(jnp.float32).min)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+    return o.reshape(B, Sq, H, D)
+
+
+def ssd_ref(x, dt, A, Bm, Cm, init_state=None):
+    """Sequential Mamba2/SSD recurrence (the definition).
+
+    x [b,s,h,p]; dt [b,s,h] (post-softplus); A [h] (negative);
+    Bm/Cm [b,s,n]. Returns (y [b,s,h,p], final_state [b,h,n,p]).
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    S0 = (jnp.zeros((b, h, n, p), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(S, inp):
+        xt, dtt, Bt, Ct = inp          # [b,h,p],[b,h],[b,n],[b,n]
+        dA = jnp.exp(dtt * A)          # [b,h]
+        upd = jnp.einsum("bn,bh,bhp->bhnp", Bt, dtt, xt.astype(jnp.float32))
+        S = S * dA[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", Ct, S)
+        return S, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    S_fin, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), S_fin.astype(x.dtype)
+
+
+def wkv6_ref(r, k, v, logw, u, init_state=None):
+    """Sequential RWKV6 recurrence (the definition).
+
+    r/k/v [B,S,H,c]; logw [B,S,H,c] (<=0); u [H,c].
+    y_t = r_t . (S_t + diag(u) k_t v_t^T);  S_{t+1} = diag(w_t) S_t + k_t v_t^T
+    Returns (y [B,S,H,c], final_state [B,H,c,c]).
+    """
+    B, S, H, c = r.shape
+    S0 = (jnp.zeros((B, H, c, c), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(St, inp):
+        rt, kt, vt, lwt = (t.astype(jnp.float32) for t in inp)  # [B,H,c]
+        kv = jnp.einsum("bhc,bhd->bhcd", kt, vt)
+        y = jnp.einsum("bhc,bhcd->bhd", rt,
+                       St + u.astype(jnp.float32)[None, :, :, None] * kv)
+        S_new = jnp.exp(lwt)[..., None] * St + kv
+        return S_new, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, logw))
+    S_fin, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), S_fin.astype(r.dtype)
+
+
+def grouped_swiglu_ref(x, w_gate, w_up, w_down):
+    """x [E,C,D]; w_* [E,D,F]/[E,F,D] -> [E,C,D]."""
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, w_gate))
+    upj = jnp.einsum("ecd,edf->ecf", x, w_up)
+    return jnp.einsum("ecf,efd->ecd", g * upj, w_down)

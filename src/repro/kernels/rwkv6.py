@@ -1,0 +1,95 @@
+"""Chunked RWKV6 WKV recurrence — Pallas TPU kernel.
+
+Same chunking strategy as the SSD kernel (sequential chunk grid dim, fp32
+state scratch [c, c] persisting across chunks), but the decay is per-channel
+and data-dependent, so the intra-chunk decay tensor is [Q, Q, c] (built from
+log-space cumsums; every exponent <= 0 — no overflow) and the score reduction
+is an einsum over the channel dim.
+
+Layouts: r/k/v/logw [BH, S, c]; u [BH, c]. Outputs: y [BH, S, c],
+final state [BH, c, c] (state[c_key, c_value]).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, s_out_ref,
+                state_ref, *, chunk):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0].astype(jnp.float32)                       # (Q, c)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lw = lw_ref[0].astype(jnp.float32)                     # (Q, c) <= 0
+    u = u_ref[0].astype(jnp.float32)                       # (c,)
+
+    cum = jnp.cumsum(lw, axis=0)                           # inclusive (Q, c)
+    cum_prev = cum - lw                                    # exclusive
+
+    # intra-chunk strict-lower decays: exp(cum_prev[t] - cum[s]), s < t
+    dec = jnp.exp(jnp.minimum(cum_prev[:, None, :] - cum[None, :, :], 0.0))
+    strict = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    dec = jnp.where(strict[:, :, None], dec, 0.0)          # (Q, Q, c)
+    scores = jnp.einsum("tc,tsc,sc->ts", r, dec, k)        # (Q, Q)
+    y = jnp.dot(scores, v, preferred_element_type=jnp.float32)
+    diag = jnp.sum(r * u[None, :] * k, axis=-1)            # (Q,)
+    y = y + diag[:, None] * v
+
+    # inter-chunk: y += (r * exp(cum_prev)) @ S_prev
+    S_prev = state_ref[...]                                # (c, c)
+    y = y + jnp.dot(r * jnp.exp(cum_prev), S_prev,
+                    preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state: S = diag(exp(cum_tot)) S_prev + sum_s exp(cum_tot - cum[s]) k_s v_s^T
+    cum_tot = cum[chunk - 1]                               # (c,)
+    kd = k * jnp.exp(cum_tot[None, :] - cum)               # (Q, c)
+    S_new = jnp.exp(cum_tot)[:, None] * S_prev + jnp.dot(
+        kd.T, v, preferred_element_type=jnp.float32)
+    state_ref[...] = S_new
+
+    @pl.when(ci == nc - 1)
+    def _fin():
+        s_out_ref[0] = S_new.astype(s_out_ref.dtype)
+
+
+def wkv6_scan(r, k, v, logw, u, *, chunk: int = 64, interpret: bool = False):
+    """r/k/v/logw [BH, S, c]; u [BH, c]. Returns (y, state [BH, c, c])."""
+    BH, S, c = r.shape
+    assert S % chunk == 0
+    nc = S // chunk
+    y, state = pl.pallas_call(
+        functools.partial(_wkv_kernel, chunk=chunk),
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, c), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, c), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, c), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, c), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, c), lambda bh, ci: (bh, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, c), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, c, c), lambda bh, ci: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, c), r.dtype),
+            jax.ShapeDtypeStruct((BH, c, c), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((c, c), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u)
+    return y, state

@@ -1,0 +1,3 @@
+# Launch layer: production mesh, multi-pod dry-run, train/serve drivers,
+# elastic re-mesh. dryrun.py must be executed as a module entry point
+# (python -m repro.launch.dryrun) — it force-sets 512 host devices FIRST.

@@ -1,0 +1,242 @@
+"""Cell builders shared by the dry-run, the roofline pass and the Magpie
+sharding environment: given (arch x shape x mesh [+ static train params]),
+produce the jitted step with in/out shardings and abstract inputs, ready to
+.lower().compile().
+
+No jax device state is touched at import time (dryrun.py sets the 512-device
+XLA flag before importing this module).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import jax.tree_util as jtu
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs, optim
+from repro.models import abstract_cache, abstract_params, model_defs
+from repro.models.base import ArchConfig, ParamDef
+from repro.models.transformer import cache_spec
+from repro.sharding.activation import activation_sharding
+from repro.sharding.rules import (
+    SERVE_RULES, TRAIN_RULES, ShardingRules, batch_pspec, defs_to_pspecs,
+    spec_for,
+)
+from repro.training.steps import (
+    TrainConfig, make_decode_step, make_prefill_step, make_train_step,
+)
+
+#: per-arch gradient-accumulation defaults for train_4k (keeps activations
+#: inside 16 GB at local_batch = 256/16; hillclimbed values live in
+#: EXPERIMENTS.md §Perf)
+TRAIN_MICROBATCHES = {
+    "qwen2-vl-72b": 16,
+    "arctic-480b": 16,
+    "zamba2-7b": 8,
+    "whisper-large-v3": 4,
+    "deepseek-moe-16b": 8,
+    "minicpm3-4b": 8,
+    "phi4-mini-3.8b": 8,
+    "yi-9b": 8,
+    "codeqwen1.5-7b": 8,
+    "rwkv6-3b": 8,
+}
+
+
+#: hillclimbed static-parameter settings (EXPERIMENTS.md §Perf); cells not
+#: listed use TrainConfig(microbatches=TRAIN_MICROBATCHES[arch], remat=full)
+TRAIN_OVERRIDES = {
+    "deepseek-moe-16b": TrainConfig(microbatches=16, remat="full"),
+    "yi-9b": TrainConfig(microbatches=16, remat="dots",
+                         gather_weights_once=True),
+    "whisper-large-v3": TrainConfig(microbatches=8, remat="full"),
+    "zamba2-7b": TrainConfig(microbatches=16, remat="full"),
+    # NB: minicpm3 at mb=16 leaves per-microbatch batch 16 < 32 (pod x data)
+    # on the multi-pod mesh — not batch-shardable; stays at mb=8.
+}
+
+
+def make_optimizer(cfg: ArchConfig) -> optim.GradientTransformation:
+    """AdamW for <=72B-class; Adafactor for the 480B-class MoE (DESIGN §6)."""
+    if cfg.name.startswith("arctic"):
+        return optim.adafactor(1e-4)
+    return optim.adamw(3e-4, weight_decay=0.1)
+
+
+def _shard(mesh: Mesh, spec_tree):
+    return jtu.tree_map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_pspecs(abstract_opt, defs, pspecs, rules: ShardingRules,
+                     mesh: Mesh):
+    """Shardings for optimizer state by shape correlation with params:
+    exact-shape match inherits the param spec; Adafactor's factored slots
+    (shape[:-1] / shape[:-2]+[last]) inherit the reduced spec; anything else
+    (counters) replicates."""
+    shape_to_spec: dict = {}
+    for d, s in zip(
+            jtu.tree_leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef)),
+            jtu.tree_leaves(pspecs, is_leaf=lambda x: isinstance(x, P))):
+        shape_to_spec.setdefault(tuple(d.shape), s)
+        if len(d.shape) >= 2:
+            shape_to_spec.setdefault(tuple(d.shape[:-1]), P(*s[:len(d.shape) - 1]))
+            shape_to_spec.setdefault(
+                tuple(d.shape[:-2]) + (d.shape[-1],),
+                P(*(list(s[:len(d.shape) - 2]) + [s[len(d.shape) - 1]])))
+
+    def spec(leaf):
+        return shape_to_spec.get(tuple(leaf.shape), P())
+
+    return jtu.tree_map(spec, abstract_opt)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    cfg: ArchConfig
+    fn: object                 # the step callable
+    args: tuple                # abstract args
+    in_shardings: tuple
+    out_shardings: object
+    donate_argnums: tuple
+    kind: str
+    act_batch: int = 0         # per-step activation batch (post-microbatch)
+    rules: ShardingRules = TRAIN_RULES
+
+    def jit(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate_argnums)
+
+    def lower(self, mesh: Mesh):
+        with mesh, activation_sharding(mesh, self.act_batch, self.rules):
+            return self.jit().lower(*self.args)
+
+
+def logits_pspec(cfg: ArchConfig, mesh: Mesh, batch: int,
+                 rules: ShardingRules) -> P:
+    b = batch_pspec(mesh, batch, extra_dims=0, rules=rules)
+    v = spec_for((1, 1, cfg.vocab_size), ("batch", "seq", "vocab"), rules,
+                 mesh)
+    return P(b[0], None, v[2])
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
+               tc: Optional[TrainConfig] = None, smoke: bool = False,
+               batch_override: int = 0, seq_override: int = 0) -> Cell:
+    cfg = (configs.get_smoke_config(arch) if smoke
+           else configs.get_config(arch))
+    shape = configs.SHAPES[shape_name]
+    B = batch_override or shape.batch
+    S = seq_override or shape.seq
+    defs = model_defs(cfg)
+    aparams = abstract_params(defs)
+
+    if shape.kind == "train":
+        rules = TRAIN_RULES
+        pspecs = defs_to_pspecs(defs, rules, mesh)
+        tx = make_optimizer(cfg)
+        if tc is None:
+            tc = TRAIN_OVERRIDES.get(arch) or TrainConfig(
+                microbatches=TRAIN_MICROBATCHES.get(arch, 8),
+                remat="full", attn_impl="auto")
+        aopt = jax.eval_shape(tx.init, aparams)
+        opt_specs = opt_state_pspecs(aopt, defs, pspecs, rules, mesh)
+        bspec = batch_pspec(mesh, B, extra_dims=1, rules=rules)
+        batch_specs = {"tokens": bspec, "labels": bspec}
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if cfg.mrope_sections:
+            batch["positions"] = jax.ShapeDtypeStruct((B, 3, S), jnp.int32)
+            batch_specs["positions"] = batch_pspec(mesh, B, extra_dims=2,
+                                                   rules=rules)
+        if cfg.family == "vlm":
+            batch["input_embeds"] = jax.ShapeDtypeStruct(
+                (B, S, cfg.d_model), cfg.compute_dtype)
+            batch_specs["input_embeds"] = batch_pspec(mesh, B, extra_dims=2,
+                                                      rules=rules)
+        if cfg.is_encdec:
+            batch["input_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), cfg.compute_dtype)
+            batch_specs["input_embeds"] = batch_pspec(mesh, B, extra_dims=2,
+                                                      rules=rules)
+        fn = make_train_step(cfg, tx, tc)
+        if tc.gather_weights_once and tc.microbatches > 1:
+            # Hypothesis->change (EXPERIMENTS §Perf): FSDP re-gathers every
+            # parameter once per microbatch; constraining params to their
+            # non-FSDP (TP-only) sharding once at step entry makes GSPMD
+            # all-gather once per STEP, and the constraint's transpose
+            # reduce-scatters the grads back — classic "FSDP prefetch once"
+            # at the cost of one gathered copy of the weights in HBM.
+            nofsdp = ShardingRules(rules={**dict(rules.rules), "embed": (),
+                                          "experts": ()})
+            gathered = _shard(mesh, defs_to_pspecs(defs, nofsdp, mesh))
+            inner = fn
+
+            def fn(params, opt_state, batch, _inner=inner,
+                   _spec=gathered):
+                params = jax.lax.with_sharding_constraint(params, _spec)
+                return _inner(params, opt_state, batch)
+        return Cell(
+            arch=arch, shape=shape_name, cfg=cfg, fn=fn,
+            args=(aparams, aopt, batch),
+            in_shardings=(_shard(mesh, pspecs), _shard(mesh, opt_specs),
+                          _shard(mesh, batch_specs)),
+            out_shardings=(_shard(mesh, pspecs), _shard(mesh, opt_specs),
+                           None),
+            donate_argnums=(0, 1), kind="train",
+            act_batch=B // max(1, tc.microbatches), rules=rules,
+        )
+
+    rules = SERVE_RULES
+    pspecs = defs_to_pspecs(defs, rules, mesh)
+    cspec_defs = cache_spec(cfg, B, S)
+    cache_specs = defs_to_pspecs(cspec_defs, rules, mesh)
+
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg, B, S, attn_impl="auto")
+        args = [aparams, jax.ShapeDtypeStruct((B, S), jnp.int32)]
+        in_sh = [_shard(mesh, pspecs),
+                 NamedSharding(mesh, batch_pspec(mesh, B, 1, rules))]
+        kw_positions = None
+        if cfg.mrope_sections:
+            args.append(jax.ShapeDtypeStruct((B, 3, S), jnp.int32))
+            in_sh.append(NamedSharding(mesh, batch_pspec(mesh, B, 2, rules)))
+        else:
+            args.append(None)
+            in_sh.append(None)
+        if cfg.is_encdec:
+            args.append(jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model),
+                                             cfg.compute_dtype))
+            in_sh.append(NamedSharding(mesh, batch_pspec(mesh, B, 2, rules)))
+        else:
+            args.append(None)
+            in_sh.append(None)
+        out_sh = (NamedSharding(mesh, logits_pspec(cfg, mesh, B, rules)),
+                  _shard(mesh, cache_specs))
+        return Cell(arch=arch, shape=shape_name, cfg=cfg, fn=fn,
+                    args=tuple(args), in_shardings=tuple(in_sh),
+                    out_shardings=out_sh, donate_argnums=(), kind="prefill",
+                    act_batch=B, rules=rules)
+
+    # decode
+    fn = make_decode_step(cfg)
+    acache = abstract_cache(cfg, B, S)
+    args = (aparams, jax.ShapeDtypeStruct((B, 1), jnp.int32), acache,
+            jax.ShapeDtypeStruct((), jnp.int32))
+    in_sh = (_shard(mesh, pspecs),
+             NamedSharding(mesh, batch_pspec(mesh, B, 1, rules)),
+             _shard(mesh, cache_specs),
+             NamedSharding(mesh, P()))
+    out_sh = (NamedSharding(mesh, logits_pspec(cfg, mesh, B, rules)),
+              _shard(mesh, cache_specs))
+    return Cell(arch=arch, shape=shape_name, cfg=cfg, fn=fn, args=args,
+                in_shardings=in_sh, out_shardings=out_sh,
+                donate_argnums=(2,), kind="decode",
+                act_batch=B, rules=rules)

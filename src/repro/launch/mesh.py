@@ -1,0 +1,40 @@
+"""Production meshes.
+
+Pure functions (no module-level jax device access — importing this module
+never initializes the backend, so tests keep their 1-CPU view).
+
+Production topology (TPU v5e): one pod = 256 chips as a (16, 16) mesh with
+axes ("data", "model"); multi-pod = 2 pods = 512 chips as (2, 16, 16) with
+axes ("pod", "data", "model"). The "pod" axis extends data parallelism by
+default (per-step gradient all-reduce crosses the inter-pod links once);
+launch/train.py can alternatively map pipeline stages onto it.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices but only {len(devices)} are "
+            f"visible — run under XLA_FLAGS=--xla_force_host_platform_device_"
+            f"count={need} (launch/dryrun.py does this automatically)")
+    return jax.make_mesh(shape, axes, devices=np.asarray(devices[:need]))
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CPU multi-device tests (subprocesses set device count)."""
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(f"need {need} devices, have {len(devices)}")
+    return jax.make_mesh(shape, axes, devices=np.asarray(devices[:need]))

@@ -1,0 +1,71 @@
+"""Serving driver: batched prefill + decode with continuous token emission.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --smoke \\
+        --batch 4 --prompt-len 32 --gen 16
+
+Demonstrates the full serving path of the framework on any architecture:
+prompt batch -> prefill (cache fill) -> decode loop (one token/step, greedy).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import init_params, make_cache, model_defs
+from repro.training.steps import make_decode_step, make_prefill_step
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="rwkv6-3b")
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=32)
+    p.add_argument("--gen", type=int, default=16)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args()
+
+    cfg = (configs.get_smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(model_defs(cfg), key)
+    B, S = args.batch, args.prompt_len
+    max_seq = S + args.gen
+
+    prompts = jax.random.randint(key, (B, S), 1, cfg.vocab_size)
+    enc = None
+    if cfg.is_encdec:
+        enc = jax.random.normal(key, (B, cfg.encoder_seq, cfg.d_model))
+
+    prefill_fn = jax.jit(make_prefill_step(cfg, B, max_seq))
+    decode_fn = jax.jit(make_decode_step(cfg), donate_argnums=(2,))
+
+    t0 = time.perf_counter()
+    logits, cache = prefill_fn(params, prompts, None, enc)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    out_tokens = [tok]
+    t_prefill = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for i in range(args.gen - 1):
+        logits, cache = decode_fn(params, tok, cache,
+                                  jnp.asarray(S + i, jnp.int32))
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+
+    gen = jnp.concatenate(out_tokens, axis=1)
+    print(f"arch={cfg.name} batch={B} prompt={S} generated={gen.shape[1]}")
+    print(f"prefill: {t_prefill*1e3:.1f} ms; decode: "
+          f"{t_decode/max(1, args.gen-1)*1e3:.2f} ms/token")
+    print("first sequence:", gen[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-9b --smoke \\
+        --steps 50 --checkpoint-dir /tmp/ckpt
+
+On this CPU container use --smoke (reduced config, 1 device). On a real
+cluster the same driver runs the full config on the production mesh: every
+piece (sharded params, microbatched remat'd train_step, checkpoint/resume,
+preemption, watchdog) is identical — only the mesh and config size change.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs, optim
+from repro.data import TokenPipeline
+from repro.launch.mesh import make_production_mesh
+from repro.models import init_params, model_defs
+from repro.sharding.activation import activation_sharding
+from repro.sharding.rules import TRAIN_RULES, defs_to_shardings
+from repro.training import TrainConfig, Trainer, TrainerConfig, make_train_step
+from repro.launch.cells import make_optimizer
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="yi-9b")
+    p.add_argument("--smoke", action="store_true",
+                   help="reduced config on local devices")
+    p.add_argument("--steps", type=int, default=100)
+    p.add_argument("--global-batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--microbatches", type=int, default=1)
+    p.add_argument("--remat", default="none")
+    p.add_argument("--checkpoint-dir", default="")
+    p.add_argument("--checkpoint-every", type=int, default=50)
+    p.add_argument("--resume", action="store_true")
+    p.add_argument("--lr", type=float, default=3e-4)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--compress-grads", type=float, default=0.0,
+                   help="top-k gradient compression fraction (0 = off)")
+    args = p.parse_args()
+
+    cfg = (configs.get_smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    defs = model_defs(cfg)
+    params = init_params(defs, jax.random.PRNGKey(args.seed))
+
+    tx = make_optimizer(cfg)
+    if args.compress_grads:
+        from repro.training.compression import topk_error_feedback
+        tx = optim.chain(topk_error_feedback(args.compress_grads), tx)
+    opt_state = tx.init(params)
+
+    tc = TrainConfig(microbatches=args.microbatches, remat=args.remat)
+    step_fn = make_train_step(cfg, tx, tc)
+
+    n_dev = len(jax.devices())
+    if n_dev > 1:
+        mesh = make_production_mesh() if n_dev >= 256 else None
+        if mesh is None:
+            from repro.launch.mesh import make_test_mesh
+            mesh = make_test_mesh((n_dev // 2, 2))
+        shardings = defs_to_shardings(defs, TRAIN_RULES, mesh)
+        params = jax.device_put(params, shardings)
+        step_fn_jit = jax.jit(step_fn, donate_argnums=(0, 1))
+
+        def step(params, opt_state, batch):
+            with mesh, activation_sharding(
+                    mesh, args.global_batch // max(1, args.microbatches),
+                    TRAIN_RULES):
+                return step_fn_jit(params, opt_state, batch)
+    else:
+        step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    pipeline = TokenPipeline(vocab_size=cfg.vocab_size,
+                             global_batch=args.global_batch,
+                             seq_len=args.seq, seed=args.seed)
+
+    def to_batch(b):
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    trainer = Trainer(step, pipeline, params, opt_state,
+                      TrainerConfig(total_steps=args.steps,
+                                    checkpoint_every=args.checkpoint_every,
+                                    checkpoint_dir=args.checkpoint_dir),
+                      to_batch=to_batch)
+    if args.resume and trainer.try_resume():
+        print(f"resumed from step {trainer.step}")
+    out = trainer.run()
+    losses = [m["loss"] for m in out["metrics"]]
+    print(f"done: {out['step']} steps; loss {losses[0]:.4f} -> "
+          f"{losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+from repro.models.base import (
+    ArchConfig, MLAConfig, MoEConfig, ParamDef, SSMConfig,
+    abstract_params, init_params, param_bytes, param_count,
+)
+from repro.models.transformer import (
+    abstract_cache, decode_step, forward, make_cache, model_defs, prefill,
+)
+
+__all__ = [
+    "ArchConfig", "MLAConfig", "MoEConfig", "ParamDef", "SSMConfig",
+    "abstract_params", "init_params", "param_bytes", "param_count",
+    "abstract_cache", "decode_step", "forward", "make_cache", "model_defs",
+    "prefill",
+]

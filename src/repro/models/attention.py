@@ -1,0 +1,422 @@
+"""Attention substrate: RoPE / M-RoPE, GQA, MLA (+ absorbed decode), and a
+block-streaming causal attention used as the memory-safe XLA path for long
+sequences (the Pallas flash kernel is the TPU fast path; see kernels/ops.py).
+
+Tensor conventions: activations [B, S, D_model]; per-head [B, S, H, Dh];
+caches [B, S_max, Kv, Dh] (or latent [B, S_max, R] for MLA).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.base import ArchConfig, ParamDef
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float,
+                mrope_sections: tuple = ()) -> jnp.ndarray:
+    """Rotation angles [B, S, half].
+
+    ``positions``: [B, S] int32 — or [B, 3, S] for M-RoPE (t/h/w rows), in
+    which case ``mrope_sections`` (summing to half) assigns each frequency
+    band to one of the three position rows (Qwen2-VL §2.1).
+    """
+    half = head_dim // 2
+    inv = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)  # [half]
+    if mrope_sections:
+        if sum(mrope_sections) != half:
+            raise ValueError(f"mrope sections {mrope_sections} != half {half}")
+        sec_of_freq = np.repeat(np.arange(len(mrope_sections)),
+                                mrope_sections)  # [half] -> 0/1/2
+        pos = positions.astype(jnp.float32)  # [B, 3, S]
+        pos_per_freq = pos[:, sec_of_freq, :]             # [B, half, S]
+        return jnp.einsum("bfs,f->bsf", pos_per_freq, inv)
+    pos = positions.astype(jnp.float32)                   # [B, S]
+    return pos[..., None] * inv                           # [B, S, half]
+
+
+def apply_rope(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """Rotate-half RoPE. x: [B, S, H, D]; angles: [B, S, D//2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Scaled dot-product attention cores
+# ---------------------------------------------------------------------------
+
+def _expand_kv(q, k, v):
+    """Broadcast GQA k/v up to the full head count.
+
+    Deliberate for the train/prefill paths: the *head* dim (divisible by the
+    model mesh axis) then shards cleanly, whereas kv_heads (4-8) < 16 cannot —
+    without this GSPMD must keep [B,Kv,G,Sq,Sk] scores replicated across the
+    model axis. The expanded k/v are small next to the scores, and the decode
+    path keeps the compact Kv cache layout (seq-sharded instead)."""
+    H, Kv = q.shape[2], k.shape[2]
+    if H == Kv:
+        return k, v
+    g = H // Kv
+    k = jnp.repeat(k, g, axis=2)
+    v = jnp.repeat(v, g, axis=2)
+    return k, v
+
+
+def sdpa_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+             causal: bool, q_offset: int | jnp.ndarray = 0,
+             kv_len: Optional[jnp.ndarray] = None,
+             scale: Optional[float] = None) -> jnp.ndarray:
+    """Reference attention (materializes scores). GQA k/v are head-expanded.
+
+    ``q_offset``: absolute position of q[0] (prefill continuation / decode).
+    ``kv_len``: valid prefix length of k/v (padded caches); None = full.
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    k, v = _expand_kv(q, k, v)
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q * scale, k).astype(jnp.float32)
+    kv_pos = jnp.arange(Sk)
+    neg = jnp.finfo(jnp.float32).min
+    if causal:
+        q_pos = jnp.arange(Sq) + q_offset
+        scores = jnp.where(kv_pos[None, :] <= q_pos[:, None], scores, neg)
+    if kv_len is not None:
+        scores = jnp.where(kv_pos < kv_len, scores, neg)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, v)
+    return out
+
+
+def _causal_block_pairs(n_q: int, n_k: int) -> tuple:
+    """Static (i, j) block-pair lists covering j<=i (plus the diagonal when
+    n_q == n_k); used to skip fully-masked blocks — exact causal FLOPs."""
+    pairs = [(i, j) for i in range(n_q) for j in range(n_k) if j <= i]
+    idx = np.array(pairs, np.int32)
+    return idx[:, 0], idx[:, 1]
+
+
+def sdpa_chunked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                 causal: bool, q_offset: int = 0,
+                 kv_len: Optional[jnp.ndarray] = None,
+                 block_q: int = 1024, block_k: int = 1024,
+                 scale: Optional[float] = None) -> jnp.ndarray:
+    """Flash-style streaming attention in pure JAX (online softmax over block
+    pairs). Peak memory O(Bq*Bk) per step instead of O(Sq*Sk); causal block
+    pairs below the diagonal are statically skipped (no masked-out FLOPs).
+
+    Requires Sq % block_q == 0 and Sk % block_k == 0 (callers pad). For the
+    causal case this assumes q and k cover the same token range (training /
+    full prefill), i.e. q_offset aligns block-diagonals: q block i may attend
+    k blocks j with j*block_k <= (i+1)*block_q - 1.
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    k, v = _expand_kv(q, k, v)
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    n_q, n_k = Sq // block_q, Sk // block_k
+    qb = (q * scale).reshape(B, n_q, block_q, H, D)
+    kb = k.reshape(B, n_k, block_k, H, D)
+    vb = v.reshape(B, n_k, block_k, H, v.shape[-1])
+
+    if causal:
+        ii, jj = _causal_block_pairs(n_q, n_k)
+    else:
+        ii = np.repeat(np.arange(n_q, dtype=np.int32), n_k)
+        jj = np.tile(np.arange(n_k, dtype=np.int32), n_q)
+
+    Dv = v.shape[-1]                                      # may differ (MLA)
+    m0 = jnp.full((B, n_q, block_q, H), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, n_q, block_q, H), jnp.float32)
+    acc0 = jnp.zeros((B, n_q, block_q, H, Dv), jnp.float32)
+
+    kv_pos_base = jnp.arange(block_k)
+
+    def body(carry, ij):
+        m, l, acc = carry
+        i, j = ij
+        qi = jax.lax.dynamic_index_in_dim(qb, i, axis=1, keepdims=False)
+        kj = jax.lax.dynamic_index_in_dim(kb, j, axis=1, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vb, j, axis=1, keepdims=False)
+        # scores [B, bq, H, bk] — materialized in the INPUT dtype (bf16 on
+        # the production path): halves the dominant HBM traffic of XLA-
+        # materialized attention; the running max/sum stay fp32.
+        s = jnp.einsum("bqhd,bshd->bqhs", qi, kj)
+        neg = jnp.asarray(-jnp.inf, s.dtype)
+        q_pos = i * block_q + jnp.arange(block_q) + q_offset
+        kv_pos = j * block_k + kv_pos_base
+        if causal:
+            mask = kv_pos[None, :] <= q_pos[:, None]      # [bq, bk]
+            s = jnp.where(mask[None, :, None, :], s, neg)
+        if kv_len is not None:
+            s = jnp.where((kv_pos < kv_len)[None, None, None, :], s, neg)
+        mi = jax.lax.dynamic_index_in_dim(m, i, axis=1, keepdims=False)
+        li = jax.lax.dynamic_index_in_dim(l, i, axis=1, keepdims=False)
+        ai = jax.lax.dynamic_index_in_dim(acc, i, axis=1, keepdims=False)
+        m_new = jnp.maximum(mi, jnp.max(s, axis=-1).astype(jnp.float32))
+        alpha = jnp.exp(mi - m_new)
+        # p materializes once in the input dtype (the pv-dot operand); the
+        # l-sum reads the same tensor with fp32 accumulation.
+        p = jnp.exp(s.astype(jnp.float32)
+                    - m_new[..., None]).astype(s.dtype)
+        l_new = li * alpha + jnp.sum(p, axis=-1, dtype=jnp.float32)
+        a_new = ai * alpha[..., None] + jnp.einsum(
+            "bqhs,bshd->bqhd", p, vj).astype(jnp.float32)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, i, axis=1)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, i, axis=1)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, i, axis=1)
+        return (m, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (jnp.asarray(ii), jnp.asarray(jj)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, Dv).astype(q.dtype)
+
+
+def sdpa_decode(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray, *,
+                kv_len: jnp.ndarray,
+                scale: Optional[float] = None) -> jnp.ndarray:
+    """Single-token decode attention over the full (padded) KV cache.
+
+    Deliberately a single masked einsum-softmax, NOT a sequential block scan:
+    with the cache *sequence* axis sharded across the model mesh axis
+    (flash-decode style — kv_heads are too few to shard), GSPMD partitions the
+    einsums along seq and inserts one all-reduce for the softmax max/sum and
+    one for the weighted sum. A scan over blocks would serialize into
+    per-block cross-shard collectives. Score memory is tiny (q_len == 1).
+    """
+    B, Sq, H, D = q.shape
+    assert Sq == 1
+    Sk, Kv = k_cache.shape[1], k_cache.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    g = H // Kv
+    qg = (q * scale).reshape(B, Kv, g, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32)
+    kv_pos = jnp.arange(Sk)
+    s = jnp.where((kv_pos < kv_len)[None, None, None, :], s,
+                  jnp.finfo(jnp.float32).min)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache)
+    return out.reshape(B, 1, H, D)
+
+
+def sdpa(q, k, v, *, causal, q_offset=0, kv_len=None, impl: str = "auto",
+         scale=None):
+    """Dispatch: 'ref' | 'chunked' | 'auto' (chunked once Sq*Sk is large;
+    Pallas flash kernel on TPU via kernels.ops when shapes align and no
+    custom scale/offset/len is needed)."""
+    Sq, Sk = q.shape[1], k.shape[1]
+    if impl == "auto" and scale is None and kv_len is None and q_offset == 0:
+        import jax as _jax
+        if (_jax.default_backend() == "tpu" and Sq % 128 == 0
+                and Sk % 128 == 0):
+            from repro.kernels import ops
+            return ops.attention(q, k, v, causal=causal)
+    if impl == "auto":
+        impl = "chunked" if (Sq * Sk >= 2048 * 2048 and Sq % 1024 == 0
+                             and Sk % 1024 == 0) else "ref"
+    if impl == "chunked":
+        return sdpa_chunked(q, k, v, causal=causal, q_offset=q_offset,
+                            kv_len=kv_len, scale=scale)
+    return sdpa_ref(q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len,
+                    scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# GQA block (projections + attention + cache)
+# ---------------------------------------------------------------------------
+
+def gqa_defs(cfg: ArchConfig, stacked_layers: int = 0,
+             cross: bool = False) -> dict:
+    """Parameter defs for one (or a stack of) GQA attention block(s)."""
+    D, H, Kv, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, \
+        cfg.resolved_head_dim
+    L = (stacked_layers,) if stacked_layers else ()
+    ax = ("layers",) if stacked_layers else ()
+    dt = cfg.param_dtype
+    d = {
+        "wq": ParamDef(L + (D, H, Dh), ax + ("embed", "heads", "head_dim"),
+                       "normal", dt),
+        "wk": ParamDef(L + (D, Kv, Dh), ax + ("embed", "kv_heads", "head_dim"),
+                       "normal", dt),
+        "wv": ParamDef(L + (D, Kv, Dh), ax + ("embed", "kv_heads", "head_dim"),
+                       "normal", dt),
+        "wo": ParamDef(L + (H, Dh, D), ax + ("heads", "head_dim", "embed"),
+                       "normal", dt),
+    }
+    if cfg.qkv_bias and not cross:
+        d["bq"] = ParamDef(L + (H, Dh), ax + ("heads", "head_dim"), "zeros", dt)
+        d["bk"] = ParamDef(L + (Kv, Dh), ax + ("kv_heads", "head_dim"), "zeros", dt)
+        d["bv"] = ParamDef(L + (Kv, Dh), ax + ("kv_heads", "head_dim"), "zeros", dt)
+    return d
+
+
+def gqa_apply(cfg: ArchConfig, p: dict, x: jnp.ndarray, *,
+              angles: Optional[jnp.ndarray], causal: bool = True,
+              cache: Optional[dict] = None,
+              cache_index: Optional[jnp.ndarray] = None,
+              kv_source: Optional[jnp.ndarray] = None,
+              impl: str = "auto") -> tuple:
+    """One attention block.
+
+    Modes:
+      train/eval:      cache=None                      -> (out, None)
+      prefill:         cache={"k","v"} zero-init       -> writes [0:S)
+      decode:          cache + cache_index (scalar)    -> updates 1 slot
+      cross-attention: kv_source=encoder output        -> ignores cache logic
+                       (caller pre-projects via cache at prefill if desired)
+    """
+    B, S, D = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    kv_in = kv_source if kv_source is not None else x
+    k = jnp.einsum("bsd,dhk->bshk", kv_in, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_in, p["wv"])
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    if angles is not None:
+        q = apply_rope(q, angles)
+        if kv_source is None:
+            k = apply_rope(k, angles)
+
+    new_cache = None
+    if cache is not None and cache_index is None:
+        # prefill: write k/v into the padded cache
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+        new_cache = {"k": k_cache, "v": v_cache}
+        out = sdpa(q, k, v, causal=causal, impl=impl)
+    elif cache is not None:
+        # decode: S == 1
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype),
+            (0, cache_index, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype),
+            (0, cache_index, 0, 0))
+        new_cache = {"k": k_cache, "v": v_cache}
+        out = sdpa_decode(q, k_cache, v_cache, kv_len=cache_index + 1)
+    else:
+        out = sdpa(q, k, v, causal=causal, impl=impl)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (Multi-head Latent Attention, DeepSeek-V2 / MiniCPM3)
+# ---------------------------------------------------------------------------
+
+def mla_defs(cfg: ArchConfig, stacked_layers: int = 0) -> dict:
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.num_heads
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    L = (stacked_layers,) if stacked_layers else ()
+    ax = ("layers",) if stacked_layers else ()
+    dt = cfg.param_dtype
+    return {
+        "wq_a": ParamDef(L + (D, m.q_lora_rank), ax + ("embed", "q_lora"),
+                         "normal", dt),
+        "q_norm": ParamDef(L + (m.q_lora_rank,), ax + ("q_lora",), "ones", dt),
+        "wq_b": ParamDef(L + (m.q_lora_rank, H, qd),
+                         ax + ("q_lora", "heads", "q_head_dim"), "normal", dt),
+        "wkv_a": ParamDef(L + (D, m.kv_lora_rank + m.qk_rope_head_dim),
+                          ax + ("embed", "kv_lora"), "normal", dt),
+        "kv_norm": ParamDef(L + (m.kv_lora_rank,), ax + ("kv_lora",), "ones", dt),
+        "wk_b": ParamDef(L + (m.kv_lora_rank, H, m.qk_nope_head_dim),
+                         ax + ("kv_lora", "heads", "q_head_dim"), "normal", dt),
+        "wv_b": ParamDef(L + (m.kv_lora_rank, H, m.v_head_dim),
+                         ax + ("kv_lora", "heads", "head_dim"), "normal", dt),
+        "wo": ParamDef(L + (H, m.v_head_dim, D),
+                       ax + ("heads", "head_dim", "embed"), "normal", dt),
+    }
+
+
+def _mla_q(cfg, p, x):
+    from repro.models.base import rmsnorm
+    m = cfg.mla
+    cq = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), p["q_norm"],
+                 cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"])
+    return q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+
+
+def _mla_kv_latent(cfg, p, x):
+    from repro.models.base import rmsnorm
+    m = cfg.mla
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c, k_pe = kv[..., :m.kv_lora_rank], kv[..., m.kv_lora_rank:]
+    return rmsnorm(c, p["kv_norm"], cfg.norm_eps), k_pe
+
+
+def mla_apply(cfg: ArchConfig, p: dict, x: jnp.ndarray, *,
+              angles: jnp.ndarray, cache: Optional[dict] = None,
+              cache_index: Optional[jnp.ndarray] = None,
+              impl: str = "auto") -> tuple:
+    """MLA attention. Cache = {"c": [B,S,R], "k_pe": [B,S,dr]} — the latent
+    cache is the MLA memory win (R + dr per token vs 2*Kv*Dh).
+
+    Train/prefill: expand k/v from the latent and run standard attention.
+    Decode: *absorbed* form — fold wk_b into q and wv_b after the probs so
+    attention runs directly against the latent cache (no per-step expansion).
+    """
+    m = cfg.mla
+    B, S, D = x.shape
+    q_nope, q_pe = _mla_q(cfg, p, x)
+    q_pe = apply_rope(q_pe, angles)
+    c, k_pe = _mla_kv_latent(cfg, p, x)
+    k_pe = apply_rope(k_pe[:, :, None, :], angles)[:, :, 0, :]  # single "head"
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+
+    if cache is not None and cache_index is not None:
+        # ---- absorbed decode ------------------------------------------
+        c_cache = jax.lax.dynamic_update_slice(
+            cache["c"], c.astype(cache["c"].dtype), (0, cache_index, 0))
+        pe_cache = jax.lax.dynamic_update_slice(
+            cache["k_pe"], k_pe.astype(cache["k_pe"].dtype),
+            (0, cache_index, 0))
+        new_cache = {"c": c_cache, "k_pe": pe_cache}
+        kv_len = cache_index + 1
+        # q absorbed into latent space: [B,1,H,R]
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_b"])
+        s = (jnp.einsum("bshr,btr->bhst", q_lat, c_cache)
+             + jnp.einsum("bshk,btk->bhst", q_pe, pe_cache)) * scale
+        kv_pos = jnp.arange(c_cache.shape[1])
+        s = jnp.where((kv_pos < kv_len)[None, None, None, :],
+                      s.astype(jnp.float32), jnp.finfo(jnp.float32).min)
+        probs = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        ctx_lat = jnp.einsum("bhst,btr->bshr", probs, c_cache)
+        out = jnp.einsum("bshr,rhv->bshv", ctx_lat, p["wv_b"])
+    else:
+        # ---- train / prefill: expand k, v from latent ------------------
+        k_nope = jnp.einsum("bsr,rhk->bshk", c, p["wk_b"])
+        v = jnp.einsum("bsr,rhv->bshv", c, p["wv_b"])
+        H = cfg.num_heads
+        k_pe_b = jnp.broadcast_to(k_pe[:, :, None, :],
+                                  (B, S, H, m.qk_rope_head_dim))
+        q = jnp.concatenate([q_nope, q_pe], axis=-1)
+        k = jnp.concatenate([k_nope, k_pe_b], axis=-1)
+        out = sdpa(q, k, v, causal=True, impl=impl, scale=scale)
+        new_cache = None
+        if cache is not None:
+            c_cache = jax.lax.dynamic_update_slice(
+                cache["c"], c.astype(cache["c"].dtype), (0, 0, 0))
+            pe_cache = jax.lax.dynamic_update_slice(
+                cache["k_pe"], k_pe.astype(cache["k_pe"].dtype), (0, 0, 0))
+            new_cache = {"c": c_cache, "k_pe": pe_cache}
+    y = jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+    return y, new_cache

@@ -1,0 +1,233 @@
+"""Model substrate foundation: architecture config, parameter definition
+system, and shared numerics (norms, initializers).
+
+Design: purely functional. A model is (a) an ``ArchConfig``, (b) a pytree of
+``ParamDef`` leaves describing every parameter's shape + *logical axes*, and
+(c) forward functions over the materialized param pytree. The same ParamDef
+tree drives three things:
+
+    init_params(defs, key)        -> real arrays (smoke tests, examples)
+    abstract_params(defs)         -> ShapeDtypeStructs (dry-run: no allocation)
+    sharding/rules.defs_to_pspecs -> PartitionSpecs (pjit in/out shardings)
+
+Logical-axis vocabulary (DESIGN.md §4): layers, embed, heads, kv_heads,
+head_dim, q_head_dim, mlp, vocab, experts, expert_mlp, state, conv, q_lora,
+kv_lora, rwkv_head — a single rules table maps these to mesh axes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Architecture config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared_experts: int = 0      # deepseek-moe: always-on experts
+    dense_residual: bool = False     # arctic: parallel dense MLP branch
+    capacity_factor: float = 1.25
+    router_dtype: Any = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_head_dim: int = 64
+    qk_rope_head_dim: int = 32
+    v_head_dim: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64               # mamba2 SSD head size
+    chunk: int = 256                 # SSD chunk length
+    n_groups: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    # attention
+    attention: str = "gqa"           # gqa | mla | none
+    qkv_bias: bool = False           # qwen-style QKV bias
+    rope_theta: float = 1e4
+    mrope_sections: tuple = ()       # qwen2-vl M-RoPE (t, h, w) half-dim split
+    # submodule configs
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid (zamba2): one *shared* attention block applied every k SSM blocks
+    hybrid_attn_every: int = 0
+    # rwkv6
+    rwkv_head_size: int = 64
+    # enc-dec (whisper)
+    encoder_layers: int = 0
+    encoder_seq: int = 0             # e.g. 1500 mel frames
+    act: str = "swiglu"              # swiglu | gelu
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # numerics
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    # notes for DESIGN.md bookkeeping (approximations etc.)
+    notes: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch decode at 500k context (SSM/linear-attention state)?"""
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Total parameter count (from the ParamDef tree, exact)."""
+        from repro.models.transformer import model_defs  # local import (cycle)
+        defs = model_defs(self)
+        return sum(int(np.prod(d.shape)) for d in jax.tree_util.tree_leaves(
+            defs, is_leaf=lambda x: isinstance(x, ParamDef)))
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top_k+shared of E experts)."""
+        total = self.param_count()
+        if self.moe is None:
+            return total
+        m = self.moe
+        from repro.models.transformer import model_defs
+        defs = model_defs(self)
+        expert_leaves = [
+            d for path, d in _iter_defs(defs)
+            if "experts" in path
+        ]
+        expert_params = sum(int(np.prod(d.shape)) for d in expert_leaves)
+        active_frac = m.top_k / m.num_experts
+        return int(total - expert_params * (1.0 - active_frac))
+
+
+def _iter_defs(defs, prefix=()):
+    if isinstance(defs, ParamDef):
+        yield prefix, defs
+        return
+    for k, v in defs.items():
+        yield from _iter_defs(v, prefix + (k,))
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    axes: tuple                      # logical axis name per dim (same length)
+    init: str = "normal"             # normal | zeros | ones | small
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes}")
+
+
+def abstract_params(defs):
+    """ShapeDtypeStruct pytree — for .lower() without allocating anything."""
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs,
+        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def init_params(defs, key: jax.Array):
+    """Materialize real parameters (smoke tests / examples / real training)."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+
+    def make(d: ParamDef, k):
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, d.dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, d.dtype)
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else max(1, d.shape[-1])
+        scale = 0.02 if d.init == "small" else 1.0 / math.sqrt(fan_in)
+        return (jax.random.normal(k, d.shape, jnp.float32) * scale).astype(d.dtype)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [make(d, k) for d, k in zip(leaves, keys)])
+
+
+def param_count(defs) -> int:
+    return sum(int(np.prod(d.shape)) for d in jax.tree_util.tree_leaves(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef)))
+
+
+def param_bytes(defs) -> int:
+    return sum(int(np.prod(d.shape)) * jnp.dtype(d.dtype).itemsize
+               for d in jax.tree_util.tree_leaves(
+                   defs, is_leaf=lambda x: isinstance(x, ParamDef)))
+
+
+# ---------------------------------------------------------------------------
+# Shared numerics
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * scale.astype(dt)
+
+
+def layernorm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+              eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * scale.astype(dt) + bias.astype(dt)
+
+
+def apply_norm(cfg: ArchConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rmsnorm(x, p["scale"], cfg.norm_eps)
+
+
+def norm_defs(cfg: ArchConfig, stacked: bool = True) -> dict:
+    L = (cfg.num_layers,) if stacked else ()
+    ax = ("layers",) if stacked else ()
+    d = {"scale": ParamDef(L + (cfg.d_model,), ax + ("embed",), "ones",
+                           cfg.param_dtype)}
+    if cfg.norm == "layernorm":
+        d["bias"] = ParamDef(L + (cfg.d_model,), ax + ("embed",), "zeros",
+                             cfg.param_dtype)
+    return d

@@ -1,0 +1,37 @@
+"""Feed-forward blocks: SwiGLU (llama-family) and GELU MLP (whisper)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ArchConfig, ParamDef
+
+
+def ffn_defs(cfg: ArchConfig, d_ff: int = 0, stacked_layers: int = 0) -> dict:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    L = (stacked_layers,) if stacked_layers else ()
+    ax = ("layers",) if stacked_layers else ()
+    dt = cfg.param_dtype
+    if cfg.act == "gelu":
+        return {
+            "up": ParamDef(L + (D, F), ax + ("embed", "mlp"), "normal", dt),
+            "up_b": ParamDef(L + (F,), ax + ("mlp",), "zeros", dt),
+            "down": ParamDef(L + (F, D), ax + ("mlp", "embed"), "normal", dt),
+            "down_b": ParamDef(L + (D,), ax + ("embed",), "zeros", dt),
+        }
+    return {
+        "gate": ParamDef(L + (D, F), ax + ("embed", "mlp"), "normal", dt),
+        "up": ParamDef(L + (D, F), ax + ("embed", "mlp"), "normal", dt),
+        "down": ParamDef(L + (F, D), ax + ("mlp", "embed"), "normal", dt),
+    }
+
+
+def ffn_apply(cfg: ArchConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.act == "gelu":
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["up"]) + p["up_b"])
+        return jnp.einsum("bsf,fd->bsd", h, p["down"]) + p["down_b"]
+    g = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["gate"]))
+    u = jnp.einsum("bsd,df->bsf", x, p["up"])
+    return jnp.einsum("bsf,fd->bsd", g * u, p["down"])

@@ -1,0 +1,113 @@
+"""Mixture-of-Experts with sort-based capacity dispatch.
+
+Covers both assigned MoE architectures:
+  * deepseek-moe-16b: 64 fine-grained routed experts (top-6) + 2 shared
+    experts that process every token.
+  * arctic-480b: 128 routed experts (top-2) + a parallel *dense residual*
+    MLP branch summed with the MoE output.
+
+Dispatch is sort-based (argsort by expert id + capacity cropping), which is
+O(T*k + E*C*D) memory — no [T, E, C] one-hot tensors (those explode at
+T ~ 1M global tokens). Experts compute as one grouped-FFN einsum over
+[E, C, D], which shards as EP x TP (expert axis / expert_mlp axis) and is
+kernel-swappable (kernels/gmm.py).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ArchConfig, ParamDef
+from repro.models.ffn import ffn_defs, ffn_apply
+
+
+def moe_defs(cfg: ArchConfig, stacked_layers: int = 0) -> dict:
+    m = cfg.moe
+    D, E, Fe = cfg.d_model, m.num_experts, m.d_ff_expert
+    L = (stacked_layers,) if stacked_layers else ()
+    ax = ("layers",) if stacked_layers else ()
+    dt = cfg.param_dtype
+    d = {
+        "router": ParamDef(L + (D, E), ax + ("embed", "experts"), "small", dt),
+        "experts": {
+            "gate": ParamDef(L + (E, D, Fe),
+                             ax + ("experts", "embed", "expert_mlp"), "normal", dt),
+            "up": ParamDef(L + (E, D, Fe),
+                           ax + ("experts", "embed", "expert_mlp"), "normal", dt),
+            "down": ParamDef(L + (E, Fe, D),
+                             ax + ("experts", "expert_mlp", "embed"), "normal", dt),
+        },
+    }
+    if m.num_shared_experts:
+        d["shared"] = ffn_defs(cfg, d_ff=m.num_shared_experts * Fe,
+                               stacked_layers=stacked_layers)
+    if m.dense_residual:
+        d["dense"] = ffn_defs(cfg, d_ff=cfg.d_ff,
+                              stacked_layers=stacked_layers)
+    return d
+
+
+def expert_ffn(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Grouped SwiGLU over [E, C, D] (kernel-swappable hot spot)."""
+    from repro.kernels import ops  # late import: kernels never import models
+    return ops.grouped_swiglu(x, p["gate"], p["up"], p["down"])
+
+
+def moe_apply(cfg: ArchConfig, p: dict, x: jnp.ndarray) -> tuple:
+    """Returns (out [B,S,D], aux_loss scalar)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    k, E = m.top_k, m.num_experts
+    xf = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xf.astype(m.router_dtype),
+                        p["router"].astype(m.router_dtype))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                    # [T, k]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # ---- sort-based dispatch with per-expert capacity -------------------
+    # 2-D [E, C+1, D] scatter (not a flat [E*C] buffer) + an explicit expert
+    # sharding constraint: GSPMD then moves tokens batch-shard -> expert-shard
+    # with ONE all-to-all instead of all-gathering every token everywhere.
+    from repro.sharding.activation import constrain_batch, constrain_experts
+    C = int(math.ceil(T * k / E * m.capacity_factor))
+    C = min(T, max(8, -(-C // 8) * 8))                        # pad to /8
+    flat_e = top_e.reshape(-1)                                # [T*k]
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    flat_p = top_p.reshape(-1).astype(x.dtype)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sp = flat_e[order], flat_t[order], flat_p[order]
+    counts = jnp.bincount(flat_e, length=E)                   # tokens/expert
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * k) - starts[se]                      # rank in expert
+    keep = pos < C
+    slot_c = jnp.where(keep, pos, C)                          # C = drop slot
+
+    buf = jnp.zeros((E, C + 1, D), x.dtype)
+    updates = constrain_batch(xf[st])                         # [T*k, D] sharded
+    buf = buf.at[se, slot_c].set(updates)                     # unique slots
+    expert_in = constrain_experts(buf[:, :C])                 # [E, C, D]
+
+    h = expert_ffn(p["experts"], expert_in)                   # [E, C, D]
+
+    contrib = h[se, jnp.minimum(slot_c, C - 1)] * (sp * keep)[:, None]
+    contrib = constrain_batch(contrib)        # keep [T*k, D] row-sharded
+    out = jnp.zeros((T, D), x.dtype).at[st].add(contrib)
+    out = constrain_batch(out).reshape(B, S, D)
+
+    # ---- always-on branches ---------------------------------------------
+    if m.num_shared_experts:
+        out = out + ffn_apply(cfg, p["shared"], x)
+    if m.dense_residual:
+        out = out + ffn_apply(cfg, p["dense"], x)
+
+    # ---- load-balance aux (Switch-style): E * sum_e f_e * P_e ------------
+    f = counts.astype(jnp.float32) / jnp.maximum(1, T * k)
+    pe = jnp.mean(probs.astype(jnp.float32), axis=0)
+    aux = E * jnp.sum(f * pe)
+    return out, aux

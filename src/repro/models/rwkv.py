@@ -1,0 +1,213 @@
+"""RWKV6 ("Finch") block: attention-free time-mix with *data-dependent decay*
+(the architecture's headline feature) + channel-mix FFN.
+
+Math per head (head size c): state S in R^{c x c} over (key, value):
+    y_t = r_t^T (S_t + diag(u) k_t v_t^T)
+    S_{t+1} = diag(w_t) S_t + k_t v_t^T
+with w_t = exp(-exp(w0 + tanh(x_w A_w) B_w)) — per-channel, data-dependent.
+
+Train/prefill uses a chunked-parallel form: within-chunk [Q,Q] masked decay
+tensors (fp32 log-space cumsums, no exp overflow: every exponent <= 0) +
+an inter-chunk state scan; decode is the O(1) recurrence. Heads shard over
+the model axis; the recurrence itself needs no collectives.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ArchConfig, ParamDef, rmsnorm
+
+
+def rwkv_dims(cfg: ArchConfig) -> tuple:
+    c = cfg.rwkv_head_size
+    H = cfg.d_model // c
+    return H, c
+
+
+def rwkv6_defs(cfg: ArchConfig, stacked_layers: int = 0) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    H, c = rwkv_dims(cfg)
+    lora = 64
+    L = (stacked_layers,) if stacked_layers else ()
+    ax = ("layers",) if stacked_layers else ()
+    dt = cfg.param_dtype
+    d = {
+        # time-mix token-shift lerp coefficients
+        "mu_r": ParamDef(L + (D,), ax + ("embed",), "zeros", dt),
+        "mu_k": ParamDef(L + (D,), ax + ("embed",), "zeros", dt),
+        "mu_v": ParamDef(L + (D,), ax + ("embed",), "zeros", dt),
+        "mu_g": ParamDef(L + (D,), ax + ("embed",), "zeros", dt),
+        "mu_w": ParamDef(L + (D,), ax + ("embed",), "zeros", dt),
+        # data-dependent decay LoRA
+        "w0": ParamDef(L + (D,), ax + ("embed",), "zeros", dt),
+        "w_lora_a": ParamDef(L + (D, lora), ax + ("embed", "q_lora"), "small", dt),
+        "w_lora_b": ParamDef(L + (lora, D), ax + ("q_lora", "embed"), "small", dt),
+        # projections
+        "wr": ParamDef(L + (D, D), ax + ("embed", "ssm_inner"), "normal", dt),
+        "wk": ParamDef(L + (D, D), ax + ("embed", "ssm_inner"), "normal", dt),
+        "wv": ParamDef(L + (D, D), ax + ("embed", "ssm_inner"), "normal", dt),
+        "wg": ParamDef(L + (D, D), ax + ("embed", "ssm_inner"), "normal", dt),
+        "u": ParamDef(L + (H, c), ax + ("ssm_heads", "head_dim"), "zeros", dt),
+        "ln_x": ParamDef(L + (D,), ax + ("ssm_inner",), "ones", dt),
+        "wo": ParamDef(L + (D, D), ax + ("ssm_inner", "embed"), "normal", dt),
+        # channel mix
+        "cm_mu_k": ParamDef(L + (D,), ax + ("embed",), "zeros", dt),
+        "cm_mu_r": ParamDef(L + (D,), ax + ("embed",), "zeros", dt),
+        "cm_wk": ParamDef(L + (D, F), ax + ("embed", "mlp"), "normal", dt),
+        "cm_wv": ParamDef(L + (F, D), ax + ("mlp", "embed"), "normal", dt),
+        "cm_wr": ParamDef(L + (D, D), ax + ("embed", "ssm_inner"), "normal", dt),
+    }
+    return d
+
+
+def _token_shift(x: jnp.ndarray, last: Optional[jnp.ndarray] = None):
+    """x_{t-1} with zero (or ``last``, decode) initial. x [B,S,D]."""
+    if x.shape[1] == 1 and last is not None:
+        return last[:, None, :]
+    prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+    if last is not None:
+        prev = prev.at[:, 0, :].set(last)
+    return prev
+
+
+def _lerp(x, prev, mu):
+    return x + (prev - x) * mu
+
+
+def wkv_chunked(r, k, v, logw, u, chunk: int, init_state=None):
+    """Chunked WKV6. r/k/v [B,S,H,c]; logw [B,S,H,c] (<=0); u [H,c].
+    Returns (y [B,S,H,c], final_state [B,H,c,c])."""
+    B, S, H, c = r.shape
+    assert S % chunk == 0
+    z = S // chunk
+    rc = r.reshape(B, z, chunk, H, c)
+    kc = k.reshape(B, z, chunk, H, c)
+    vc = v.reshape(B, z, chunk, H, c)
+    lw = logw.reshape(B, z, chunk, H, c).astype(jnp.float32)
+    cum = jnp.cumsum(lw, axis=2)                          # inclusive
+    cum_prev = cum - lw                                   # exclusive
+    cum_tot = cum[:, :, -1]                               # [B,z,H,c]
+
+    # intra-chunk: decay(t,s) = exp(cum_prev[t] - cum[s]) for s < t (strict);
+    # diagonal handled by the u bonus. All exponents <= 0.
+    dec = jnp.exp(jnp.clip(cum_prev[:, :, :, None] - cum[:, :, None, :],
+                           a_max=0.0))                    # [B,z,t,s,H,c]
+    strict = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    dec = jnp.where(strict[None, None, :, :, None, None], dec, 0.0)
+    scores = jnp.einsum("bzthc,bztshc,bzshc->bztsh",
+                        rc.astype(jnp.float32), dec, kc.astype(jnp.float32))
+    y_intra = jnp.einsum("bztsh,bzshd->bzthd", scores.astype(r.dtype), vc)
+    diag = jnp.einsum("bzthc,hc,bzthc->bzth",
+                      rc.astype(jnp.float32), u.astype(jnp.float32),
+                      kc.astype(jnp.float32))
+    y_intra = y_intra + diag[..., None].astype(r.dtype) * vc
+
+    # chunk-local end state: sum_s exp(cum_tot - cum[s]) k_s (x) v_s
+    dte = jnp.exp(cum_tot[:, :, None] - cum)              # [B,z,q,H,c] <=1
+    s_local = jnp.einsum("bzshc,bzshd->bzhcd",
+                         (dte.astype(r.dtype) * kc), vc)
+
+    def body(S_prev, inp):
+        s_loc, ct = inp                                   # [B,H,c,d], [B,H,c]
+        S_new = jnp.exp(ct)[..., None].astype(S_prev.dtype) * S_prev + s_loc
+        return S_new, S_prev
+
+    S0 = (jnp.zeros((B, H, c, c), r.dtype) if init_state is None
+          else init_state.astype(r.dtype))
+    S_final, S_starts = jax.lax.scan(
+        body, S0, (jnp.moveaxis(s_local, 1, 0), jnp.moveaxis(cum_tot, 1, 0)))
+    S_starts = jnp.moveaxis(S_starts, 0, 1)               # [B,z,H,c,d]
+
+    y_inter = jnp.einsum("bzthc,bzhcd->bzthd",
+                         (jnp.exp(cum_prev).astype(r.dtype) * rc), S_starts)
+    y = (y_intra + y_inter).reshape(B, S, H, c)
+    return y, S_final
+
+
+def _decay(cfg, p, xw):
+    """Data-dependent per-channel decay, log-space (<= -1e-4)."""
+    lora = jnp.einsum("bsl,ld->bsd",
+                      jnp.tanh(jnp.einsum("bsd,dl->bsl", xw, p["w_lora_a"])),
+                      p["w_lora_b"])
+    return -jnp.exp(jnp.clip((p["w0"] + lora).astype(jnp.float32), -8.0, 6.0))
+
+
+def rwkv6_time_mix(cfg: ArchConfig, p: dict, x: jnp.ndarray, *,
+                   cache: Optional[dict] = None) -> tuple:
+    """Time-mix block. cache (decode): {"state" [B,H,c,c], "last_x" [B,D]}."""
+    H, c = rwkv_dims(cfg)
+    B, S, D = x.shape
+    decode = cache is not None and "state" in cache and S == 1
+    last = cache.get("last_x") if cache else None
+    prev = _token_shift(x, last)
+    xr = _lerp(x, prev, p["mu_r"])
+    xk = _lerp(x, prev, p["mu_k"])
+    xv = _lerp(x, prev, p["mu_v"])
+    xg = _lerp(x, prev, p["mu_g"])
+    xw = _lerp(x, prev, p["mu_w"])
+
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"]).reshape(B, S, H, c)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"]).reshape(B, S, H, c)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"]).reshape(B, S, H, c)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"]))
+    logw = _decay(cfg, p, xw).reshape(B, S, H, c)
+
+    new_cache = None
+    if decode:
+        S_prev = cache["state"]                           # [B,H,c,c]
+        r1, k1, v1 = r[:, 0], k[:, 0], v[:, 0]            # [B,H,c]
+        w1 = jnp.exp(logw[:, 0]).astype(S_prev.dtype)     # [B,H,c]
+        kv = jnp.einsum("bhc,bhd->bhcd", k1, v1)
+        y = jnp.einsum("bhc,bhcd->bhd", r1,
+                       S_prev + p["u"][None, :, :, None].astype(S_prev.dtype)
+                       * kv)
+        S_new = w1[..., None] * S_prev + kv
+        y = y.reshape(B, 1, D)
+        new_cache = {"state": S_new, "last_x": x[:, 0]}
+    else:
+        chunk = min(64, S)
+        pad = (-S) % chunk
+        if pad:
+            rp, kp, vp, lwp = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                               for t in (r, k, v, logw))
+        else:
+            rp, kp, vp, lwp = r, k, v, logw
+        init_state = cache.get("state") if cache else None
+        if init_state is None:
+            from repro.kernels import ops  # Pallas kernel on TPU
+            y, S_fin = ops.wkv6(rp, kp, vp, lwp, p["u"], chunk)
+        else:
+            y, S_fin = wkv_chunked(rp, kp, vp, lwp, p["u"], chunk,
+                                   init_state=init_state)
+        y = y[:, :S].reshape(B, S, D)
+        if cache is not None:  # prefill handover
+            new_cache = {"state": S_fin, "last_x": x[:, -1]}
+
+    # per-head group norm (ln_x), gate, out
+    yh = y.reshape(B, S, H, c)
+    y32 = yh.astype(jnp.float32)
+    mean = jnp.mean(y32, axis=-1, keepdims=True)
+    var = jnp.var(y32, axis=-1, keepdims=True)
+    yh = ((y32 - mean) * jax.lax.rsqrt(var + 64e-5)).astype(y.dtype)
+    y = yh.reshape(B, S, D) * p["ln_x"]
+    y = y * g
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"])
+    return out, new_cache
+
+
+def rwkv6_channel_mix(cfg: ArchConfig, p: dict, x: jnp.ndarray, *,
+                      cache: Optional[dict] = None) -> tuple:
+    """Channel-mix FFN with token shift. cache (decode): {"last_x" [B,D]}."""
+    last = cache.get("last_x") if cache else None
+    prev = _token_shift(x, last)
+    xk = _lerp(x, prev, p["cm_mu_k"])
+    xr = _lerp(x, prev, p["cm_mu_r"])
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["cm_wk"])))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["cm_wv"])
+    out = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cm_wr"])) * kv
+    new_cache = {"last_x": x[:, -1]} if cache is not None else None
+    return out, new_cache

@@ -1,0 +1,195 @@
+"""Mamba2 (SSD — state-space duality) block, chunked-parallel for train/prefill
+and O(1)-state recurrent for decode.
+
+TPU adaptation (DESIGN.md §2): the chunked SSD algorithm maps onto MXU matmuls
+(intra-chunk [Q,Q] score matmuls + inter-chunk state scan); heads shard across
+the model axis (B/C are per-group, replicated), so the SSD itself needs no
+collectives — only the in/out projections reduce over embed.
+
+Shapes: x [B,S,D]; heads H with head_dim P (d_inner = H*P); state N; groups
+G=1. State carry [B,H,N,P].
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ArchConfig, ParamDef, rmsnorm
+
+
+def ssm_dims(cfg: ArchConfig) -> tuple:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads
+
+
+def mamba2_defs(cfg: ArchConfig, stacked_layers: int = 0) -> dict:
+    s = cfg.ssm
+    D = cfg.d_model
+    d_inner, H = ssm_dims(cfg)
+    GN = s.n_groups * s.d_state
+    L = (stacked_layers,) if stacked_layers else ()
+    ax = ("layers",) if stacked_layers else ()
+    dt = cfg.param_dtype
+    return {
+        "wz": ParamDef(L + (D, d_inner), ax + ("embed", "ssm_inner"), "normal", dt),
+        "wx": ParamDef(L + (D, d_inner), ax + ("embed", "ssm_inner"), "normal", dt),
+        "wbc": ParamDef(L + (D, 2 * GN), ax + ("embed", "ssm_bc"), "normal", dt),
+        "wdt": ParamDef(L + (D, H), ax + ("embed", "ssm_heads"), "normal", dt),
+        "conv_x_w": ParamDef(L + (s.d_conv, d_inner), ax + ("conv", "ssm_inner"),
+                             "small", dt),
+        "conv_x_b": ParamDef(L + (d_inner,), ax + ("ssm_inner",), "zeros", dt),
+        "conv_bc_w": ParamDef(L + (s.d_conv, 2 * GN), ax + ("conv", "ssm_bc"),
+                              "small", dt),
+        "conv_bc_b": ParamDef(L + (2 * GN,), ax + ("ssm_bc",), "zeros", dt),
+        "A_log": ParamDef(L + (H,), ax + ("ssm_heads",), "zeros", dt),
+        "D_skip": ParamDef(L + (H,), ax + ("ssm_heads",), "ones", dt),
+        "dt_bias": ParamDef(L + (H,), ax + ("ssm_heads",), "zeros", dt),
+        "norm": ParamDef(L + (d_inner,), ax + ("ssm_inner",), "ones", dt),
+        "wo": ParamDef(L + (d_inner, D), ax + ("ssm_inner", "embed"), "normal", dt),
+    }
+
+
+def _causal_conv(u: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None) -> tuple:
+    """Depthwise causal conv over seq. u [B,S,C], w [K,C]. ``state`` is the
+    last K-1 inputs from the previous call (decode); returns (out, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((u.shape[0], K - 1, u.shape[2]), u.dtype)
+    up = jnp.concatenate([state, u], axis=1)              # [B, S+K-1, C]
+    out = sum(up[:, i:i + u.shape[1], :] * w[i] for i in range(K)) + b
+    new_state = up[:, -(K - 1):, :] if K > 1 else state
+    return out, new_state
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    x [b,s,h,p], dt [b,s,h] (>=0, already softplus'ed), A [h] (negative),
+    Bm/Cm [b,s,n] (G=1, broadcast over heads). Returns (y [b,s,h,p],
+    final_state [b,h,n,p]).
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    z = s // chunk
+    xc = x.reshape(b, z, chunk, h, p)
+    dtc = dt.reshape(b, z, chunk, h).astype(jnp.float32)
+    Bc = Bm.reshape(b, z, chunk, n)
+    Cc = Cm.reshape(b, z, chunk, n)
+
+    a = dtc * A.astype(jnp.float32)                       # [b,z,q,h] log-decay
+    a_cum = jnp.cumsum(a, axis=2)                         # inclusive cumsum
+    a_tot = a_cum[:, :, -1, :]                            # [b,z,h]
+
+    # ---- intra-chunk (quadratic within chunk, masked causal) -------------
+    # decay(t,s) = exp(a_cum[t] - a_cum[s]) for s <= t (state after step s
+    # carries through steps s+1..t; dt_s already scales the input at s).
+    Ldec = jnp.exp(a_cum[:, :, :, None, :] - a_cum[:, :, None, :, :])
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    Ldec = jnp.where(mask[None, None, :, :, None], Ldec, 0.0)
+    CB = jnp.einsum("bzqn,bzsn->bzqs", Cc, Bc).astype(jnp.float32)
+    scores = CB[..., None] * Ldec * dtc[:, :, None, :, :]  # [b,z,q,s,h]
+    y_intra = jnp.einsum("bzqsh,bzshp->bzqhp", scores.astype(x.dtype), xc)
+
+    # ---- chunk-local end states ------------------------------------------
+    decay_to_end = jnp.exp(a_tot[:, :, None, :] - a_cum)  # [b,z,q,h]
+    s_local = jnp.einsum("bzsn,bzsh,bzshp->bzhnp",
+                         Bc, (decay_to_end * dtc).astype(x.dtype), xc)
+
+    # ---- inter-chunk scan --------------------------------------------------
+    def body(S_prev, inp):
+        s_loc, at = inp                                   # [b,h,n,p], [b,h]
+        S_new = jnp.exp(at)[:, :, None, None].astype(S_prev.dtype) * S_prev \
+            + s_loc
+        return S_new, S_prev                              # emit state at start
+
+    S0 = (jnp.zeros((b, h, n, p), x.dtype) if init_state is None
+          else init_state.astype(x.dtype))
+    S_final, S_starts = jax.lax.scan(
+        body, S0,
+        (jnp.moveaxis(s_local, 1, 0), jnp.moveaxis(a_tot, 1, 0)))
+    S_starts = jnp.moveaxis(S_starts, 0, 1)               # [b,z,h,n,p]
+
+    y_inter = jnp.einsum("bzqn,bzhnp->bzqhp", Cc, S_starts) \
+        * jnp.exp(a_cum)[..., None].astype(x.dtype)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, S_final
+
+
+def mamba2_apply(cfg: ArchConfig, p: dict, x: jnp.ndarray, *,
+                 cache: Optional[dict] = None) -> tuple:
+    """Train/prefill path. cache (prefill only): dict to be *produced*; pass
+    cache={} sentinel via want_cache=True style — here: if cache is not None
+    we return {"state","conv_x","conv_bc"} for decode handover."""
+    s = cfg.ssm
+    d_inner, H = ssm_dims(cfg)
+    B, S, D = x.shape
+    z = jnp.einsum("bsd,di->bsi", x, p["wz"])
+    xs = jnp.einsum("bsd,di->bsi", x, p["wx"])
+    bc = jnp.einsum("bsd,dg->bsg", x, p["wbc"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["wdt"])
+
+    xs, conv_x_state = _causal_conv(xs, p["conv_x_w"], p["conv_x_b"])
+    bc, conv_bc_state = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"])
+    xs, bc = jax.nn.silu(xs), jax.nn.silu(bc)
+
+    GN = s.n_groups * s.d_state
+    Bm, Cm = bc[..., :GN], bc[..., GN:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    xh = xs.reshape(B, S, H, s.head_dim)
+    chunk = min(s.chunk, S)
+    from repro.kernels import ops  # late import; dispatches Pallas on TPU
+    y, state = ops.ssd(xh, dt, A, Bm, Cm, chunk)
+    y = y + xh * p["D_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["wo"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"state": state, "conv_x": conv_x_state,
+                     "conv_bc": conv_bc_state}
+    return out, new_cache
+
+
+def mamba2_decode(cfg: ArchConfig, p: dict, x: jnp.ndarray,
+                  cache: dict) -> tuple:
+    """One-token recurrent step. x [B,1,D]; cache {"state" [B,H,N,P],
+    "conv_x" [B,K-1,d_inner], "conv_bc" [B,K-1,2GN]}."""
+    s = cfg.ssm
+    d_inner, H = ssm_dims(cfg)
+    B = x.shape[0]
+    z = jnp.einsum("bsd,di->bsi", x, p["wz"])
+    xs = jnp.einsum("bsd,di->bsi", x, p["wx"])
+    bc = jnp.einsum("bsd,dg->bsg", x, p["wbc"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["wdt"])
+
+    xs, conv_x_state = _causal_conv(xs, p["conv_x_w"], p["conv_x_b"],
+                                    cache["conv_x"])
+    bc, conv_bc_state = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"],
+                                     cache["conv_bc"])
+    xs, bc = jax.nn.silu(xs), jax.nn.silu(bc)
+    GN = s.n_groups * s.d_state
+    Bm, Cm = bc[:, 0, :GN], bc[:, 0, GN:]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    xh = xs[:, 0].reshape(B, H, s.head_dim)
+    S_prev = cache["state"]                               # [B,H,N,P]
+    dA = jnp.exp(dt * A)                                  # [B,H]
+    upd = jnp.einsum("bn,bh,bhp->bhnp", Bm, dt.astype(x.dtype), xh)
+    S_new = S_prev * dA[:, :, None, None].astype(S_prev.dtype) + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cm, S_new)
+    y = y + xh * p["D_skip"][None, :, None].astype(y.dtype)
+    y = y.reshape(B, 1, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["wo"])
+    return out, {"state": S_new, "conv_x": conv_x_state,
+                 "conv_bc": conv_bc_state}

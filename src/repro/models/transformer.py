@@ -1,0 +1,438 @@
+"""The unified model stack: assembles attention/FFN/MoE/SSM/RWKV blocks into
+decoder-only (dense, moe, vlm, ssm, hybrid) models; enc-dec lives in
+encdec.py and dispatches through the same ``model_defs`` entry point.
+
+Layers are *stacked* along a leading ``layers`` axis and executed with
+``jax.lax.scan`` (HLO stays O(1) in depth — essential for 80-layer dry-run
+compiles) with optional per-layer remat. Caches follow the same stacking.
+
+Entry points:
+    model_defs(cfg)                        -> ParamDef pytree
+    forward(cfg, params, tokens, ...)      -> (logits, aux)   [train/eval]
+    make_cache(cfg, batch, max_seq, ...)   -> cache pytree (zeros)
+    abstract_cache(cfg, batch, max_seq)    -> ShapeDtypeStructs
+    prefill(cfg, params, tokens, cache)    -> (logits, cache)
+    decode_step(cfg, params, tok, cache, i)-> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    gqa_apply, gqa_defs, mla_apply, mla_defs, rope_angles,
+)
+from repro.models.base import (
+    ArchConfig, ParamDef, apply_norm, norm_defs,
+)
+from repro.models.ffn import ffn_apply, ffn_defs
+from repro.sharding.activation import constrain_batch
+from repro.models.moe import moe_apply, moe_defs
+from repro.models.rwkv import (
+    rwkv6_channel_mix, rwkv6_defs, rwkv6_time_mix, rwkv_dims,
+)
+from repro.models.ssm import mamba2_apply, mamba2_decode, mamba2_defs, ssm_dims
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+def embed_defs(cfg: ArchConfig) -> dict:
+    # NB: the table's embed dim uses "embed_table" (replicated), NOT the
+    # FSDP'd "embed" — a two-way-sharded table turns the token gather into an
+    # SPMD involuntary-full-remat (batch-replicated activations downstream).
+    # vocab stays sharded over "model".
+    d = {"tok": ParamDef((cfg.vocab_size, cfg.d_model),
+                         ("vocab", "embed_table"), "small", cfg.param_dtype)}
+    return d
+
+
+def _decoder_layer_defs(cfg: ArchConfig, L: int) -> dict:
+    """One stacked decoder layer (attention + mlp/moe families)."""
+    d = {"attn_norm": norm_defs(cfg)}
+    if cfg.attention == "mla":
+        d["attn"] = mla_defs(cfg, stacked_layers=L)
+    else:
+        d["attn"] = gqa_defs(cfg, stacked_layers=L)
+    d["mlp_norm"] = norm_defs(cfg)
+    if cfg.moe is not None:
+        d["moe"] = moe_defs(cfg, stacked_layers=L)
+    else:
+        d["mlp"] = ffn_defs(cfg, stacked_layers=L)
+    return d
+
+
+def model_defs(cfg: ArchConfig) -> dict:
+    if cfg.is_encdec:
+        from repro.models.encdec import encdec_defs
+        return encdec_defs(cfg)
+    L = cfg.num_layers
+    defs: dict = {"embed": embed_defs(cfg)}
+    if cfg.family in ("dense", "moe", "vlm"):
+        defs["layers"] = _decoder_layer_defs(cfg, L)
+    elif cfg.family == "ssm":  # rwkv6
+        defs["layers"] = {
+            "tm_norm": norm_defs(cfg),
+            "time_mix": rwkv6_defs(cfg, stacked_layers=L),
+            "cm_norm": norm_defs(cfg),
+        }
+        # channel-mix defs live inside rwkv6_defs (cm_*) for cache symmetry
+    elif cfg.family == "hybrid":  # zamba2
+        defs["layers"] = {
+            "norm": norm_defs(cfg),
+            "mamba": mamba2_defs(cfg, stacked_layers=L),
+        }
+        defs["shared_attn"] = {
+            "norm": norm_defs(cfg, stacked=False),
+            "attn": gqa_defs(cfg, stacked_layers=0),
+        }
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    defs["final_norm"] = norm_defs(cfg, stacked=False)
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((cfg.d_model, cfg.vocab_size),
+                                   ("embed", "vocab"), "small", cfg.param_dtype)
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def cache_spec(cfg: ArchConfig, batch: int, max_seq: int) -> dict:
+    """ParamDef-style spec of the serving cache (drives zeros + abstract +
+    shardings uniformly)."""
+    dt = cfg.compute_dtype
+    L = cfg.num_layers
+    Dh = cfg.resolved_head_dim
+    if cfg.is_encdec:
+        from repro.models.encdec import encdec_cache_spec
+        return encdec_cache_spec(cfg, batch, max_seq)
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.attention == "mla":
+            m = cfg.mla
+            return {
+                "c": ParamDef((L, batch, max_seq, m.kv_lora_rank),
+                              ("layers", "batch", "cache_seq", "kv_lora"),
+                              "zeros", dt),
+                "k_pe": ParamDef((L, batch, max_seq, m.qk_rope_head_dim),
+                                 ("layers", "batch", "cache_seq", "q_head_dim"),
+                                 "zeros", dt),
+            }
+        Kv = cfg.num_kv_heads
+        return {
+            "k": ParamDef((L, batch, max_seq, Kv, Dh),
+                          ("layers", "batch", "cache_seq", "kv_heads",
+                           "head_dim"), "zeros", dt),
+            "v": ParamDef((L, batch, max_seq, Kv, Dh),
+                          ("layers", "batch", "cache_seq", "kv_heads",
+                           "head_dim"), "zeros", dt),
+        }
+    if cfg.family == "ssm":
+        H, c = rwkv_dims(cfg)
+        return {
+            "state": ParamDef((L, batch, H, c, c),
+                              ("layers", "batch", "ssm_heads", "head_dim",
+                               "head_dim"), "zeros", jnp.float32),
+            "tm_last": ParamDef((L, batch, cfg.d_model),
+                                ("layers", "batch", "embed"), "zeros", dt),
+            "cm_last": ParamDef((L, batch, cfg.d_model),
+                                ("layers", "batch", "embed"), "zeros", dt),
+        }
+    if cfg.family == "hybrid":
+        s = cfg.ssm
+        d_inner, H = ssm_dims(cfg)
+        GN = s.n_groups * s.d_state
+        n_attn = cfg.num_layers // cfg.hybrid_attn_every
+        return {
+            "state": ParamDef((L, batch, H, GN // s.n_groups, s.head_dim),
+                              ("layers", "batch", "ssm_heads", "state",
+                               "head_dim"), "zeros", jnp.float32),
+            "conv_x": ParamDef((L, batch, s.d_conv - 1, d_inner),
+                               ("layers", "batch", "conv", "ssm_inner"),
+                               "zeros", dt),
+            "conv_bc": ParamDef((L, batch, s.d_conv - 1, 2 * GN),
+                                ("layers", "batch", "conv", "ssm_bc"),
+                                "zeros", dt),
+            "attn_k": ParamDef((n_attn, batch, max_seq, cfg.num_kv_heads, Dh),
+                               ("layers", "batch", "cache_seq", "kv_heads",
+                                "head_dim"), "zeros", dt),
+            "attn_v": ParamDef((n_attn, batch, max_seq, cfg.num_kv_heads, Dh),
+                               ("layers", "batch", "cache_seq", "kv_heads",
+                                "head_dim"), "zeros", dt),
+        }
+    raise ValueError(cfg.family)
+
+
+def make_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    return jax.tree_util.tree_map(
+        lambda d: jnp.zeros(d.shape, d.dtype), cache_spec(cfg, batch, max_seq),
+        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype),
+        cache_spec(cfg, batch, max_seq),
+        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _default_positions(cfg: ArchConfig, batch: int, seq: int, offset=0):
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.mrope_sections:
+        return jnp.broadcast_to(pos[:, None, :], (batch, 3, seq))
+    return pos
+
+
+def _scan_layers(layer_fn, stacked_params, x0, caches=None, *,
+                 remat: str = "none", unroll: int = 1):
+    """Scan over the stacked layer axis. ``layer_fn(x, lp, lc) -> (x, new_lc,
+    aux)``. Returns (x, new_caches, aux_sum)."""
+    def body(carry, inp):
+        x, aux = carry
+        lp, lc = inp
+        if remat == "full":
+            fn = jax.checkpoint(layer_fn)
+        elif remat == "dots":
+            fn = jax.checkpoint(
+                layer_fn,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        else:
+            fn = layer_fn
+        x, new_lc, a = fn(x, lp, lc)
+        return (x, aux + a), new_lc
+
+    (x, aux), new_caches = jax.lax.scan(
+        body, (x0, jnp.zeros((), jnp.float32)), (stacked_params, caches),
+        unroll=unroll)
+    return x, new_caches, aux
+
+
+def _attn_mlp_layer(cfg: ArchConfig, angles, impl, cache_index):
+    """Builds layer_fn for the dense/moe/vlm families."""
+    def layer_fn(x, lp, lc):
+        x = constrain_batch(x)
+        h = apply_norm(cfg, lp["attn_norm"], x)
+        if cfg.attention == "mla":
+            a, new_c = mla_apply(cfg, lp["attn"], h, angles=angles, cache=lc,
+                                 cache_index=cache_index, impl=impl)
+        else:
+            a, new_c = gqa_apply(cfg, lp["attn"], h, angles=angles, cache=lc,
+                                 cache_index=cache_index, impl=impl)
+        x = x + a.astype(x.dtype)
+        h = apply_norm(cfg, lp["mlp_norm"], x)
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.moe is not None:
+            f, aux = moe_apply(cfg, lp["moe"], h)
+        else:
+            f = ffn_apply(cfg, lp["mlp"], h)
+        return x + f.astype(x.dtype), new_c, aux
+    return layer_fn
+
+
+def _rwkv_layer(cfg: ArchConfig):
+    def layer_fn(x, lp, lc):
+        x = constrain_batch(x)
+        tm_cache = None if lc is None else \
+            {"state": lc["state"], "last_x": lc["tm_last"]}
+        h = apply_norm(cfg, lp["tm_norm"], x)
+        a, new_tm = rwkv6_time_mix(cfg, lp["time_mix"], h, cache=tm_cache)
+        x = x + a.astype(x.dtype)
+        cm_cache = None if lc is None else {"last_x": lc["cm_last"]}
+        h = apply_norm(cfg, lp["cm_norm"], x)
+        f, new_cm = rwkv6_channel_mix(cfg, lp["time_mix"], h, cache=cm_cache)
+        x = x + f.astype(x.dtype)
+        new_lc = None if lc is None else {
+            "state": new_tm["state"], "tm_last": new_tm["last_x"],
+            "cm_last": new_cm["last_x"]}
+        return x, new_lc, jnp.zeros((), jnp.float32)
+    return layer_fn
+
+
+def _stack(cfg: ArchConfig, params: dict, x: jnp.ndarray, *, angles,
+           caches=None, cache_index=None, impl="auto", remat="none",
+           unroll: int = 1, decode: bool = False):
+    """Runs the layer stack for every decoder-only family. Returns
+    (hidden, new_caches, aux)."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        layer_fn = _attn_mlp_layer(cfg, angles, impl, cache_index)
+        lc = None if caches is None else {"k": caches["k"], "v": caches["v"]} \
+            if cfg.attention != "mla" else \
+            {"c": caches["c"], "k_pe": caches["k_pe"]}
+        x, new_lc, aux = _scan_layers(layer_fn, params["layers"], x, lc,
+                                      remat=remat, unroll=unroll)
+        return x, new_lc, aux
+
+    if cfg.family == "ssm":
+        if decode or caches is not None:
+            layer_fn_d = _rwkv_layer(cfg)
+            x, new_lc, aux = _scan_layers(
+                layer_fn_d, params["layers"], x,
+                {"state": caches["state"], "tm_last": caches["tm_last"],
+                 "cm_last": caches["cm_last"]},
+                remat=remat, unroll=unroll)
+            return x, new_lc, aux
+        x, _, aux = _scan_layers(_rwkv_layer(cfg), params["layers"], x, None,
+                                 remat=remat, unroll=unroll)
+        return x, None, aux
+
+    if cfg.family == "hybrid":
+        return _hybrid_stack(cfg, params, x, angles=angles, caches=caches,
+                             cache_index=cache_index, impl=impl, remat=remat,
+                             decode=decode)
+    raise ValueError(cfg.family)
+
+
+def _hybrid_stack(cfg: ArchConfig, params: dict, x, *, angles, caches,
+                  cache_index, impl, remat, decode):
+    """zamba2: groups of ``hybrid_attn_every`` Mamba2 blocks, each group
+    followed by ONE application of the weight-shared attention block."""
+    every = cfg.hybrid_attn_every
+    L = cfg.num_layers
+    assert L % every == 0, (L, every)
+    groups = L // every
+    shared = params["shared_attn"]
+
+    def regroup(t):  # [L, ...] -> [groups, every, ...]
+        return t.reshape((groups, every) + t.shape[1:])
+
+    g_params = jax.tree_util.tree_map(regroup, params["layers"])
+    g_mamba_cache = None
+    g_attn_cache = None
+    if caches is not None:
+        g_mamba_cache = {k: regroup(caches[k])
+                         for k in ("state", "conv_x", "conv_bc")}
+        g_attn_cache = {"k": caches["attn_k"], "v": caches["attn_v"]}
+
+    def mamba_layer(h, lp, lc):
+        h = constrain_batch(h)
+        hn = apply_norm(cfg, lp["norm"], h)
+        if decode:
+            o, new_lc = mamba2_decode(cfg, lp["mamba"], hn, lc)
+        else:
+            o, new_lc = mamba2_apply(cfg, lp["mamba"], hn,
+                                     cache=lc)
+        return h + o.astype(h.dtype), new_lc, jnp.zeros((), jnp.float32)
+
+    def group_fn(carry, inp):
+        h, aux = carry
+        gp, g_mc, g_ac = inp
+        h, new_mc, a = _scan_layers(mamba_layer, gp, h, g_mc, remat=remat)
+        hn = apply_norm(cfg, shared["norm"], h)
+        attn_out, new_ac = gqa_apply(cfg, shared["attn"], hn, angles=angles,
+                                     cache=g_ac, cache_index=cache_index,
+                                     impl=impl)
+        return (h + attn_out.astype(h.dtype), aux + a), (new_mc, new_ac)
+
+    (x, aux), packed = jax.lax.scan(
+        group_fn, (x, jnp.zeros((), jnp.float32)),
+        (g_params, g_mamba_cache, g_attn_cache))
+    new_caches = None
+    if caches is not None:
+        new_mc, new_ac = packed
+        new_caches = {
+            "state": new_mc["state"].reshape((L,) + new_mc["state"].shape[2:]),
+            "conv_x": new_mc["conv_x"].reshape((L,) + new_mc["conv_x"].shape[2:]),
+            "conv_bc": new_mc["conv_bc"].reshape(
+                (L,) + new_mc["conv_bc"].shape[2:]),
+            "attn_k": new_ac["k"], "attn_v": new_ac["v"],
+        }
+    return x, new_caches, aux
+
+
+def _logits(cfg: ArchConfig, params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    x = apply_norm(cfg, params["final_norm"], x)
+    head = params["embed"]["tok"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,dv->bsv", x, head)
+
+
+def forward(cfg: ArchConfig, params: dict, tokens: jnp.ndarray, *,
+            positions: Optional[jnp.ndarray] = None,
+            input_embeds: Optional[jnp.ndarray] = None,
+            attn_impl: str = "auto", remat: str = "none",
+            unroll: int = 1) -> tuple:
+    """Full-sequence forward (training / evaluation). Returns (logits, aux).
+
+    ``input_embeds``: modality-frontend stub ([vlm]/[audio] patch or frame
+    embeddings, pre-computed) — replaces the token embedding when given
+    (decoder-only), or feeds the encoder (enc-dec).
+    """
+    if cfg.is_encdec:
+        from repro.models.encdec import encdec_forward
+        return encdec_forward(cfg, params, tokens, input_embeds,
+                              attn_impl=attn_impl, remat=remat)
+    B, S = tokens.shape[:2]
+    if input_embeds is not None:
+        x = input_embeds.astype(cfg.compute_dtype)
+    else:
+        x = params["embed"]["tok"][tokens].astype(cfg.compute_dtype)
+    x = constrain_batch(x)
+    angles = None
+    if cfg.family != "ssm" and cfg.attention != "none":
+        if positions is None:
+            positions = _default_positions(cfg, B, S)
+        hd = (cfg.mla.qk_rope_head_dim if cfg.attention == "mla"
+              else cfg.resolved_head_dim)
+        angles = rope_angles(positions, hd, cfg.rope_theta,
+                             cfg.mrope_sections)
+    x, _, aux = _stack(cfg, params, x, angles=angles, caches=None,
+                       cache_index=None, impl=attn_impl, remat=remat,
+                       unroll=unroll)
+    return _logits(cfg, params, x), aux
+
+
+def prefill(cfg: ArchConfig, params: dict, tokens: jnp.ndarray, cache, *,
+            positions: Optional[jnp.ndarray] = None,
+            input_embeds: Optional[jnp.ndarray] = None,
+            attn_impl: str = "auto", remat: str = "none") -> tuple:
+    """Process the prompt, fill the cache; returns (last-token logits, cache)."""
+    if cfg.is_encdec:
+        from repro.models.encdec import encdec_prefill
+        return encdec_prefill(cfg, params, tokens, input_embeds, cache,
+                              attn_impl=attn_impl, remat=remat)
+    B, S = tokens.shape[:2]
+    x = constrain_batch(
+        params["embed"]["tok"][tokens].astype(cfg.compute_dtype))
+    angles = None
+    if cfg.family != "ssm" and cfg.attention != "none":
+        if positions is None:
+            positions = _default_positions(cfg, B, S)
+        hd = (cfg.mla.qk_rope_head_dim if cfg.attention == "mla"
+              else cfg.resolved_head_dim)
+        angles = rope_angles(positions, hd, cfg.rope_theta, cfg.mrope_sections)
+    x, new_cache, _ = _stack(cfg, params, x, angles=angles, caches=cache,
+                             cache_index=None, impl=attn_impl, remat=remat)
+    return _logits(cfg, params, x[:, -1:, :]), new_cache
+
+
+def decode_step(cfg: ArchConfig, params: dict, tokens: jnp.ndarray, cache,
+                cache_index: jnp.ndarray, *,
+                positions: Optional[jnp.ndarray] = None) -> tuple:
+    """One decode step. tokens [B, 1]; cache_index: scalar int32 (current
+    length). Returns (logits [B,1,V], new_cache)."""
+    if cfg.is_encdec:
+        from repro.models.encdec import encdec_decode_step
+        return encdec_decode_step(cfg, params, tokens, cache, cache_index)
+    B = tokens.shape[0]
+    x = constrain_batch(
+        params["embed"]["tok"][tokens].astype(cfg.compute_dtype))
+    angles = None
+    if cfg.family != "ssm" and cfg.attention != "none":
+        if positions is None:
+            positions = _default_positions(cfg, B, 1, offset=cache_index)
+        hd = (cfg.mla.qk_rope_head_dim if cfg.attention == "mla"
+              else cfg.resolved_head_dim)
+        angles = rope_angles(positions, hd, cfg.rope_theta, cfg.mrope_sections)
+    x, new_cache, _ = _stack(cfg, params, x, angles=angles, caches=cache,
+                             cache_index=cache_index, impl="ref", decode=True)
+    return _logits(cfg, params, x), new_cache

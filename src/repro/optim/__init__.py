@@ -1,0 +1,48 @@
+"""Optimizer substrate (no optax available offline — built from scratch).
+
+A ``GradientTransformation`` is an ``(init, update)`` pair over arbitrary pytrees,
+mirroring the optax API so the code reads familiarly:
+
+    tx = adamw(1e-3, weight_decay=0.1)
+    state = tx.init(params)
+    updates, state = tx.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+Used by both the Magpie DDPG agent (actor/critic Adam) and LM training
+(AdamW for <=72B-class, Adafactor for the 480B-class MoE — see DESIGN.md §6).
+"""
+
+from repro.optim.transform import (
+    GradientTransformation,
+    apply_updates,
+    chain,
+    clip_by_global_norm,
+    global_norm,
+    scale,
+    scale_by_adam,
+    scale_by_schedule,
+    add_decayed_weights,
+    identity,
+)
+from repro.optim.adamw import adam, adamw
+from repro.optim.adafactor import adafactor
+from repro.optim.schedule import constant_schedule, warmup_cosine_schedule, linear_schedule
+
+__all__ = [
+    "GradientTransformation",
+    "apply_updates",
+    "chain",
+    "clip_by_global_norm",
+    "global_norm",
+    "scale",
+    "scale_by_adam",
+    "scale_by_schedule",
+    "add_decayed_weights",
+    "identity",
+    "adam",
+    "adamw",
+    "adafactor",
+    "constant_schedule",
+    "warmup_cosine_schedule",
+    "linear_schedule",
+]

@@ -1,0 +1,98 @@
+"""Adafactor (Shazeer & Stern, 2018) — factored second moments, no first moment.
+
+Chosen for the 480B-class MoE (Arctic): AdamW fp32 states for 475B params need
+~30 GB/chip on the 256-chip pod and do not fit 16 GB v5e HBM; Adafactor's factored
+second moment is O(rows+cols) instead of O(rows*cols). See DESIGN.md §6.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.transform import GradientTransformation
+
+
+class _FactoredSlot(NamedTuple):
+    v_row: Any  # (..., rows) running mean of squares over the last dim
+    v_col: Any  # (..., cols) running mean of squares over the second-to-last dim
+    v: Any      # unfactored fallback for <2D params
+
+
+class AdafactorState(NamedTuple):
+    count: jnp.ndarray
+    slots: Any  # pytree of _FactoredSlot
+
+
+def _is_factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 2 and shape[-2] >= 2
+
+
+def adafactor(
+    learning_rate,
+    decay_rate: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    min_dim_size_to_factor: int = 2,
+) -> GradientTransformation:
+    del min_dim_size_to_factor  # _is_factored handles the degenerate dims
+
+    def init(params):
+        def make_slot(p):
+            if _is_factored(p.shape):
+                return _FactoredSlot(
+                    v_row=jnp.zeros(p.shape[:-1], jnp.float32),
+                    v_col=jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                    v=jnp.zeros((), jnp.float32),
+                )
+            return _FactoredSlot(
+                v_row=jnp.zeros((), jnp.float32),
+                v_col=jnp.zeros((), jnp.float32),
+                v=jnp.zeros(p.shape, jnp.float32),
+            )
+
+        slots = jax.tree_util.tree_map(make_slot, params)
+        return AdafactorState(count=jnp.zeros((), jnp.int32), slots=slots)
+
+    def update(updates, state, params=None):
+        del params
+        count = state.count + 1
+        t = count.astype(jnp.float32)
+        beta2 = 1.0 - t ** (-decay_rate)
+
+        if callable(learning_rate):
+            lr = learning_rate(state.count)
+        else:
+            lr = jnp.asarray(learning_rate, jnp.float32)
+
+        def upd(g, slot):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if _is_factored(g.shape):
+                v_row = beta2 * slot.v_row + (1 - beta2) * jnp.mean(g2, axis=-1)
+                v_col = beta2 * slot.v_col + (1 - beta2) * jnp.mean(g2, axis=-2)
+                # rank-1 reconstruction of the second moment
+                row_mean = jnp.mean(v_row, axis=-1, keepdims=True)
+                r = (v_row / jnp.maximum(row_mean, eps))[..., None]
+                c = v_col[..., None, :]
+                u = g32 / jnp.sqrt(r * c + eps)
+                new_slot = _FactoredSlot(v_row=v_row, v_col=v_col, v=slot.v)
+            else:
+                v = beta2 * slot.v + (1 - beta2) * g2
+                u = g32 / jnp.sqrt(v + eps)
+                new_slot = _FactoredSlot(v_row=slot.v_row, v_col=slot.v_col, v=v)
+            # update clipping by RMS (Adafactor's d=1.0 rule)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return -lr * u, new_slot
+
+        flat_u, treedef = jax.tree_util.tree_flatten(updates)
+        flat_s = treedef.flatten_up_to(state.slots)
+        out = [upd(g, s) for g, s in zip(flat_u, flat_s)]
+        new_updates = treedef.unflatten([o[0] for o in out])
+        new_slots = treedef.unflatten([o[1] for o in out])
+        return new_updates, AdafactorState(count=count, slots=new_slots)
+
+    return GradientTransformation(init, update)

@@ -1,0 +1,41 @@
+"""Adam / AdamW built from the composable transforms."""
+
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.optim.transform import (
+    GradientTransformation,
+    add_decayed_weights,
+    chain,
+    scale,
+    scale_by_adam,
+    scale_by_schedule,
+)
+
+
+def _lr_transform(learning_rate) -> GradientTransformation:
+    if callable(learning_rate):
+        return scale_by_schedule(lambda count: -learning_rate(count))
+    return scale(-float(learning_rate))
+
+
+def adam(learning_rate, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> GradientTransformation:
+    return chain(scale_by_adam(b1=b1, b2=b2, eps=eps), _lr_transform(learning_rate))
+
+
+def adamw(
+    learning_rate,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    mask: Callable | None = None,
+) -> GradientTransformation:
+    """AdamW with decoupled weight decay (decay applied after moment rescaling,
+    multiplied by the learning rate, as in Loshchilov & Hutter)."""
+    return chain(
+        scale_by_adam(b1=b1, b2=b2, eps=eps),
+        add_decayed_weights(weight_decay, mask=mask),
+        _lr_transform(learning_rate),
+    )

@@ -1,0 +1,29 @@
+"""Learning-rate schedules (callables: step -> lr)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(value: float):
+    def schedule(count):
+        return jnp.asarray(value, jnp.float32) + 0.0 * count
+    return schedule
+
+
+def linear_schedule(init_value: float, end_value: float, transition_steps: int):
+    def schedule(count):
+        frac = jnp.clip(count.astype(jnp.float32) / max(1, transition_steps), 0.0, 1.0)
+        return init_value + frac * (end_value - init_value)
+    return schedule
+
+
+def warmup_cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int, end_lr_frac: float = 0.1):
+    """Linear warmup to peak, cosine decay to end_lr_frac*peak."""
+    def schedule(count):
+        t = count.astype(jnp.float32)
+        warm = peak_lr * t / max(1, warmup_steps)
+        frac = jnp.clip((t - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0)
+        cos = peak_lr * (end_lr_frac + (1 - end_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(t < warmup_steps, warm, cos)
+    return schedule

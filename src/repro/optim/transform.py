@@ -1,0 +1,148 @@
+"""Composable gradient transformations over pytrees (mini-optax)."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class GradientTransformation(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]  # (updates, state, params=None) -> (updates, state)
+
+
+def identity() -> GradientTransformation:
+    def init(_params):
+        return ()
+
+    def update(updates, state, params=None):
+        del params
+        return updates, state
+
+    return GradientTransformation(init, update)
+
+
+def apply_updates(params, updates):
+    """params + updates, preserving param dtypes (updates may be fp32)."""
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)) if u is not None else p, params, updates
+    )
+
+
+def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(updates, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            updates, s = t.update(updates, s, params)
+            new_state.append(s)
+        return updates, tuple(new_state)
+
+    return GradientTransformation(init, update)
+
+
+def scale(factor: float) -> GradientTransformation:
+    def init(_params):
+        return ()
+
+    def update(updates, state, params=None):
+        del params
+        return jax.tree_util.tree_map(lambda u: u * factor, updates), state
+
+    return GradientTransformation(init, update)
+
+
+class ScaleByScheduleState(NamedTuple):
+    count: jnp.ndarray
+
+
+def scale_by_schedule(schedule: Callable[[jnp.ndarray], jnp.ndarray]) -> GradientTransformation:
+    def init(_params):
+        return ScaleByScheduleState(count=jnp.zeros((), jnp.int32))
+
+    def update(updates, state, params=None):
+        del params
+        factor = schedule(state.count)
+        updates = jax.tree_util.tree_map(lambda u: u * factor, updates)
+        return updates, ScaleByScheduleState(count=state.count + 1)
+
+    return GradientTransformation(init, update)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def init(_params):
+        return ()
+
+    def update(updates, state, params=None):
+        del params
+        norm = global_norm(updates)
+        factor = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+        updates = jax.tree_util.tree_map(lambda u: u * factor, updates)
+        return updates, state
+
+    return GradientTransformation(init, update)
+
+
+class ScaleByAdamState(NamedTuple):
+    count: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> GradientTransformation:
+    """Adam moment rescaling. Moments are kept in fp32 regardless of grad dtype."""
+
+    def init(params):
+        mu = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        nu = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return ScaleByAdamState(count=jnp.zeros((), jnp.int32), mu=mu, nu=nu)
+
+    def update(updates, state, params=None):
+        del params
+        count = state.count + 1
+        updates32 = jax.tree_util.tree_map(lambda u: u.astype(jnp.float32), updates)
+        mu = jax.tree_util.tree_map(lambda m, u: b1 * m + (1 - b1) * u, state.mu, updates32)
+        nu = jax.tree_util.tree_map(lambda v, u: b2 * v + (1 - b2) * jnp.square(u), state.nu, updates32)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        out = jax.tree_util.tree_map(
+            lambda m, v: (m / c1) / (jnp.sqrt(v / c2) + eps), mu, nu
+        )
+        return out, ScaleByAdamState(count=count, mu=mu, nu=nu)
+
+    return GradientTransformation(init, update)
+
+
+def add_decayed_weights(weight_decay: float, mask: Callable[[Any], Any] | None = None) -> GradientTransformation:
+    """AdamW-style decoupled weight decay. ``mask(params)`` -> pytree of bools."""
+
+    def init(_params):
+        return ()
+
+    def update(updates, state, params=None):
+        if params is None:
+            raise ValueError("add_decayed_weights requires params")
+        if mask is not None:
+            m = mask(params)
+            updates = jax.tree_util.tree_map(
+                lambda u, p, keep: u + weight_decay * p.astype(u.dtype) if keep else u,
+                updates, params, m,
+            )
+        else:
+            updates = jax.tree_util.tree_map(
+                lambda u, p: u + weight_decay * p.astype(u.dtype), updates, params
+            )
+        return updates, state
+
+    return GradientTransformation(init, update)

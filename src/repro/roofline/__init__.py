@@ -1,0 +1,7 @@
+from repro.roofline.hw import TPU_V5E
+from repro.roofline.analysis import (
+    collective_bytes_from_hlo, roofline_terms, model_flops,
+)
+
+__all__ = ["TPU_V5E", "collective_bytes_from_hlo", "roofline_terms",
+           "model_flops"]

@@ -1,0 +1,171 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms, all in seconds on the per-device basis (the partitioned HLO IS
+the per-device program, so cost_analysis() numbers are already per chip):
+
+    compute    = HLO_FLOPs / peak_FLOP/s
+    memory     = HLO_bytes_accessed / HBM_bw
+    collective = sum over collective ops of result_bytes * op_factor / ICI_bw
+
+collective bytes are NOT in cost_analysis — we parse the optimized HLO
+(compiled.as_text(), after the SPMD partitioner inserted the collectives)
+and sum the result-shape bytes of every all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute (including async -start
+forms; -done forms are skipped). Ring-algorithm factors: all-reduce moves
+~2x its payload; the others ~1x.
+
+Caveat recorded in EXPERIMENTS.md: bytes_accessed comes from the XLA *CPU*
+pipeline whose fusion differs from TPU — the memory term is an upper bound;
+the hillclimb tracks its relative movement.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from typing import Mapping
+
+import numpy as np
+
+from repro.models.base import ArchConfig
+from repro.roofline.hw import TPU_V5E, HardwareSpec
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_OP_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+              "all-to-all": 1.0, "collective-permute": 1.0}
+
+# `%name = TYPE op-name(` where TYPE is `dt[dims]` or a tuple of them
+_LINE_RE = re.compile(
+    r"=\s*(\([^=]*?\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Per-op-kind payload bytes (per device, per execution) + counts."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    weighted = 0.0
+    for m in _LINE_RE.finditer(hlo_text):
+        type_str, op = m.group(1), m.group(2)
+        b = _shape_bytes(type_str)
+        out[op] += b
+        counts[op] += 1
+        weighted += b * _OP_FACTOR[op]
+    return {"bytes": out, "counts": counts, "weighted_bytes": weighted,
+            "total_bytes": sum(out.values())}
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   weighted_coll_bytes: float,
+                   hw: HardwareSpec = TPU_V5E) -> dict:
+    compute = flops / hw.peak_flops_bf16
+    memory = bytes_accessed / hw.hbm_bandwidth
+    collective = weighted_coll_bytes / hw.ici_bandwidth
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    terms.update(
+        dominant=dominant,
+        step_s_lower_bound=bound,
+        # roofline fraction: useful compute time over the binding term
+        roofline_fraction=compute / bound if bound > 0 else 0.0,
+    )
+    return terms
+
+
+# ---------------------------------------------------------------------------
+# Useful (model) FLOPs — the 6·N·D convention + attention/SSM terms
+# ---------------------------------------------------------------------------
+
+def _attn_flops_per_layer(cfg: ArchConfig, B: int, S: int, kind: str) -> float:
+    """Score+PV flops for full attention (causal halving for decoders)."""
+    H, Dh = cfg.num_heads, cfg.resolved_head_dim
+    fwd = 4.0 * B * S * S * H * Dh / 2.0         # qk + pv, causal half
+    if kind == "train":
+        return 3.0 * fwd                         # fwd + 2x bwd
+    return fwd
+
+
+def model_flops(cfg: ArchConfig, kind: str, batch: int, seq: int) -> float:
+    """Global useful FLOPs per executed step.
+
+    train:   6·N_active·tokens (+ attention/SSM sequence-interaction terms)
+    prefill: 2·N_active·tokens (+ fwd attention term)
+    decode:  2·N_active·batch  (+ attention against the seq-long cache)
+    """
+    n_active = cfg.active_param_count()
+    tokens = batch * seq
+    if kind == "train":
+        base = 6.0 * n_active * tokens
+    elif kind == "prefill":
+        base = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        base = 2.0 * n_active * batch
+
+    extra = 0.0
+    H, Dh = cfg.num_heads, cfg.resolved_head_dim
+    if cfg.family in ("dense", "moe", "vlm"):
+        L = cfg.num_layers
+        if kind in ("train", "prefill"):
+            extra = L * _attn_flops_per_layer(cfg, batch, seq, kind)
+        else:  # decode against the cache
+            extra = L * 4.0 * batch * seq * H * Dh
+    elif cfg.family == "encdec":
+        Ld, Le, Se = cfg.num_layers, cfg.encoder_layers, cfg.encoder_seq
+        if kind in ("train", "prefill"):
+            enc = Le * 4.0 * batch * Se * Se * H * Dh  # bidirectional
+            dec_self = Ld * _attn_flops_per_layer(cfg, batch, seq, kind)
+            cross = Ld * 4.0 * batch * seq * Se * H * Dh
+            mult = 3.0 if kind == "train" else 1.0
+            extra = mult * enc + dec_self + (mult * cross)
+        else:
+            extra = Ld * 4.0 * batch * seq * H * Dh  # self cache + cross(Se)
+            extra += Ld * 4.0 * batch * cfg.encoder_seq * H * Dh
+    elif cfg.family == "hybrid":
+        s = cfg.ssm
+        d_inner = s.expand * cfg.d_model
+        hN = (d_inner // s.head_dim) * s.d_state * s.head_dim
+        per_tok = 4.0 * hN                      # state update + readout
+        L = cfg.num_layers
+        n_attn = L // cfg.hybrid_attn_every
+        if kind == "train":
+            extra = 3.0 * L * per_tok * tokens
+            extra += n_attn * _attn_flops_per_layer(cfg, batch, seq, kind)
+        elif kind == "prefill":
+            extra = L * per_tok * tokens
+            extra += n_attn * _attn_flops_per_layer(cfg, batch, seq, kind)
+        else:
+            extra = L * per_tok * batch
+            extra += n_attn * 4.0 * batch * seq * H * Dh
+    elif cfg.family == "ssm":  # rwkv6
+        Hh = cfg.d_model // cfg.rwkv_head_size
+        c = cfg.rwkv_head_size
+        per_tok = 4.0 * Hh * c * c
+        L = cfg.num_layers
+        mult = {"train": 3.0, "prefill": 1.0, "decode": 1.0}[kind]
+        n_tok = tokens if kind != "decode" else batch
+        extra = mult * L * per_tok * n_tok
+    return base + extra

@@ -1,0 +1,21 @@
+"""Hardware constants for the roofline model (target: TPU v5e)."""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops_bf16: float     # FLOP/s per chip
+    hbm_bandwidth: float       # B/s per chip
+    ici_bandwidth: float       # B/s per chip per link (bidirectional approx)
+    hbm_bytes: float           # capacity per chip
+
+
+TPU_V5E = HardwareSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bandwidth=819e9,
+    ici_bandwidth=50e9,
+    hbm_bytes=16e9,
+)

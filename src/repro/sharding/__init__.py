@@ -1,0 +1,9 @@
+from repro.sharding.rules import (
+    ShardingRules, TRAIN_RULES, SERVE_RULES, defs_to_pspecs, spec_for,
+    batch_pspec, cache_pspecs,
+)
+
+__all__ = [
+    "ShardingRules", "TRAIN_RULES", "SERVE_RULES", "defs_to_pspecs",
+    "spec_for", "batch_pspec", "cache_pspecs",
+]

@@ -1,0 +1,76 @@
+"""Activation sharding constraints, threaded through the model code via a
+context (the model modules know logical shapes, not mesh axes).
+
+``activation_sharding(mesh, batch)`` selects the batch mesh axes once;
+``constrain_batch(x)`` applies ``with_sharding_constraint(x, P(batch_axes,
+None, ...))`` when a context is active and is a no-op otherwise (single-device
+tests, plain eager use). This pins the batch dim of embeddings / layer-scan
+carries so SPMD never falls back to batch-replicated activations (the
+"involuntary full rematerialization" failure mode of sharded-table gathers).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, batch_size: int, rules=None):
+    from repro.sharding.rules import _axis_size, _cand_names
+    if rules is None:
+        from repro.sharding.rules import TRAIN_RULES as rules  # noqa: N813
+    batch_axes, size = None, 1
+    for cand in rules.candidates("batch"):
+        names = _cand_names(cand)
+        if (set(names) <= set(mesh.axis_names)
+                and batch_size % _axis_size(mesh, cand) == 0):
+            batch_axes = tuple(names)
+            size = _axis_size(mesh, cand)
+            break
+    expert_axes, expert_size = None, 1
+    for cand in rules.candidates("experts"):
+        names = _cand_names(cand)
+        if set(names) <= set(mesh.axis_names):
+            expert_axes = tuple(names)
+            expert_size = _axis_size(mesh, cand)
+            break
+    prev = (getattr(_ctx, "batch_axes", None), getattr(_ctx, "size", 1),
+            getattr(_ctx, "expert_axes", None),
+            getattr(_ctx, "expert_size", 1))
+    _ctx.batch_axes, _ctx.size = batch_axes, size
+    _ctx.expert_axes, _ctx.expert_size = expert_axes, expert_size
+    try:
+        yield
+    finally:
+        (_ctx.batch_axes, _ctx.size, _ctx.expert_axes,
+         _ctx.expert_size) = prev
+
+
+def constrain_batch(x):
+    """Constrain dim 0 to the active batch axes (other dims unconstrained)."""
+    axes = getattr(_ctx, "batch_axes", None)
+    if axes is None or x is None:
+        return x
+    if x.ndim == 0 or x.shape[0] % getattr(_ctx, "size", 1) != 0:
+        return x
+    spec = P(axes, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_experts(x):
+    """Constrain dim 0 to the expert mesh axes (MoE dispatch buffers) — this
+    is what turns the token-dispatch into an all-to-all instead of an
+    all-gather of every token on every device."""
+    axes = getattr(_ctx, "expert_axes", None)
+    if axes is None or x is None:
+        return x
+    if x.ndim == 0 or x.shape[0] % getattr(_ctx, "expert_size", 1) != 0:
+        return x
+    spec = P(axes, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)

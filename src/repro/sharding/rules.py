@@ -1,0 +1,160 @@
+"""Logical-axis -> mesh-axis sharding rules (GSPMD / pjit).
+
+One vocabulary of logical axes (models/base.py) and one rules table shard
+every parameter, activation and cache of all 10 architectures. A rule maps a
+logical axis to an ordered list of *candidates*; each candidate is a mesh
+axis name or a tuple of names (sharded over their product). Assignment is
+greedy per tensor: a candidate is taken iff its mesh axes exist, are not
+already used by another dim of the same tensor, and divide the dim size —
+otherwise the dim falls back to replication. This makes the same table valid
+for the 16x16 pod mesh, the 2x16x16 multi-pod mesh, and tiny test meshes.
+
+Two standard rule sets:
+  TRAIN_RULES: TP over "model" (heads/mlp/vocab/expert_mlp), FSDP over
+    ("pod","data") for embed + experts (params, grads and optimizer state all
+    shard; GSPMD all-gathers weights per scan step) — the MaxText-style
+    production default that makes 72B/480B-class optimizer states fit.
+  SERVE_RULES: weights TP-only on "model" where they fit (no optimizer
+    state), experts still over ("data","model"); the decode KV-cache shards
+    its *sequence* dim over "model" (flash-decode style) because kv_heads
+    (4..8) < 16 makes head sharding impossible, and batch over ("pod","data").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.base import ParamDef
+
+
+Candidate = object  # str | tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: Mapping[str, tuple]
+
+    def candidates(self, logical: str) -> tuple:
+        return self.rules.get(logical, ())
+
+
+TRAIN_RULES = ShardingRules(rules={
+    # activations / inputs
+    "batch": ((("pod", "data")), ("data",)),
+    "seq": (),
+    # params
+    "embed": (("pod", "data"), "data"),        # FSDP
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "q_head_dim": (),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": (("pod", "data"), "data"),      # EP == FSDP axis for experts
+    "expert_mlp": ("model",),
+    "ssm_inner": ("model",),
+    "ssm_heads": ("model",),
+    "ssm_bc": (),
+    "state": (),
+    "conv": (),
+    "q_lora": (),
+    "kv_lora": (),
+    # caches (unused in training)
+    "cache_seq": ("model",),
+    "enc_seq": (),
+    "layers": (),
+})
+
+SERVE_RULES = ShardingRules(rules={
+    "batch": ((("pod", "data")), ("data",)),
+    "seq": (),
+    "embed": (),                               # replicate: no optimizer state
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "q_head_dim": (),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("data",),                      # EP still needed at 480B
+    "expert_mlp": ("model",),
+    "ssm_inner": ("model",),
+    "ssm_heads": ("model",),
+    "ssm_bc": (),
+    "state": (),
+    "conv": (),
+    "q_lora": (),
+    "kv_lora": (),
+    "cache_seq": ("model",),
+    "enc_seq": (),
+    "layers": (),
+})
+
+
+def _axis_size(mesh: Mesh, cand) -> int:
+    names = (cand,) if isinstance(cand, str) else tuple(cand)
+    size = 1
+    for n in names:
+        size *= dict(zip(mesh.axis_names, mesh.devices.shape))[n]
+    return size
+
+
+def _cand_names(cand) -> tuple:
+    return (cand,) if isinstance(cand, str) else tuple(cand)
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[str], rules: ShardingRules,
+             mesh: Mesh) -> P:
+    """Greedy per-tensor assignment of mesh axes to dims."""
+    mesh_names = set(mesh.axis_names)
+    used: set = set()
+    out = []
+    for size, logical in zip(shape, axes):
+        assigned = None
+        for cand in rules.candidates(logical):
+            names = _cand_names(cand)
+            if not set(names) <= mesh_names:
+                continue
+            if set(names) & used:
+                continue
+            if size % _axis_size(mesh, cand) != 0:
+                continue
+            assigned = cand if isinstance(cand, str) else tuple(names)
+            used |= set(names)
+            break
+        out.append(assigned)
+    # trailing Nones can be dropped but keep explicit for readability
+    return P(*out)
+
+
+def defs_to_pspecs(defs, rules: ShardingRules, mesh: Mesh):
+    """ParamDef pytree -> PartitionSpec pytree."""
+    return jax.tree_util.tree_map(
+        lambda d: spec_for(d.shape, d.axes, rules, mesh), defs,
+        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def defs_to_shardings(defs, rules: ShardingRules, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda d: NamedSharding(mesh, spec_for(d.shape, d.axes, rules, mesh)),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def batch_pspec(mesh: Mesh, batch_size: int, extra_dims: int = 1,
+                rules: ShardingRules = TRAIN_RULES) -> P:
+    """[batch, ...] inputs: batch over ("pod","data") where divisible."""
+    for cand in rules.candidates("batch"):
+        names = _cand_names(cand)
+        if (set(names) <= set(mesh.axis_names)
+                and batch_size % _axis_size(mesh, cand) == 0):
+            return P(tuple(names), *([None] * extra_dims))
+    return P(*([None] * (extra_dims + 1)))
+
+
+def cache_pspecs(cache_specs, rules: ShardingRules, mesh: Mesh):
+    """Cache ParamDef pytree -> PartitionSpecs (same mechanism as params)."""
+    return defs_to_pspecs(cache_specs, rules, mesh)

@@ -1,0 +1,10 @@
+from repro.training.losses import cross_entropy
+from repro.training.steps import (
+    TrainConfig, make_train_step, make_prefill_step, make_decode_step,
+)
+from repro.training.trainer import Trainer, TrainerConfig
+
+__all__ = [
+    "cross_entropy", "TrainConfig", "make_train_step", "make_prefill_step",
+    "make_decode_step", "Trainer", "TrainerConfig",
+]

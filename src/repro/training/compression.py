@@ -1,0 +1,69 @@
+"""Gradient compression: top-k sparsification with error feedback.
+
+Distributed-optimization trick for bandwidth-bound data parallelism: each
+worker reduces only the top-k |g| entries per tensor and accumulates the
+residual locally; error feedback keeps the method convergent (Karimireddy et
+al., 2019). Two pieces:
+
+1. ``topk_error_feedback``: a GradientTransformation that composes into the
+   optimizer chain (sparsify + residual accumulation) — demonstrates the
+   convergence behaviour and is what the trainer enables via config.
+2. ``compress_and_pmean``: the per-leaf primitive to call *inside* a
+   jax.shard_map'd DP step, pairing the sparsification with the
+   cross-shard mean. On TPU a sparse all-reduce is executed as a dense
+   masked all-reduce unless a custom collective is written; the production
+   win comes from pairing with reduce-scatter over index-aligned blocks —
+   trade-off documented in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.transform import GradientTransformation
+
+
+def _compress_leaf(g, r, fraction: float):
+    """Returns (sent, new_residual): top-|fraction| entries of g+r."""
+    acc = g.astype(jnp.float32) + r
+    flat = acc.reshape(-1)
+    k = max(1, int(flat.size * fraction))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    sent = jnp.where(jnp.abs(acc) >= thresh, acc, 0.0)
+    return sent.astype(g.dtype), acc - sent
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: Any
+
+
+def topk_error_feedback(fraction: float = 0.01) -> GradientTransformation:
+    """Keep the top-``fraction`` |values| per tensor; feed the rest back."""
+    if not 0.0 < fraction <= 1.0:
+        raise ValueError("fraction must be in (0, 1]")
+
+    def init(params):
+        return ErrorFeedbackState(residual=jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def update(updates, state, params=None):
+        del params
+        pairs = jax.tree_util.tree_map(
+            lambda g, r: _compress_leaf(g, r, fraction),
+            updates, state.residual)
+        is_pair = lambda x: isinstance(x, tuple) and len(x) == 2  # noqa: E731
+        sent = jax.tree_util.tree_map(lambda x: x[0], pairs, is_leaf=is_pair)
+        resid = jax.tree_util.tree_map(lambda x: x[1], pairs, is_leaf=is_pair)
+        return sent, ErrorFeedbackState(residual=resid)
+
+    return GradientTransformation(init, update)
+
+
+def compress_and_pmean(g, r, axis_name: str, fraction: float = 0.01):
+    """Per-leaf: sparsify (with residual r) then pmean over ``axis_name``.
+    Call inside shard_map/pmap on the DP axis. Returns (reduced, new_r)."""
+    sent, new_r = _compress_leaf(g, r, fraction)
+    return jax.lax.pmean(sent, axis_name), new_r

@@ -1,0 +1,25 @@
+"""Loss functions (fp32 logsumexp regardless of logits dtype)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  z_loss: float = 0.0) -> jnp.ndarray:
+    """Mean next-token CE. logits [B,S,V] (any float dtype), labels [B,S].
+
+    ``z_loss``: MaxText/PaLM-style logit-norm regularizer weight (stabilizes
+    bf16 training of large-vocab heads)."""
+    logits32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits32, axis=-1)
+    # one-hot contraction, not take_along_axis: a gather over the
+    # vocab-sharded logits would force SPMD to replicate them; the one-hot
+    # einsum keeps the vocab dim sharded and reduces to [B,S] locally.
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    gold = jnp.einsum("bsv,bsv->bs", logits32, onehot)
+    loss = jnp.mean(lse - gold)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(jnp.square(lse))
+    return loss

@@ -1,0 +1,123 @@
+"""jit-able step builders: train_step (grad accumulation via lax.scan over
+microbatches, remat policies, optional gradient compression) and the serving
+steps (prefill / decode). These are what launch/dryrun.py lowers and what the
+trainer/server drivers execute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.models import forward, prefill as model_prefill, decode_step as \
+    model_decode_step
+from repro.models.base import ArchConfig
+from repro.training.losses import cross_entropy
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Static training-step parameters (the 'static parameters' the Magpie
+    sharding environment tunes — changing any of these forces a recompile,
+    the distributed-training analogue of the paper's restart cost)."""
+    microbatches: int = 1          # gradient-accumulation splits
+    remat: str = "none"            # none | dots | full
+    attn_impl: str = "auto"        # ref | chunked | auto
+    scan_unroll: int = 1           # layer-scan unroll factor
+    gather_weights_once: bool = False  # hoist FSDP all-gather out of the
+                                   # microbatch loop (see launch/cells.py)
+    aux_weight: float = 0.01       # MoE load-balance loss weight
+    z_loss: float = 0.0
+    clip_norm: float = 1.0
+
+
+def make_train_step(cfg: ArchConfig, tx: optim.GradientTransformation,
+                    tc: TrainConfig = TrainConfig()) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). ``batch``: {"tokens","labels"[,"positions","input_embeds"]}."""
+
+    def loss_fn(params, tokens, labels, positions, input_embeds):
+        logits, aux = forward(cfg, params, tokens, positions=positions,
+                              input_embeds=input_embeds,
+                              attn_impl=tc.attn_impl, remat=tc.remat,
+                              unroll=tc.scan_unroll)
+        loss = cross_entropy(logits, labels, z_loss=tc.z_loss)
+        return loss + tc.aux_weight * aux, (loss, aux)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        positions = batch.get("positions")
+        input_embeds = batch.get("input_embeds")
+
+        if tc.microbatches <= 1:
+            (_, (loss, aux)), grads = grad_fn(params, tokens, labels,
+                                              positions, input_embeds)
+        else:
+            m = tc.microbatches
+            B = tokens.shape[0]
+            assert B % m == 0, (B, m)
+
+            def split(x):
+                return (None if x is None
+                        else x.reshape((m, B // m) + x.shape[1:]))
+
+            mb = jax.tree_util.tree_map(
+                split, (tokens, labels, positions, input_embeds),
+                is_leaf=lambda x: x is None)
+
+            def acc_fn(carry, xs):
+                g_acc, loss_acc, aux_acc = carry
+                tok, lab, pos, emb = xs
+                (_, (l, a)), g = grad_fn(params, tok, lab, pos, emb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda x, y: x + y.astype(jnp.float32), g_acc, g)
+                return (g_acc, loss_acc + l, aux_acc + a), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss, aux), _ = jax.lax.scan(
+                acc_fn, (g0, jnp.zeros((), jnp.float32),
+                         jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree_util.tree_map(lambda g: g / m, grads)
+            loss, aux = loss / m, aux / m
+
+        grad_norm = optim.global_norm(grads)
+        if tc.clip_norm:
+            factor = jnp.minimum(1.0, tc.clip_norm / (grad_norm + 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * factor, grads)
+        updates, opt_state = tx.update(grads, opt_state, params)
+        params = optim.apply_updates(params, updates)
+        metrics = {"loss": loss, "aux_loss": aux, "grad_norm": grad_norm}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, batch: int, max_seq: int,
+                      attn_impl: str = "auto") -> Callable:
+    """prefill_step(params, tokens[, positions, input_embeds]) ->
+    (logits, cache). The cache is built inside (zeros) so the step is a pure
+    function of params+prompt."""
+    from repro.models import make_cache
+
+    def prefill_step(params, tokens, positions=None, input_embeds=None):
+        cache = make_cache(cfg, batch, max_seq)
+        return model_prefill(cfg, params, tokens, cache, positions=positions,
+                             input_embeds=input_embeds, attn_impl=attn_impl)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig) -> Callable:
+    """decode_step(params, tokens [B,1], cache, cache_index) ->
+    (logits, new_cache). This is `serve_step` for the decode_* shape cells."""
+    def decode(params, tokens, cache, cache_index):
+        return model_decode_step(cfg, params, tokens, cache, cache_index)
+    return decode

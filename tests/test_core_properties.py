@@ -1,0 +1,128 @@
+"""Property-based tests (hypothesis) on the paper-core invariants:
+action mapping, replay buffer FIFO, scalarization/reward."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    MetricSpec, ParamSpace, ParamSpec, ReplayBuffer, Scalarizer,
+)
+
+# ---------------------------------------------------------------------------
+# Action mapping (paper §II-C-1)
+# ---------------------------------------------------------------------------
+
+SPACE = ParamSpace(specs=(
+    ParamSpec("cont", "continuous", minimum=-3.0, maximum=7.0),
+    ParamSpec("disc", "discrete", minimum=1, maximum=6),
+    ParamSpec("choice", "choice", values=(64, 128, 256, 512)),
+))
+
+
+@given(st.lists(st.floats(0, 1), min_size=3, max_size=3))
+@settings(max_examples=200, deadline=None)
+def test_action_to_config_always_in_bounds(action):
+    cfg = SPACE.to_config(action)
+    assert -3.0 <= cfg["cont"] <= 7.0
+    assert cfg["disc"] in (1, 2, 3, 4, 5, 6)
+    assert cfg["choice"] in (64, 128, 256, 512)
+    assert SPACE.validate(cfg)
+
+
+@given(st.floats(0, 1))
+@settings(max_examples=100, deadline=None)
+def test_discrete_inverse_map_is_paper_formula(a):
+    """lambda = floor(a*(max-min) + min + 0.5) for discrete params."""
+    spec = ParamSpec("d", "discrete", minimum=1, maximum=6)
+    expected = int(np.floor(a * (6 - 1) + 1 + 0.5))
+    assert spec.from_unit(a) == min(6, max(1, expected))
+
+
+@given(st.integers(1, 6), st.sampled_from((64, 128, 256, 512)))
+@settings(max_examples=50, deadline=None)
+def test_config_roundtrip(disc, choice):
+    cfg = {"cont": 0.0, "disc": disc, "choice": choice}
+    back = SPACE.to_config(SPACE.to_action(cfg))
+    assert back["disc"] == disc
+    assert back["choice"] == choice
+    assert abs(back["cont"] - 0.0) < 1e-5
+
+
+def test_out_of_range_action_clipped():
+    cfg = SPACE.to_config([1.7, -0.3, 2.0])
+    assert SPACE.validate(cfg)
+
+
+def test_duplicate_names_rejected():
+    with pytest.raises(ValueError):
+        ParamSpace(specs=(ParamSpec("x", "discrete", 0, 1),
+                          ParamSpec("x", "discrete", 0, 1)))
+
+
+# ---------------------------------------------------------------------------
+# Replay buffer (paper §II-D: limited size, FIFO)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 40), st.integers(1, 100))
+@settings(max_examples=50, deadline=None)
+def test_fifo_eviction(capacity, n_adds):
+    buf = ReplayBuffer(capacity, state_dim=2, action_dim=1)
+    for i in range(n_adds):
+        buf.add(np.full(2, i, np.float32), np.zeros(1), float(i),
+                np.zeros(2))
+    assert len(buf) == min(capacity, n_adds)
+    s, a, r, s2 = buf.as_arrays()
+    # the retained rewards are exactly the most recent min(cap, n) values
+    expected = set(range(max(0, n_adds - capacity), n_adds))
+    assert set(int(x) for x in r) == expected
+
+
+def test_sample_requires_data():
+    buf = ReplayBuffer(4, 2, 1)
+    with pytest.raises(ValueError):
+        buf.sample(np.random.default_rng(0), 2)
+
+
+def test_state_dict_roundtrip():
+    buf = ReplayBuffer(4, 2, 1)
+    for i in range(6):
+        buf.add(np.ones(2) * i, np.ones(1), i, np.ones(2))
+    d = buf.state_dict()
+    buf2 = ReplayBuffer(4, 2, 1)
+    buf2.load_state_dict(d)
+    for x, y in zip(buf.as_arrays(), buf2.as_arrays()):
+        np.testing.assert_array_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# Scalarization / reward (paper §II-A, §II-B-5)
+# ---------------------------------------------------------------------------
+
+SPECS = {"t": MetricSpec("t", 0.0, 100.0), "i": MetricSpec("i", 0.0, 10.0)}
+
+
+@given(st.floats(0, 100), st.floats(0, 10))
+@settings(max_examples=100, deadline=None)
+def test_objective_weighted_sum(t, i):
+    sc = Scalarizer(weights={"t": 1.0, "i": 2.0}, specs=SPECS)
+    expected = 1.0 * t / 100.0 + 2.0 * i / 10.0
+    assert abs(sc.objective({"t": t, "i": i}) - expected) < 1e-6
+
+
+@given(st.floats(1, 100), st.floats(1, 100))
+@settings(max_examples=100, deadline=None)
+def test_reward_sign_matches_improvement(prev_t, new_t):
+    sc = Scalarizer(weights={"t": 1.0}, specs=SPECS)
+    r = sc.reward({"t": prev_t}, {"t": new_t})
+    if new_t > prev_t:
+        assert r > 0
+    elif new_t < prev_t:
+        assert r < 0
+    # proportional form: r = (new - prev) / prev in normalized units
+    assert abs(r - (new_t - prev_t) / prev_t) < 1e-5
+
+
+def test_norm_clips_outside_bounds():
+    assert SPECS["t"].norm(-5.0) == 0.0
+    assert SPECS["t"].norm(500.0) == 1.0

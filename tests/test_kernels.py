@@ -1,0 +1,194 @@
+"""Per-kernel shape/dtype sweeps, asserting allclose against the pure-jnp
+oracles in kernels/ref.py (Pallas kernels run in interpret mode on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gmm import gmm
+from repro.kernels.mamba2_scan import ssd_scan
+from repro.kernels.rwkv6 import wkv6_scan
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,Kv,D", [
+    (1, 128, 2, 2, 32),     # MHA
+    (2, 256, 4, 2, 64),     # GQA g=2
+    (1, 384, 8, 2, 16),     # GQA g=4, 3 blocks
+    (1, 128, 4, 1, 128),    # MQA, full head_dim
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_forward(B, S, H, Kv, D, causal, dtype):
+    q = jnp.asarray(RNG.standard_normal((B, S, H, D)), dtype)
+    k = jnp.asarray(RNG.standard_normal((B, S, Kv, D)), dtype)
+    v = jnp.asarray(RNG.standard_normal((B, S, Kv, D)), dtype)
+    o_ref = ref.attention_ref(q, k, v, causal)
+    qt, kt, vt = (jnp.swapaxes(t, 1, 2) for t in (q, k, v))
+    o = jnp.swapaxes(flash_attention(qt, kt, vt, causal, 128, 128, True),
+                     1, 2)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), **_tol(dtype))
+
+
+def test_flash_backward_matches_ref_grads():
+    B, S, H, Kv, D = 1, 256, 4, 2, 32
+    q = jnp.asarray(RNG.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, Kv, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, Kv, D)), jnp.float32)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(ref.attention_ref(q, k, v, True) ** 2)
+
+    def loss_ker(q, k, v):
+        qt, kt, vt = (jnp.swapaxes(t, 1, 2) for t in (q, k, v))
+        o = flash_attention(qt, kt, vt, True, 128, 128, True)
+        return jnp.sum(jnp.swapaxes(o, 1, 2) ** 2)
+
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    gk = jax.grad(loss_ker, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gr, gk):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 128, 2, 16, 8, 32),
+    (2, 256, 3, 32, 16, 64),
+    (1, 64, 1, 64, 64, 64),   # single chunk
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel(b, s, h, p, n, chunk, dtype):
+    x = jnp.asarray(RNG.standard_normal((b, s, h, p)) * 0.5, dtype)
+    dt = jnp.asarray(RNG.uniform(0.1, 0.9, (b, s, h)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 2.0, (h,)), jnp.float32)
+    Bm = jnp.asarray(RNG.standard_normal((b, s, n)) * 0.3, dtype)
+    Cm = jnp.asarray(RNG.standard_normal((b, s, n)) * 0.3, dtype)
+    y_ref, s_ref = ref.ssd_ref(x, dt, A, Bm, Cm)
+    xf = jnp.swapaxes(x, 1, 2).reshape(b * h, s, p)
+    dtf = jnp.swapaxes(dt, 1, 2).reshape(b * h, s)
+    Af = jnp.broadcast_to(A[None, :], (b, h)).reshape(b * h)
+    y, st = ssd_scan(xf, dtf, Af, Bm, Cm, heads=h, chunk=chunk,
+                     interpret=True)
+    y = jnp.swapaxes(y.reshape(b, h, s, p), 1, 2)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(st.reshape(b, h, n, p)),
+                               np.asarray(s_ref, np.float32),
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=5e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 WKV
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,c,chunk", [
+    (1, 64, 2, 16, 32),
+    (2, 128, 2, 32, 64),
+    (1, 256, 4, 64, 64),
+])
+def test_wkv6_kernel(B, S, H, c, chunk):
+    r = jnp.asarray(RNG.standard_normal((B, S, H, c)) * 0.5, jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, H, c)) * 0.5, jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, H, c)) * 0.5, jnp.float32)
+    lw = -jnp.asarray(RNG.uniform(0.01, 2.0, (B, S, H, c)), jnp.float32)
+    u = jnp.asarray(RNG.standard_normal((H, c)) * 0.3, jnp.float32)
+    y_ref, s_ref = ref.wkv6_ref(r, k, v, lw, u)
+
+    def fold(t):
+        return jnp.swapaxes(t, 1, 2).reshape(B * H, S, c)
+
+    uf = jnp.broadcast_to(u[None], (B, H, c)).reshape(B * H, c)
+    y, st = wkv6_scan(fold(r), fold(k), fold(v), fold(lw), uf, chunk=chunk,
+                      interpret=True)
+    y = jnp.swapaxes(y.reshape(B, H, S, c), 1, 2)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st.reshape(B, H, c, c)),
+                               np.asarray(s_ref), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Grouped matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("E,C,D,F", [
+    (2, 128, 128, 128),
+    (4, 128, 256, 128),
+    (8, 256, 128, 256),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gmm(E, C, D, F, dtype):
+    x = jnp.asarray(RNG.standard_normal((E, C, D)), dtype)
+    w = jnp.asarray(RNG.standard_normal((E, D, F)), dtype)
+    o_ref = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                       w.astype(jnp.float32))
+    o = gmm(x, w, interpret=True)
+    np.testing.assert_allclose(np.asarray(o, np.float32), np.asarray(o_ref),
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=3e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+# ---------------------------------------------------------------------------
+# XLA fallback paths vs oracles (these run in the dry-run)
+# ---------------------------------------------------------------------------
+
+def test_chunked_sdpa_vs_ref():
+    from repro.models.attention import sdpa_chunked
+    q = jnp.asarray(RNG.standard_normal((1, 1024, 4, 32)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 1024, 2, 32)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((1, 1024, 2, 32)), jnp.float32)
+    o_ref = ref.attention_ref(q, k, v, True)
+    o = sdpa_chunked(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_chunked_ssd_jnp_vs_ref():
+    from repro.models.ssm import ssd_chunked
+    b, s, h, p, n = 1, 192, 2, 16, 8
+    x = jnp.asarray(RNG.standard_normal((b, s, h, p)) * 0.5, jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.1, 0.9, (b, s, h)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 2.0, (h,)), jnp.float32)
+    Bm = jnp.asarray(RNG.standard_normal((b, s, n)) * 0.3, jnp.float32)
+    Cm = jnp.asarray(RNG.standard_normal((b, s, n)) * 0.3, jnp.float32)
+    y_ref, s_ref = ref.ssd_ref(x, dt, A, Bm, Cm)
+    y, st = ssd_chunked(x, dt, A, Bm, Cm, 64)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(s_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_chunked_wkv_jnp_vs_ref():
+    from repro.models.rwkv import wkv_chunked
+    B, S, H, c = 1, 96, 2, 16
+    r = jnp.asarray(RNG.standard_normal((B, S, H, c)) * 0.5, jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, H, c)) * 0.5, jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, H, c)) * 0.5, jnp.float32)
+    lw = -jnp.asarray(RNG.uniform(0.01, 2.0, (B, S, H, c)), jnp.float32)
+    u = jnp.asarray(RNG.standard_normal((H, c)) * 0.3, jnp.float32)
+    y_ref, s_ref = ref.wkv6_ref(r, k, v, lw, u)
+    y, st = wkv_chunked(r, k, v, lw, u, 32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(s_ref),
+                               rtol=1e-4, atol=1e-4)
