@@ -48,14 +48,15 @@ def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--quick", action="store_true", help="reduced seeds/steps")
     p.add_argument("--only", default="",
-                   help="fig4|fig5|fig6|fig7|table3|dryrun")
+                   help="fig4|fig5|fig6|fig7|table3|fleet|dryrun")
     args = p.parse_args()
 
     seeds = (0,) if args.quick else (0, 1, 2)
     steps = 20 if args.quick else 30
 
     from benchmarks import (fig4_single_objective, fig5_multi_objective,
-                            fig6_steps, fig7_progressive, table3_timing)
+                            fig6_steps, fig7_progressive, fleet_throughput,
+                            table3_timing)
 
     benches = {
         "fig4": ("Fig. 4 — single-objective throughput tuning (30 steps)",
@@ -72,6 +73,8 @@ def main() -> None:
                      increments=5 if args.quick else 10)),
         "table3": ("Table III — per-iteration timing",
                    lambda: table3_timing.run(steps=steps)),
+        "fleet": ("Fleet tuning — fused learner + vmapped sessions",
+                  lambda: fleet_throughput.run(quick=args.quick)),
         "dryrun_baseline": (
             "Dry-run / roofline table — paper-faithful BASELINE",
             lambda: _dryrun_summary(

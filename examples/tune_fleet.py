@@ -1,0 +1,40 @@
+"""Fleet tuning: the paper's whole evaluation grid as one fused JAX program.
+
+Runs a seeds x workloads x objectives grid of independent Magpie tuning
+sessions concurrently — vmapped DDPG learners, device-resident replay, and a
+vectorized Lustre response surface — then prints per-session results plus the
+aggregate gain statistics the paper reports in Fig. 4/5 (91.8% average
+throughput gain across workloads).
+
+    PYTHONPATH=src python examples/tune_fleet.py
+"""
+
+from repro.core import FleetTuner
+
+
+def main() -> None:
+    fleet = FleetTuner.from_grid(
+        workloads=["seq_write", "video_server", "file_server"],
+        objectives=[{"throughput": 1.0}],
+        seeds=[0, 1, 2],
+    )
+    print(f"running {fleet.agent.num_sessions} tuning sessions concurrently...")
+    result = fleet.run(steps=30)  # paper's budget, every session
+
+    for label, res in zip(result.labels, result.results):
+        print(f"{label:40s} {res.default_metrics['throughput']:7.1f} "
+              f"-> {res.best_metrics['throughput']:7.1f} MB/s "
+              f"({res.gain('throughput')*100:+.1f}%)  best={res.best_config}")
+
+    stats = result.summary("throughput")
+    print(f"\naggregate throughput gain over {stats['sessions']} sessions: "
+          f"mean {stats['mean']*100:+.1f}%  "
+          f"p25/p50/p75 {stats['p25']*100:+.1f}/{stats['p50']*100:+.1f}/"
+          f"{stats['p75']*100:+.1f}%  "
+          f"range [{stats['min']*100:+.1f}%, {stats['max']*100:+.1f}%]")
+    print(f"fleet wall time: {result.wall_seconds:.1f}s "
+          f"for {stats['sessions']} x 30-step sessions")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,22 +3,31 @@
 Public API:
     ParamSpec / ParamSpace       -- the m-dimensional static parameter space
     MetricSpec / Scalarizer      -- state normalization + multi-objective reward
-    ReplayBuffer                 -- FIFO memory pool
-    DDPGConfig / MagpieAgent     -- the RL agent
+    ReplayBuffer                 -- FIFO memory pool (single session)
+    BatchedReplayBuffer          -- device-resident per-session FIFO fleet pool
+    DDPGConfig / MagpieAgent     -- the RL agent (fused scan learner)
     Tuner                        -- the Fig.1 tuning loop
+    FleetAgent / FleetTuner      -- N vmapped sessions as one fused program
     baselines.BestConfigTuner    -- the paper's baseline
 """
 
 from repro.core.action_mapping import ParamSpec, ParamSpace
 from repro.core.scalarization import MetricSpec, Scalarizer, normalize_state
-from repro.core.replay_buffer import ReplayBuffer, Transition
-from repro.core.ddpg import DDPGConfig, DDPGState, OUNoise, ddpg_init, ddpg_update
+from repro.core.replay_buffer import BatchedReplayBuffer, ReplayBuffer, Transition
+from repro.core.ddpg import (
+    DDPGConfig, DDPGState, OUNoise, ddpg_init, ddpg_learn_scan, ddpg_update,
+    fleet_act, fleet_init, fleet_learn_scan, sample_minibatch_indices,
+)
 from repro.core.agent import MagpieAgent
 from repro.core.tuner import Tuner, TuningResult, StepRecord
+from repro.core.fleet import FleetAgent, FleetResult, FleetTuner
 
 __all__ = [
     "ParamSpec", "ParamSpace", "MetricSpec", "Scalarizer", "normalize_state",
-    "ReplayBuffer", "Transition", "DDPGConfig", "DDPGState", "OUNoise",
-    "ddpg_init", "ddpg_update", "MagpieAgent", "Tuner", "TuningResult",
-    "StepRecord",
+    "ReplayBuffer", "BatchedReplayBuffer", "Transition",
+    "DDPGConfig", "DDPGState", "OUNoise",
+    "ddpg_init", "ddpg_update", "ddpg_learn_scan", "sample_minibatch_indices",
+    "fleet_init", "fleet_act", "fleet_learn_scan",
+    "MagpieAgent", "Tuner", "TuningResult", "StepRecord",
+    "FleetAgent", "FleetResult", "FleetTuner",
 ]

@@ -11,6 +11,7 @@ import pickle
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.ddpg import (
@@ -19,9 +20,26 @@ from repro.core.ddpg import (
     OUNoise,
     actor_apply,
     ddpg_init,
+    ddpg_learn_scan,
     ddpg_update,
 )
 from repro.core.replay_buffer import ReplayBuffer
+
+
+def lhs_warmup_plan(rng: np.random.Generator, warmup_steps: int,
+                    action_dim: int) -> np.ndarray:
+    """Latin-hypercube warmup plan: each warmup step lands in a distinct
+    1/warmup_steps interval of every action coordinate.
+
+    Shared by ``MagpieAgent`` and ``FleetAgent`` — fleet session i must build
+    the exact plan its same-seed single agent would.
+    """
+    plan = np.empty((warmup_steps, action_dim), np.float32)
+    for j in range(action_dim):
+        perm = rng.permutation(warmup_steps)
+        plan[:, j] = (perm + rng.uniform(size=warmup_steps)) / max(
+            1, warmup_steps)
+    return plan
 
 
 class MagpieAgent:
@@ -40,16 +58,11 @@ class MagpieAgent:
         self.buffer = ReplayBuffer(buffer_capacity, cfg.state_dim, cfg.action_dim)
         self.noise = OUNoise(cfg.action_dim, seed=seed + 1)
         self._np_rng = np.random.default_rng(seed + 2)
+        self._learn_key = jax.random.PRNGKey(seed + 3)  # on-device minibatch RNG
         self.steps_taken = 0
         self.last_metrics: dict = {}
-        # Latin-hypercube warmup plan: each warmup step lands in a distinct
-        # 1/warmup_steps interval of every action coordinate.
-        plan = np.empty((warmup_steps, cfg.action_dim), np.float32)
-        for j in range(cfg.action_dim):
-            perm = self._np_rng.permutation(warmup_steps)
-            plan[:, j] = (perm + self._np_rng.uniform(size=warmup_steps)) / max(
-                1, warmup_steps)
-        self._warmup_plan = plan
+        self._warmup_plan = lhs_warmup_plan(self._np_rng, warmup_steps,
+                                            cfg.action_dim)
 
     # -- acting -------------------------------------------------------------
 
@@ -69,11 +82,29 @@ class MagpieAgent:
     def observe(self, state, action, reward, next_state) -> None:
         self.buffer.add(state, action, float(reward), next_state)
 
-    def learn(self, updates: Optional[int] = None) -> dict:
-        """Run ``updates`` (default cfg.updates_per_step) minibatch gradient steps."""
+    def learn(self, updates: Optional[int] = None, fused: bool = True) -> dict:
+        """Run ``updates`` (default cfg.updates_per_step) minibatch gradient steps.
+
+        ``fused=True`` (default) samples minibatches on-device and runs the
+        whole inner loop as one jitted ``lax.scan`` (``ddpg_learn_scan``) — one
+        dispatch per call instead of ``updates`` dispatches plus a host
+        round-trip per minibatch. ``fused=False`` keeps the legacy per-update
+        dispatch loop (benchmark reference; see benchmarks/fleet_throughput.py).
+        """
         if len(self.buffer) == 0:
             return {}
         n = self.cfg.updates_per_step if updates is None else updates
+        if n <= 0:
+            return {}
+        if fused:
+            self._learn_key, key = jax.random.split(self._learn_key)
+            data, size = self.buffer.storage()
+            self.state, metrics = ddpg_learn_scan(
+                self.state, data, size, key, self.cfg,
+                self._actor_tx, self._critic_tx, n,
+            )
+            self.last_metrics = {k: float(v[-1]) for k, v in metrics.items()}
+            return self.last_metrics
         metrics = {}
         for _ in range(n):
             batch = self.buffer.sample(self._np_rng, self.cfg.batch_size)
@@ -91,6 +122,7 @@ class MagpieAgent:
             "buffer": self.buffer.state_dict(),
             "noise": self.noise.state_dict(),
             "np_rng": self._np_rng.bit_generator.state,
+            "learn_key": np.asarray(self._learn_key),
             "steps_taken": self.steps_taken,
             "cfg": tuple(self.cfg),
         }
@@ -104,6 +136,8 @@ class MagpieAgent:
         self.buffer.load_state_dict(d["buffer"])
         self.noise.load_state_dict(d["noise"])
         self._np_rng.bit_generator.state = d["np_rng"]
+        if "learn_key" in d:  # pre-fused-learner checkpoints lack it
+            self._learn_key = jnp.asarray(d["learn_key"])
         self.steps_taken = int(d["steps_taken"])
 
     def save(self, path: str) -> None:

@@ -84,14 +84,14 @@ class DDPGState(NamedTuple):
     step: jnp.ndarray
 
 
-def ddpg_init(key: jax.Array, cfg: DDPGConfig) -> tuple:
-    """Returns (DDPGState, (actor_tx, critic_tx)). Target nets start as copies."""
+def _init_state(key: jax.Array, cfg: DDPGConfig,
+                actor_tx: optim.GradientTransformation,
+                critic_tx: optim.GradientTransformation) -> DDPGState:
+    """Fresh learner state for one session; target nets start as copies."""
     ka, kc = jax.random.split(key)
     actor = mlp_init(ka, (cfg.state_dim, *cfg.hidden, cfg.action_dim))
     critic = mlp_init(kc, (cfg.state_dim + cfg.action_dim, *cfg.hidden, 1))
-    actor_tx = optim.adam(cfg.actor_lr)
-    critic_tx = optim.adam(cfg.critic_lr)
-    state = DDPGState(
+    return DDPGState(
         actor=actor,
         critic=critic,
         actor_targ=jax.tree_util.tree_map(jnp.copy, actor),
@@ -100,22 +100,32 @@ def ddpg_init(key: jax.Array, cfg: DDPGConfig) -> tuple:
         critic_opt=critic_tx.init(critic),
         step=jnp.zeros((), jnp.int32),
     )
-    return state, (actor_tx, critic_tx)
+
+
+def ddpg_init(key: jax.Array, cfg: DDPGConfig) -> tuple:
+    """Returns (DDPGState, (actor_tx, critic_tx))."""
+    actor_tx = optim.adam(cfg.actor_lr)
+    critic_tx = optim.adam(cfg.critic_lr)
+    return _init_state(key, cfg, actor_tx, critic_tx), (actor_tx, critic_tx)
 
 
 def _polyak(target, online, tau: float):
     return jax.tree_util.tree_map(lambda t, o: (1 - tau) * t + tau * o, target, online)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "actor_tx", "critic_tx"))
-def ddpg_update(
+def _ddpg_step(
     state: DDPGState,
     batch: tuple,  # (s, a, r, s2) each [B, ...] float32
     cfg: DDPGConfig,
     actor_tx: optim.GradientTransformation,
     critic_tx: optim.GradientTransformation,
 ) -> tuple:
-    """One critic + one actor gradient step + Polyak. Returns (state, metrics)."""
+    """One critic + one actor gradient step + Polyak. Returns (state, metrics).
+
+    Pure (un-jitted) body shared by ``ddpg_update`` (one jitted call per
+    minibatch), ``ddpg_learn_scan`` (the whole inner loop fused into one
+    ``lax.scan``) and the vmapped fleet learner.
+    """
     s, a, r, s2 = batch
 
     # --- critic: Bellman regression against the frozen targets -------------
@@ -151,6 +161,106 @@ def ddpg_update(
     metrics = {"critic_loss": critic_loss, "actor_loss": actor_loss,
                "q_mean": jnp.mean(critic_apply(critic, s, a))}
     return new_state, metrics
+
+
+ddpg_update = functools.partial(
+    jax.jit, static_argnames=("cfg", "actor_tx", "critic_tx")
+)(_ddpg_step)
+
+
+# ---------------------------------------------------------------------------
+# Fused learner: the whole updates_per_step inner loop as one XLA program
+# ---------------------------------------------------------------------------
+
+def sample_minibatch_indices(key: jax.Array, num_updates: int, batch_size: int,
+                             size: jnp.ndarray) -> jnp.ndarray:
+    """[num_updates, batch_size] uniform-with-replacement indices in [0, size).
+
+    On-device replacement for the host-side ``rng.integers`` loop; ``size`` is
+    a dynamic operand so a growing buffer never retriggers compilation.
+    """
+    return jax.random.randint(
+        key, (num_updates, batch_size), 0, jnp.maximum(size, 1))
+
+
+def _learn_scan(state, data, size, key, cfg, actor_tx, critic_tx, num_updates):
+    s, a, r, s2 = data
+    idx = sample_minibatch_indices(key, num_updates, cfg.batch_size, size)
+
+    def body(st, ix):
+        return _ddpg_step(st, (s[ix], a[ix], r[ix], s2[ix]),
+                          cfg, actor_tx, critic_tx)
+
+    return jax.lax.scan(body, state, idx)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "actor_tx", "critic_tx", "num_updates"))
+def ddpg_learn_scan(
+    state: DDPGState,
+    data: tuple,       # (s, a, r, s2), each [capacity, ...] — full buffer storage
+    size: jnp.ndarray,  # number of valid rows in ``data`` (dynamic)
+    key: jax.Array,
+    cfg: DDPGConfig,
+    actor_tx: optim.GradientTransformation,
+    critic_tx: optim.GradientTransformation,
+    num_updates: int,
+) -> tuple:
+    """``num_updates`` minibatch gradient steps as ONE jitted program.
+
+    Equivalent to sampling ``num_updates`` batches with
+    ``sample_minibatch_indices(key, ...)`` and applying ``ddpg_update`` to each
+    in sequence, but with minibatch sampling on-device and the whole inner loop
+    fused into a single ``jax.lax.scan`` — one dispatch per ``learn()`` instead
+    of ``updates_per_step`` (96, Table III) dispatches plus a host round-trip
+    per minibatch. Returns (state, metrics stacked over updates).
+    """
+    return _learn_scan(state, data, size, key, cfg, actor_tx, critic_tx,
+                       num_updates)
+
+
+# ---------------------------------------------------------------------------
+# Fleet: N independent DDPG learners batched over a leading session axis
+# ---------------------------------------------------------------------------
+
+def fleet_init(keys: jax.Array, cfg: DDPGConfig) -> tuple:
+    """Initialize N independent learners from ``keys`` [N, key] in one shot.
+
+    Returns (stacked DDPGState with leading session axis, (actor_tx,
+    critic_tx)). Session i's parameters are identical to
+    ``ddpg_init(keys[i], cfg)`` — JAX RNG is deterministic per key, so a fleet
+    of one reproduces the single-agent init exactly.
+    """
+    actor_tx = optim.adam(cfg.actor_lr)
+    critic_tx = optim.adam(cfg.critic_lr)
+    init_one = functools.partial(_init_state, cfg=cfg, actor_tx=actor_tx,
+                                 critic_tx=critic_tx)
+    return jax.vmap(init_one)(keys), (actor_tx, critic_tx)
+
+
+@jax.jit
+def fleet_act(actors, states: jnp.ndarray) -> jnp.ndarray:
+    """Deterministic policy actions for all sessions: [N, k] -> [N, m]."""
+    return jax.vmap(actor_apply)(actors, states)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "actor_tx", "critic_tx", "num_updates"))
+def fleet_learn_scan(
+    states: DDPGState,  # stacked over sessions
+    data: tuple,        # (s, a, r, s2), each [N, capacity, ...]
+    sizes: jnp.ndarray,  # [N]
+    keys: jax.Array,     # [N, key]
+    cfg: DDPGConfig,
+    actor_tx: optim.GradientTransformation,
+    critic_tx: optim.GradientTransformation,
+    num_updates: int,
+) -> tuple:
+    """vmap of ``ddpg_learn_scan`` over the session axis: the entire fleet's
+    ``N x num_updates`` gradient steps are one XLA computation."""
+    f = functools.partial(_learn_scan, cfg=cfg, actor_tx=actor_tx,
+                          critic_tx=critic_tx, num_updates=num_updates)
+    return jax.vmap(f)(states, data, sizes, keys)
 
 
 # ---------------------------------------------------------------------------

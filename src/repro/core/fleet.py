@@ -1,0 +1,349 @@
+"""Fleet tuning: many Magpie sessions as one fused JAX program.
+
+The paper's headline numbers (91.8% average throughput gain, Fig. 4/5) come
+from repeating whole tuning sessions across workloads, objectives and seeds.
+This module makes that axis first-class:
+
+  * ``FleetAgent`` — N independent DDPG learners (different seeds) stacked on
+    a leading session axis. Init, acting and the entire
+    ``updates_per_step``-deep learning loop are vmapped, so one ``learn()``
+    call is ONE XLA computation for the whole fleet (``fleet_learn_scan``)
+    instead of N x 96 separate dispatches.
+  * ``FleetTuner`` — runs a seeds x workloads x objectives grid of tuning
+    sessions concurrently against per-session environments, with a vectorized
+    response-surface fast path for ``LustreSimEnv`` fleets
+    (``batch_mean_performance``). Returns one ``TuningResult`` per session
+    plus aggregate gain statistics mirroring the paper's reporting.
+
+Sessions are fully independent: a fleet of one reproduces the single
+``Tuner``/``MagpieAgent`` pair exactly (same seed, same trajectory) — the
+fleet axis buys throughput, never changes the algorithm.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.agent import lhs_warmup_plan
+from repro.core.ddpg import (
+    DDPGConfig,
+    OUNoise,
+    fleet_act,
+    fleet_init,
+    fleet_learn_scan,
+)
+from repro.core.replay_buffer import BatchedReplayBuffer
+from repro.core.scalarization import Scalarizer, normalize_state
+from repro.core.tuner import (
+    StepRecord,
+    TuningResult,
+    evaluate_config,
+    recommend_final,
+)
+
+
+class FleetAgent:
+    """N ``MagpieAgent``-equivalent learners batched over a session axis.
+
+    Session i is seeded exactly like ``MagpieAgent(cfg, seed=seeds[i])``: the
+    same network init key, warmup plan, OU-noise stream and on-device
+    minibatch-sampling key — so per-session behaviour is independent of the
+    fleet it runs in.
+    """
+
+    def __init__(self, cfg: DDPGConfig, seeds: Sequence[int],
+                 buffer_capacity: int = 64, warmup_steps: int = 8):
+        if not seeds:
+            raise ValueError("need at least one session seed")
+        self.cfg = cfg
+        self.seeds = list(seeds)
+        self.num_sessions = len(self.seeds)
+        self.warmup_steps = warmup_steps
+        keys = jnp.stack([jax.random.PRNGKey(s) for s in self.seeds])
+        self.states, (self._actor_tx, self._critic_tx) = fleet_init(keys, cfg)
+        self.buffer = BatchedReplayBuffer(
+            self.num_sessions, buffer_capacity, cfg.state_dim, cfg.action_dim)
+        self.noises = [OUNoise(cfg.action_dim, seed=s + 1) for s in self.seeds]
+        self._learn_keys = jnp.stack(
+            [jax.random.PRNGKey(s + 3) for s in self.seeds])
+        self.steps_taken = 0
+        self.last_metrics: dict = {}
+        # Per-session Latin-hypercube warmup plans (MagpieAgent's, per seed).
+        self._warmup_plans = np.stack([
+            lhs_warmup_plan(np.random.default_rng(s + 2), warmup_steps,
+                            cfg.action_dim)
+            for s in self.seeds])  # [N, warmup_steps, action_dim]
+
+    # -- acting -------------------------------------------------------------
+
+    def act(self, states: np.ndarray, explore: bool = True) -> np.ndarray:
+        """Actions [N, m] for per-session states [N, k] (lockstep fleet step)."""
+        if explore and self.steps_taken < self.warmup_steps:
+            a = self._warmup_plans[:, self.steps_taken].copy()
+        else:
+            a = np.asarray(fleet_act(
+                self.states.actor, jnp.asarray(states, jnp.float32)))
+            if explore:
+                a = a + np.stack([noise() for noise in self.noises])
+        self.steps_taken += 1
+        return np.clip(a, 0.0, 1.0).astype(np.float32)
+
+    # -- learning -----------------------------------------------------------
+
+    def observe(self, states, actions, rewards, next_states) -> None:
+        """One transition per session; each argument has a leading [N] axis."""
+        self.buffer.add(states, actions, rewards, next_states)
+
+    def learn(self, updates: Optional[int] = None) -> dict:
+        """All sessions' ``updates`` gradient steps in one jitted dispatch.
+
+        Returns {metric: [N] array} — each session's value from its last
+        minibatch update.
+        """
+        if len(self.buffer) == 0:
+            return {}
+        n = self.cfg.updates_per_step if updates is None else updates
+        if n <= 0:
+            return {}
+        split = jax.vmap(jax.random.split)(self._learn_keys)  # [N, 2, key]
+        self._learn_keys, keys = split[:, 0], split[:, 1]
+        data, sizes = self.buffer.storage()
+        self.states, metrics = fleet_learn_scan(
+            self.states, data, sizes, keys, self.cfg,
+            self._actor_tx, self._critic_tx, n,
+        )
+        self.last_metrics = {k: np.asarray(v[:, -1]) for k, v in metrics.items()}
+        return self.last_metrics
+
+
+@dataclasses.dataclass
+class FleetResult:
+    """Per-session results + the paper's aggregate reporting (Fig. 4/5)."""
+
+    results: list   # TuningResult per session
+    labels: list    # human-readable session labels, parallel to ``results``
+    wall_seconds: float
+
+    def gains(self, metric: str) -> np.ndarray:
+        """Proportional best-vs-default gain per session for ``metric``."""
+        return np.array([r.gain(metric) for r in self.results])
+
+    def summary(self, metric: str = "throughput") -> dict:
+        """Aggregate gain statistics across sessions (mean/percentiles)."""
+        g = self.gains(metric)
+        return {
+            "sessions": len(g),
+            "mean": float(g.mean()),
+            "std": float(g.std()),
+            "min": float(g.min()),
+            "p25": float(np.percentile(g, 25)),
+            "p50": float(np.percentile(g, 50)),
+            "p75": float(np.percentile(g, 75)),
+            "max": float(g.max()),
+        }
+
+    def by_label(self, label: str) -> TuningResult:
+        return self.results[self.labels.index(label)]
+
+
+class FleetTuner:
+    """N concurrent Magpie tuning sessions sharing one fused learner.
+
+    Each session owns its environment and scalarizer (workloads and objectives
+    may differ across the fleet); the agent is a ``FleetAgent`` whose session i
+    mirrors ``MagpieAgent(cfg, seed=seeds[i])``. The loop is the Fig. 1 loop
+    of ``core.tuner.Tuner``, executed in lockstep across sessions, with all
+    N x ``updates_per_step`` gradient steps per fleet step issued as a single
+    XLA computation.
+    """
+
+    def __init__(self, envs: Sequence, scalarizers: Sequence[Scalarizer],
+                 agent: FleetAgent, eval_runs: int = 3, labels=None,
+                 vectorized: Optional[bool] = None):
+        if not (len(envs) == len(scalarizers) == agent.num_sessions):
+            raise ValueError("envs, scalarizers and agent sessions must align")
+        self.envs = list(envs)
+        self.scalarizers = list(scalarizers)
+        self.agent = agent
+        self.eval_runs = eval_runs
+        self.labels = list(labels) if labels else [
+            f"session{i}" for i in range(len(self.envs))]
+        if vectorized is None:
+            from repro.envs.lustre_sim import LustreSimEnv
+            vectorized = all(isinstance(e, LustreSimEnv) for e in self.envs)
+        self.vectorized = vectorized
+        self.histories: list = [[] for _ in self.envs]
+        self.simulated_restart_seconds = np.zeros(len(self.envs))
+        self.default_configs = [e.param_space.default_config() for e in self.envs]
+        self.default_metrics = [
+            self._evaluate(i, c, runs=eval_runs)
+            for i, c in enumerate(self.default_configs)]
+        self._cur_configs = [dict(c) for c in self.default_configs]
+        self._cur_metrics = [dict(m) for m in self.default_metrics]
+        self.best_configs = [dict(c) for c in self.default_configs]
+        self.best_metrics = [dict(m) for m in self.default_metrics]
+        self.best_objectives = [
+            sc.objective(m) for sc, m in zip(self.scalarizers, self.default_metrics)]
+
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def from_grid(cls, workloads: Sequence[str],
+                  objectives: Sequence[Mapping[str, float]],
+                  seeds: Sequence[int], *, env_factory=None,
+                  ddpg_config: Optional[DDPGConfig] = None,
+                  buffer_capacity: int = 64, warmup_steps: int = 8,
+                  eval_runs: int = 3, extended: bool = False) -> "FleetTuner":
+        """Build a fleet for the full seeds x workloads x objectives grid.
+
+        ``env_factory(workload, seed)`` defaults to ``LustreSimEnv`` — the
+        paper's evaluation environment. Every grid cell is an independent
+        tuning session; session seeds are offset per cell so no two sessions
+        share an RNG stream even under the same base seed.
+        """
+        if env_factory is None:
+            from repro.envs.lustre_sim import LustreSimEnv
+
+            def env_factory(workload, seed):
+                return LustreSimEnv(workload, seed=seed, extended=extended)
+
+        envs, scals, labels, cell_seeds = [], [], [], []
+        cell = 0
+        for workload in workloads:
+            for weights in objectives:
+                for seed in seeds:
+                    env = env_factory(workload, seed + 1000 * cell)
+                    envs.append(env)
+                    scals.append(Scalarizer(weights=dict(weights),
+                                            specs=env.metric_specs))
+                    obj_name = "+".join(sorted(weights))
+                    labels.append(f"{workload}|{obj_name}|seed{seed}")
+                    cell_seeds.append(seed + 1000 * cell)
+                    cell += 1
+        if not envs:
+            raise ValueError(
+                "empty grid: need at least one workload, objective and seed")
+        cfg = ddpg_config or DDPGConfig(state_dim=envs[0].state_dim,
+                                        action_dim=envs[0].action_dim)
+        agent = FleetAgent(cfg, cell_seeds, buffer_capacity=buffer_capacity,
+                           warmup_steps=warmup_steps)
+        return cls(envs, scals, agent, eval_runs=eval_runs, labels=labels)
+
+    # ------------------------------------------------------------------
+
+    def _evaluate(self, i: int, config: dict, runs: int) -> dict:
+        """Session i's metrics averaged over ``runs`` long evaluation runs."""
+        return evaluate_config(self.envs[i], config, runs)
+
+    def _states(self) -> np.ndarray:
+        return np.stack([
+            normalize_state(m, e.metric_specs, e.state_metrics)
+            for m, e in zip(self._cur_metrics, self.envs)])
+
+    def _apply_all(self, configs: list) -> list:
+        """Run every session's workload under its config for one fleet step."""
+        if self.vectorized:
+            from repro.envs.lustre_sim import batch_mean_performance
+            perfs = batch_mean_performance(self.envs, configs)
+            return [e._run_with_perf(p, c)
+                    for e, p, c in zip(self.envs, perfs, configs)]
+        return [e.apply(c) for e, c in zip(self.envs, configs)]
+
+    # ------------------------------------------------------------------
+
+    def run(self, steps: int) -> FleetResult:
+        """Run ``steps`` lockstep tuning iterations across the fleet.
+
+        Callable repeatedly — agent, buffers and noise state persist across
+        calls (progressive tuning, paper Fig. 7).
+
+        Timing fields (``StepRecord.action_seconds``/``learn_seconds``,
+        ``TuningResult.wall_seconds``) measure the FLEET's shared step — all
+        sessions act/learn in one fused computation — so they are identical
+        across sessions and not comparable with single-``Tuner`` per-session
+        timings.
+        """
+        t_wall = time.perf_counter()
+        n_sessions = len(self.envs)
+        start = len(self.histories[0])
+        for step_i in range(start, start + steps):
+            states = self._states()
+
+            t0 = time.perf_counter()
+            actions = self.agent.act(states)
+            configs = [e.param_space.to_config(a)
+                       for e, a in zip(self.envs, actions)]
+            metrics = self._apply_all(configs)
+            action_seconds = time.perf_counter() - t0
+
+            restarts = np.array([
+                e.restart_cost(c, prev) for e, c, prev in
+                zip(self.envs, configs, self._cur_configs)])
+            self.simulated_restart_seconds += restarts
+
+            next_states = np.stack([
+                normalize_state(m, e.metric_specs, e.state_metrics)
+                for m, e in zip(metrics, self.envs)])
+            rewards = np.array([
+                sc.reward(prev, m) for sc, prev, m in
+                zip(self.scalarizers, self._cur_metrics, metrics)], np.float32)
+            objectives = [sc.objective(m)
+                          for sc, m in zip(self.scalarizers, metrics)]
+
+            t0 = time.perf_counter()
+            self.agent.observe(states, actions, rewards, next_states)
+            self.agent.learn()
+            learn_seconds = time.perf_counter() - t0
+
+            for i in range(n_sessions):
+                if objectives[i] > self.best_objectives[i]:
+                    self.best_objectives[i] = objectives[i]
+                    self.best_configs[i] = dict(configs[i])
+                    self.best_metrics[i] = dict(metrics[i])
+                self.histories[i].append(StepRecord(
+                    step=step_i, config=configs[i], metrics=metrics[i],
+                    objective=objectives[i], reward=float(rewards[i]),
+                    restart_seconds=float(restarts[i]),
+                    action_seconds=action_seconds,
+                    learn_seconds=learn_seconds,
+                ))
+            self._cur_configs = configs
+            self._cur_metrics = metrics
+
+        # Final recommendation per session (the same §III-E rule as Tuner.run,
+        # via the shared recommend_final helper).
+        policy_actions = self.agent.act(self._states(), explore=False)
+        finals = []
+        for i in range(n_sessions):
+            policy_config = self.envs[i].param_space.to_config(policy_actions[i])
+            config, best_metrics, replaced = recommend_final(
+                self.scalarizers[i], self.best_configs[i], policy_config,
+                lambda c, i=i: self._evaluate(i, c, runs=self.eval_runs))
+            if replaced:
+                self.best_configs[i] = config
+                self.best_metrics[i] = dict(best_metrics)
+                self.best_objectives[i] = self.scalarizers[i].objective(
+                    best_metrics)
+            finals.append(best_metrics)
+        wall = time.perf_counter() - t_wall  # includes final evaluations,
+        results = []                         # matching Tuner.run's clock
+        for i in range(n_sessions):
+            results.append(TuningResult(
+                best_config=dict(self.best_configs[i]),
+                best_objective=self.scalarizers[i].objective(finals[i]),
+                best_metrics=finals[i],
+                default_config=dict(self.default_configs[i]),
+                default_metrics=dict(self.default_metrics[i]),
+                history=list(self.histories[i]),
+                simulated_restart_seconds=float(
+                    self.simulated_restart_seconds[i]),
+                wall_seconds=wall,
+            ))
+        return FleetResult(results=results, labels=list(self.labels),
+                           wall_seconds=wall)

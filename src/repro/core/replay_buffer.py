@@ -1,15 +1,22 @@
-"""FIFO replay buffer (paper §II-D).
+"""FIFO replay buffers (paper §II-D).
 
 Limited size; once full, the oldest transition is evicted (FIFO) so the model
-neither overfits stale history nor forgets recent experience. Stored on host
-(numpy) — tuning trajectories are tiny (30-100 steps) and the agent samples
-minibatches into jax arrays at update time.
+neither overfits stale history nor forgets recent experience.
+
+``ReplayBuffer`` is the single-session host-side (numpy) buffer; its
+``storage()`` view hands the full fixed-capacity arrays plus the live size to
+the fused learner (``ddpg_learn_scan``), which samples minibatches on-device.
+``BatchedReplayBuffer`` is the device-resident fleet variant: one buffer per
+tuning session stacked on a leading session axis, written in lockstep, with
+identical FIFO semantics per session.
 """
 
 from __future__ import annotations
 
 import dataclasses
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -60,6 +67,15 @@ class ReplayBuffer:
             self._s2[: self._size].copy(),
         )
 
+    def storage(self):
+        """((s, a, r, s2) full-capacity arrays, size) for on-device sampling.
+
+        The arrays keep a fixed [capacity, ...] shape (zeros past ``size``) so
+        the fused learner compiles once; the dynamic ``size`` operand restricts
+        sampling to valid rows.
+        """
+        return (self._s, self._a, self._r, self._s2), self._size
+
     def state_dict(self) -> dict:
         """For checkpoint/resume of a tuning session (paper §III-E: resume tuning)."""
         return {
@@ -72,5 +88,80 @@ class ReplayBuffer:
         self._a[...] = d["a"]
         self._r[...] = d["r"]
         self._s2[...] = d["s2"]
+        self._next = int(d["next"])
+        self._size = int(d["size"])
+
+
+class BatchedReplayBuffer:
+    """N independent FIFO buffers stacked on a leading session axis.
+
+    Device-resident (jax arrays) so the vmapped fleet learner reads transitions
+    without a host round-trip. Sessions step in lockstep — one ``add`` writes
+    one transition per session — so a single write cursor serves the fleet and
+    per-session eviction order is exactly ``ReplayBuffer``'s.
+    """
+
+    def __init__(self, num_sessions: int, capacity: int, state_dim: int,
+                 action_dim: int):
+        if capacity <= 0:
+            raise ValueError("capacity must be positive")
+        if num_sessions <= 0:
+            raise ValueError("num_sessions must be positive")
+        self.num_sessions = num_sessions
+        self.capacity = capacity
+        self._s = jnp.zeros((num_sessions, capacity, state_dim), jnp.float32)
+        self._a = jnp.zeros((num_sessions, capacity, action_dim), jnp.float32)
+        self._r = jnp.zeros((num_sessions, capacity), jnp.float32)
+        self._s2 = jnp.zeros((num_sessions, capacity, state_dim), jnp.float32)
+        self._next = 0
+        self._size = 0
+
+    def __len__(self) -> int:
+        return self._size
+
+    def add(self, state, action, reward, next_state) -> None:
+        """Add one transition per session; each argument is [N, ...]."""
+        i = self._next
+        self._s = self._s.at[:, i].set(jnp.asarray(state, jnp.float32))
+        self._a = self._a.at[:, i].set(jnp.asarray(action, jnp.float32))
+        self._r = self._r.at[:, i].set(jnp.asarray(reward, jnp.float32))
+        self._s2 = self._s2.at[:, i].set(jnp.asarray(next_state, jnp.float32))
+        self._next = (i + 1) % self.capacity  # FIFO eviction once full
+        self._size = min(self._size + 1, self.capacity)
+
+    def storage(self):
+        """((s, a, r, s2) stacked [N, capacity, ...] arrays, sizes [N])."""
+        sizes = jnp.full((self.num_sessions,), self._size, jnp.int32)
+        return (self._s, self._a, self._r, self._s2), sizes
+
+    def sample(self, keys: jax.Array, batch_size: int):
+        """Per-session uniform minibatches: keys [N, key] -> each [N, B, ...]."""
+        if self._size == 0:
+            raise ValueError("cannot sample from an empty buffer")
+        idx = jax.vmap(
+            lambda k: jax.random.randint(k, (batch_size,), 0, self._size)
+        )(keys)
+        gather = jax.vmap(lambda x, ix: x[ix])
+        return (gather(self._s, idx), gather(self._a, idx),
+                gather(self._r, idx), gather(self._s2, idx))
+
+    def as_arrays(self):
+        """Valid rows only, as numpy: each [N, size, ...]."""
+        n = self._size
+        return (np.asarray(self._s[:, :n]), np.asarray(self._a[:, :n]),
+                np.asarray(self._r[:, :n]), np.asarray(self._s2[:, :n]))
+
+    def state_dict(self) -> dict:
+        return {
+            "s": np.asarray(self._s), "a": np.asarray(self._a),
+            "r": np.asarray(self._r), "s2": np.asarray(self._s2),
+            "next": self._next, "size": self._size,
+        }
+
+    def load_state_dict(self, d: dict) -> None:
+        self._s = jnp.asarray(d["s"])
+        self._a = jnp.asarray(d["a"])
+        self._r = jnp.asarray(d["r"])
+        self._s2 = jnp.asarray(d["s2"])
         self._next = int(d["next"])
         self._size = int(d["size"])

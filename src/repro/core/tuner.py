@@ -39,6 +39,40 @@ class StepRecord:
     learn_seconds: float
 
 
+def evaluate_config(env, config: dict, runs: int) -> dict:
+    """Average metrics over ``runs`` long evaluation runs (paper: 30 min x3).
+
+    Shared by ``Tuner`` and ``FleetTuner`` so the evaluation protocol has one
+    source of truth (fleet-of-one parity depends on it).
+    """
+    acc: dict = {}
+    for _ in range(runs):
+        m = env.apply(config, eval_run=True)
+        for k, v in m.items():
+            acc[k] = acc.get(k, 0.0) + v / runs
+    return acc
+
+
+def recommend_final(scalarizer: Scalarizer, best_config: dict,
+                    policy_config: dict, evaluate) -> tuple:
+    """§III-E final recommendation, shared by ``Tuner`` and ``FleetTuner``.
+
+    Re-evaluates the best-seen configuration and — since the policy has been
+    fitted to *denoise* observations via the metric state — the policy's own
+    exploit-mode candidate, keeping the better. The paper's plateau behaviour
+    ('recommends the best it has seen so far') is preserved because the policy
+    candidate only replaces best-seen when it truly wins. Returns
+    ``(config, evaluated_metrics, replaced)``.
+    """
+    best_metrics = evaluate(best_config)
+    if policy_config != best_config:
+        policy_metrics = evaluate(policy_config)
+        if (scalarizer.objective(policy_metrics)
+                > scalarizer.objective(best_metrics)):
+            return dict(policy_config), policy_metrics, True
+    return dict(best_config), best_metrics, False
+
+
 @dataclasses.dataclass
 class TuningResult:
     best_config: dict
@@ -77,13 +111,7 @@ class Tuner:
     # ------------------------------------------------------------------
 
     def _evaluate(self, config: dict, runs: int) -> dict:
-        """Average metrics over ``runs`` long evaluation runs (paper: 30 min x3)."""
-        acc: dict = {}
-        for _ in range(runs):
-            m = self.env.apply(config, eval_run=True)
-            for k, v in m.items():
-                acc[k] = acc.get(k, 0.0) + v / runs
-        return acc
+        return evaluate_config(self.env, config, runs)
 
     def _state(self, metrics: dict) -> np.ndarray:
         return normalize_state(metrics, self.env.metric_specs, self.env.state_metrics)
@@ -130,22 +158,15 @@ class Tuner:
             self._cur_config = config
             self._cur_metrics = metrics
 
-        # Final recommendation: the best-seen configuration, and — since the
-        # policy has been fitted to *denoise* observations via the metric
-        # state — the policy's own exploit-mode recommendation. Evaluate both
-        # (3 long runs each) and keep the better; §III-E's plateau behaviour
-        # ('recommends the best it has seen so far') is preserved because the
-        # policy candidate only replaces best-seen when it truly wins.
-        best_metrics = self._evaluate(self.best_config, runs=self.eval_runs)
         policy_action = self.agent.act(self._state(self._cur_metrics), explore=False)
         policy_config = self.env.param_space.to_config(policy_action)
-        if policy_config != self.best_config:
-            policy_metrics = self._evaluate(policy_config, runs=self.eval_runs)
-            if (self.scalarizer.objective(policy_metrics)
-                    > self.scalarizer.objective(best_metrics)):
-                self.best_config, best_metrics = policy_config, policy_metrics
-                self.best_metrics = dict(policy_metrics)
-                self.best_objective = self.scalarizer.objective(policy_metrics)
+        config, best_metrics, replaced = recommend_final(
+            self.scalarizer, self.best_config, policy_config,
+            lambda c: self._evaluate(c, runs=self.eval_runs))
+        if replaced:
+            self.best_config = config
+            self.best_metrics = dict(best_metrics)
+            self.best_objective = self.scalarizer.objective(best_metrics)
         return TuningResult(
             best_config=dict(self.best_config),
             best_objective=self.scalarizer.objective(best_metrics),

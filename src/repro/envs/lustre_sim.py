@@ -43,7 +43,7 @@ from repro.envs.metrics import (
     lustre_metric_specs,
     MiB,
 )
-from repro.envs.workloads import WORKLOADS, Workload
+from repro.envs.workloads import WORKLOADS, Workload, param_arrays
 
 # -- cluster constants (paper §III-B) ---------------------------------------
 NUM_OSTS = 6
@@ -74,6 +74,74 @@ def extended_param_space() -> ParamSpace:
         ParamSpec("service_threads", "choice",
                   values=(8, 16, 32, 64, 128, 256, 512), default=64),
     ))
+
+
+def batch_mean_performance(envs, configs) -> list:
+    """Noise-free response surface for N (env, config) sessions in one pass.
+
+    THE surface implementation: ``LustreSimEnv.mean_performance`` is the
+    N == 1 case, so the fleet fast path (one vectorized evaluation per fleet
+    step) and the scalar path agree by construction. Per-session workload
+    shape parameters come from ``workloads.param_arrays``.
+    """
+    if len(envs) != len(configs):
+        raise ValueError("need one config per env")
+    for env, config in zip(envs, configs):
+        if not env.param_space.validate(config):
+            raise ValueError(f"invalid config {config}")
+
+    w = param_arrays([env.workload for env in envs])
+    sc = np.array([int(c["stripe_count"]) for c in configs])
+    ss = np.array([int(c["stripe_size"]) for c in configs])
+    gamma, beta = w["gamma"], w["beta"]
+    l_gate, gate_width = w["l_gate"], w["gate_width"]
+    l_opt, l_width, s_amp = w["l_opt"], w["l_width"], w["s_amp"]
+    base, io_kib = w["base_mbps"], w["io_kib"]
+
+    l = np.log2(ss / (64 * 1024))
+
+    # striping parallelism vs contention
+    p = sc ** gamma * np.exp(-beta * (sc - 1))
+    # striping-efficiency gate: wide layouts only pay off with stripes big
+    # enough for full-size RPCs (narrow ridge in (sc, ss) space -> strong
+    # parameter interaction, the paper's 'dependencies among parameters')
+    r_gate = 1.0 / (1.0 + np.exp(-(l - l_gate) / gate_width))
+    p_eff = np.where(p >= 1.0, 1.0 + (p - 1.0) * r_gate, p)
+
+    # stripe-size response, normalized to 1 at the default (1 MiB)
+    def s_raw(ll):
+        return 1.0 + s_amp * (1.0 - ((ll - l_opt) / l_width) ** 2)
+
+    s = np.maximum(0.4, s_raw(l)) / np.maximum(0.4, s_raw(L_DEFAULT))
+    # interaction: stripes wider than ~16 MiB underfill wide layouts
+    x = 1.0 - 0.03 * np.maximum(0, sc - 1) * np.maximum(0.0, l - 8.0)
+    x = np.maximum(0.6, x)
+
+    t = base * p_eff * s * x
+
+    # beyond-paper knob: OSS service threads (peak near 128)
+    threads = np.array([float(c.get("service_threads", 0)) for c in configs])
+    has_threads = threads > 0
+    if has_threads.any():
+        th = np.where(has_threads, threads, 1.0)
+        factor = 0.75 + 0.33 * np.exp(-((np.log2(th) - 7.0) / 3.0) ** 2)
+        t = np.where(has_threads, t * factor, t)
+
+    # physical caps: client NICs in aggregate; sc OSTs of media bandwidth
+    t = np.minimum(np.minimum(t, NET_CAP * 0.95), sc * HDD_MBPS * 1.05)
+
+    # IOPS: ops rate = bytes / effective op size; finer stripes raise the
+    # server-visible op rate (RPC amplification) — the multi-objective
+    # tension of §III-D.
+    amp = 1.0 + 0.6 * np.maximum(0.0, (L_DEFAULT - l)) / L_DEFAULT
+    iops = t * 1024.0 / io_kib * amp
+    util = t / NET_CAP
+
+    return [
+        {"throughput": float(t[i]), "iops": float(iops[i]),
+         "util": float(util[i]), "l": float(l[i]), "sc": int(sc[i])}
+        for i in range(len(envs))
+    ]
 
 
 class LustreSimEnv(TuningEnvironment):
@@ -108,48 +176,10 @@ class LustreSimEnv(TuningEnvironment):
         """Noise-free steady-state performance + internals for a config.
 
         Exposed separately so tests/benchmarks can query the true surface
-        (e.g. to locate the global optimum for regret checks).
+        (e.g. to locate the global optimum for regret checks). The N == 1
+        case of ``batch_mean_performance`` — one shared surface implementation.
         """
-        w = self.workload
-        sc = int(config["stripe_count"])
-        ss = int(config["stripe_size"])
-        if not self.param_space.validate(config):
-            raise ValueError(f"invalid config {config}")
-        l = float(np.log2(ss / (64 * 1024)))
-
-        # striping parallelism vs contention
-        p = sc ** w.gamma * np.exp(-w.beta * (sc - 1))
-        # striping-efficiency gate: wide layouts only pay off with stripes big
-        # enough for full-size RPCs (narrow ridge in (sc, ss) space -> strong
-        # parameter interaction, the paper's 'dependencies among parameters')
-        r_gate = 1.0 / (1.0 + np.exp(-(l - w.l_gate) / w.gate_width))
-        p_eff = 1.0 + (p - 1.0) * r_gate if p >= 1.0 else p
-        # stripe-size response, normalized to 1 at the default (1 MiB)
-        def s_raw(ll):
-            return 1.0 + w.s_amp * (1.0 - ((ll - w.l_opt) / w.l_width) ** 2)
-        s = max(0.4, s_raw(l)) / max(0.4, s_raw(L_DEFAULT))
-        # interaction: stripes wider than ~16 MiB underfill wide layouts
-        x = 1.0 - 0.03 * max(0, sc - 1) * max(0.0, l - 8.0)
-        x = max(0.6, x)
-
-        t = w.base_mbps * p_eff * s * x
-
-        # beyond-paper knob: OSS service threads (peak near 128)
-        if "service_threads" in config:
-            th = float(config["service_threads"])
-            t *= 0.75 + 0.33 * np.exp(-((np.log2(th) - 7.0) / 3.0) ** 2)
-
-        # physical caps: client NICs in aggregate; sc OSTs of media bandwidth
-        t = min(t, NET_CAP * 0.95, sc * HDD_MBPS * 1.05)
-
-        # IOPS: ops rate = bytes / effective op size; finer stripes raise the
-        # server-visible op rate (RPC amplification) — the multi-objective
-        # tension of §III-D.
-        amp = 1.0 + 0.6 * max(0.0, (L_DEFAULT - l)) / L_DEFAULT
-        iops = t * 1024.0 / w.io_kib * amp
-
-        util = t / NET_CAP
-        return {"throughput": t, "iops": iops, "util": util, "l": l, "sc": sc}
+        return batch_mean_performance([self], [config])[0]
 
     def _internal_metrics(self, perf: dict, rng: np.random.Generator) -> dict:
         """Table-I metrics, consistent with the delivered performance."""
@@ -196,7 +226,17 @@ class LustreSimEnv(TuningEnvironment):
         ``eval_run``: final-evaluation runs are 30 minutes instead of 2 (paper
         §III-B) — longer runs average down the run-to-run variance by ~sqrt(T).
         """
-        perf = self.mean_performance(config)
+        return self._run_with_perf(self.mean_performance(config), config,
+                                   eval_run)
+
+    def _run_with_perf(self, perf: dict, config: dict,
+                       eval_run: bool = False) -> dict:
+        """The stochastic half of ``apply``: noise, cache warmth, sampling.
+
+        Split out so the fleet path can compute ``perf`` for every session in
+        one vectorized ``batch_mean_performance`` call and still consume each
+        environment's RNG stream exactly as the scalar ``apply`` would.
+        """
         w = self.workload
         run_seconds = 1800.0 if eval_run else self.run_seconds
 

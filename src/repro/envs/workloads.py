@@ -17,6 +17,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 
 @dataclasses.dataclass(frozen=True)
 class Workload:
@@ -45,6 +47,18 @@ class Workload:
     # out in 30-minute evaluation runs. This is the explainable part of the
     # measurement variance (the unexplainable part is noise_sigma).
     cache_kappa: float = 0.30
+
+
+def param_arrays(workloads) -> dict:
+    """Per-workload shape parameters packed as {field: np.array([N])}.
+
+    The vectorized response surface (``lustre_sim.batch_mean_performance``)
+    evaluates N sessions with different workloads in one numpy pass; this
+    keeps the field list in the module that owns the dataclass.
+    """
+    fields = ("base_mbps", "gamma", "beta", "l_opt", "l_width", "s_amp",
+              "io_kib", "l_gate", "gate_width")
+    return {f: np.array([getattr(w, f) for w in workloads]) for f in fields}
 
 
 WORKLOADS = {

@@ -3,6 +3,10 @@ action mapping, replay buffer FIFO, scalarization/reward."""
 
 import numpy as np
 import pytest
+
+# Declared in requirements.txt / pyproject's test extra; skip the whole
+# property lane (instead of erroring collection) where it isn't installed.
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

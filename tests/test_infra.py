@@ -17,6 +17,10 @@ from repro.training import TrainConfig, Trainer, TrainerConfig, make_train_step
 from repro.training.compression import topk_error_feedback
 from repro.training.trainer import StragglerAbort
 
+# Model-training infrastructure (trainer steps on real model configs,
+# compile-heavy): slow lane alongside the model/sharding suites.
+pytestmark = pytest.mark.slow
+
 
 # ---------------------------------------------------------------------------
 # Data pipeline

@@ -12,6 +12,9 @@ from repro.kernels.gmm import gmm
 from repro.kernels.mamba2_scan import ssd_scan
 from repro.kernels.rwkv6 import wkv6_scan
 
+# Model-layer kernel sweeps (Pallas interpret mode, compile-heavy): slow lane.
+pytestmark = pytest.mark.slow
+
 RNG = np.random.default_rng(42)
 
 

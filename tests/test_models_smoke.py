@@ -13,6 +13,10 @@ from repro.models import (
 )
 from repro.training import TrainConfig, make_train_step
 
+# ~80 s of per-arch compile-heavy smoke tests: slow lane (CI runs -m slow
+# separately; the fast lane stays under a minute).
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 

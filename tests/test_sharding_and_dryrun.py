@@ -13,6 +13,9 @@ import textwrap
 
 import pytest
 
+# Each test forks a fresh 8-device-CPU subprocess (compile-heavy): slow lane.
+pytestmark = pytest.mark.slow
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
@@ -87,7 +90,10 @@ def test_sharded_train_step_matches_single_device():
     assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4, (m1, m2)
     d = jtu.tree_map(lambda a, b: float(jnp.max(jnp.abs(
         a.astype(jnp.float32) - b.astype(jnp.float32)))), p1, p2)
-    assert max(jtu.tree_leaves(d)) < 1e-4
+    # Post-step params tolerate one learning-rate of drift: first-step Adam
+    # normalizes each grad by its own magnitude, so cross-device reduction
+    # order can flip near-zero coordinates by up to lr (=1e-3).
+    assert max(jtu.tree_leaves(d)) < 1e-3, max(jtu.tree_leaves(d))
     print("OK loss", float(m1["loss"]))
     """
     assert "OK" in run_subprocess(body)
@@ -132,6 +138,10 @@ def test_compressed_pmean_in_shard_map():
     body = """
     import jax, numpy as np, jax.numpy as jnp, functools
     from jax.sharding import PartitionSpec as P
+    try:
+        from jax import shard_map          # jax >= 0.5
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
     from repro.launch.mesh import make_test_mesh
     from repro.training.compression import compress_and_pmean
 
@@ -144,8 +154,8 @@ def test_compressed_pmean_in_shard_map():
         out, new_r = compress_and_pmean(gs[0], rs[0], "data", 0.5)
         return out[None], new_r[None]
 
-    fn = jax.shard_map(body, mesh=mesh, in_specs=(P("data"), P("data")),
-                       out_specs=(P("data"), P("data")))
+    fn = shard_map(body, mesh=mesh, in_specs=(P("data"), P("data")),
+                   out_specs=(P("data"), P("data")))
     reduced, new_r = fn(g, r)
     # every shard's reduced view is the same pmean of the sparsified grads
     assert reduced.shape == (8, 16)

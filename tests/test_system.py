@@ -4,6 +4,7 @@ the calibrated Lustre environment, plus the beyond-paper sharding
 environment driven by the SAME agent code."""
 
 import numpy as np
+import pytest
 
 from repro.core import DDPGConfig, MagpieAgent, Scalarizer, Tuner
 from repro.envs import LustreSimEnv
@@ -37,6 +38,7 @@ def test_end_to_end_multi_objective():
     assert res.gain("throughput") > 0.0
 
 
+@pytest.mark.slow  # ~30 s: repeatedly recompiles train cells while tuning
 def test_sharding_env_with_magpie_agent():
     """The paper's technique as a first-class framework feature: tune this
     framework's own static compile parameters with the SAME agent."""
