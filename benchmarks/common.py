@@ -11,9 +11,7 @@ from repro.envs import LustreSimEnv
 
 def make_magpie(env, weights, seed: int):
     scal = Scalarizer(weights=weights, specs=env.metric_specs)
-    agent = MagpieAgent(
-        DDPGConfig(state_dim=env.state_dim, action_dim=env.action_dim),
-        seed=seed)
+    agent = MagpieAgent(DDPGConfig.for_env(env), seed=seed)
     return Tuner(env, scal, agent), scal
 
 
@@ -22,18 +20,23 @@ def make_bestconfig(env, weights, seed: int, round_size: int = 100):
     return BestConfigTuner(env, scal, seed=seed, round_size=round_size), scal
 
 
-def run_pair(workload: str, weights, steps: int, seeds) -> dict:
-    """Run Magpie + BestConfig over seeds; return mean/sd gains per metric."""
+def run_pair(workload: str, weights, steps: int, seeds,
+             env_cls=LustreSimEnv) -> dict:
+    """Run Magpie + BestConfig over seeds; return mean/sd gains per metric.
+
+    ``env_cls`` picks the space: ``LustreSimEnv`` (the paper's 2-D pair) or
+    ``LustreSimV2`` (the 8-knob space) — the tuners size themselves from the
+    environment's ``ParamSpace``.
+    """
     out = {"magpie": {}, "bestconfig": {}}
     metrics = list(weights)
     acc = {m: {k: [] for k in metrics} for m in out}
     for seed in seeds:
-        tuner, _ = make_magpie(LustreSimEnv(workload, seed=seed), weights,
-                               seed)
+        tuner, _ = make_magpie(env_cls(workload, seed=seed), weights, seed)
         res = tuner.run(steps)
         for k in metrics:
             acc["magpie"][k].append(res.gain(k))
-        bc, _ = make_bestconfig(LustreSimEnv(workload, seed=seed + 100),
+        bc, _ = make_bestconfig(env_cls(workload, seed=seed + 100),
                                 weights, seed)
         res_b = bc.run(steps)
         for k in metrics:

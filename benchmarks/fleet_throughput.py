@@ -8,7 +8,11 @@ Two measurements back the fleet subsystem's perf claims:
      ``lax.scan`` dispatch). The paper's Table III reports 0.72 s per model
      update on an RTX 5000; the fused path collapses the dispatch overhead
      that dominates at this model size.
-  2. Fleet scaling — wall time per tuning step for N concurrent sessions
+  2. Dimensionality — fused learn step on the paper's 2-D space vs the
+     8-knob ``LustreSimV2`` space (must stay within ~1.2x: the step is
+     dispatch-dominated, so higher-dimensional spaces cost tuning steps,
+     not per-step wall clock).
+  3. Fleet scaling — wall time per tuning step for N concurrent sessions
      (vmapped learner + vectorized response surface) vs N sequential
      single-session tuners.
 
@@ -25,7 +29,7 @@ import numpy as np
 
 from benchmarks.common import csv_row
 from repro.core import DDPGConfig, FleetTuner, MagpieAgent, Scalarizer, Tuner
-from repro.envs import LustreSimEnv
+from repro.envs import LustreSimEnv, LustreSimV2
 
 
 def _fill_buffer(agent: MagpieAgent, n: int, rng: np.random.Generator) -> None:
@@ -61,6 +65,36 @@ def bench_learn_paths(env_steps: int, updates: int) -> list:
                         updates, "1.0"))
     rows.append(csv_row("fused_learn_scan", f"{times[True]:.4f}", 1,
                         f"{times[False] / times[True]:.1f}"))
+    return rows
+
+
+def bench_dimensionality(env_steps: int, updates: int) -> list:
+    """Fused learn step cost: paper 2-D space vs the 8-knob V2 space.
+
+    The learner is sized from each space via ``DDPGConfig.for_env`` (same
+    hidden trunk, wider action head at 8-D). The fused ``lax.scan`` step is
+    dispatch-dominated at this model size, so growing the space 2-D -> 8-D
+    must stay within ~1.2x per-step time — dimensionality costs tuning steps
+    (sample complexity), not wall clock per step.
+    """
+    rng = np.random.default_rng(0)
+    rows = [csv_row("space", "action_dim", "per_step_seconds",
+                    "ratio_vs_2d")]
+    times = {}
+    for name, env in (("paper_2d", LustreSimEnv("seq_write", seed=0)),
+                      ("magpie8_8d", LustreSimV2("seq_write", seed=0))):
+        cfg = DDPGConfig.for_env(env, updates_per_step=updates)
+        agent = MagpieAgent(cfg, seed=0)
+        _fill_buffer(agent, 32, np.random.default_rng(1))
+        agent.learn()  # warm up compilation outside the timer
+        t0 = time.perf_counter()
+        for _ in range(env_steps):
+            _fill_buffer(agent, 1, rng)
+            agent.learn()
+        times[name] = (time.perf_counter() - t0) / env_steps
+        rows.append(csv_row(
+            name, cfg.action_dim, f"{times[name]:.4f}",
+            f"{times[name] / times['paper_2d']:.2f}"))
     return rows
 
 
@@ -101,9 +135,11 @@ def bench_fleet_scaling(fleet_sizes: list, steps: int) -> list:
 def run(quick: bool = False) -> list:
     if quick:
         rows = bench_learn_paths(env_steps=3, updates=24)
+        rows += [""] + bench_dimensionality(env_steps=3, updates=24)
         rows += [""] + bench_fleet_scaling([1, 4], steps=2)
     else:
         rows = bench_learn_paths(env_steps=10, updates=96)
+        rows += [""] + bench_dimensionality(env_steps=10, updates=96)
         rows += [""] + bench_fleet_scaling([1, 4, 8, 16], steps=5)
     return rows
 

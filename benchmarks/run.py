@@ -48,7 +48,7 @@ def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--quick", action="store_true", help="reduced seeds/steps")
     p.add_argument("--only", default="",
-                   help="fig4|fig5|fig6|fig7|table3|fleet|dryrun")
+                   help="fig4|fig5|fig6|fig7|table3|fleet|highdim|dryrun")
     args = p.parse_args()
 
     seeds = (0,) if args.quick else (0, 1, 2)
@@ -56,7 +56,7 @@ def main() -> None:
 
     from benchmarks import (fig4_single_objective, fig5_multi_objective,
                             fig6_steps, fig7_progressive, fleet_throughput,
-                            table3_timing)
+                            highdim_gap, table3_timing)
 
     benches = {
         "fig4": ("Fig. 4 — single-objective throughput tuning (30 steps)",
@@ -75,6 +75,11 @@ def main() -> None:
                    lambda: table3_timing.run(steps=steps)),
         "fleet": ("Fleet tuning — fused learner + vmapped sessions",
                   lambda: fleet_throughput.run(quick=args.quick)),
+        "highdim": ("High-dim gap — Magpie vs BestConfig, 2-D vs 8-knob",
+                    lambda: highdim_gap.run(
+                        seeds=seeds, steps=steps,
+                        workloads=("seq_write",) if args.quick
+                        else ("seq_write", "video_server", "random_rw"))),
         "dryrun_baseline": (
             "Dry-run / roofline table — paper-faithful BASELINE",
             lambda: _dryrun_summary(

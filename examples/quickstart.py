@@ -15,10 +15,8 @@ def main() -> None:
     # Objective: throughput only (paper §III-C); weights define preference.
     scal = Scalarizer(weights={"throughput": 1.0}, specs=env.metric_specs)
 
-    # The agent: DDPG over the (stripe_count, stripe_size) space.
-    agent = MagpieAgent(
-        DDPGConfig(state_dim=env.state_dim, action_dim=env.action_dim),
-        seed=0)
+    # The agent: DDPG sized from the (stripe_count, stripe_size) ParamSpace.
+    agent = MagpieAgent(DDPGConfig.for_env(env), seed=0)
 
     tuner = Tuner(env, scal, agent)
     result = tuner.run(steps=30)  # paper's budget

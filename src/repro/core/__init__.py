@@ -2,13 +2,17 @@
 
 Public API:
     ParamSpec / ParamSpace       -- the m-dimensional static parameter space
+                                    (continuous/discrete/choice/categorical/
+                                    boolean/log2_int kinds, vectorized
+                                    unit<->config round-trip)
     MetricSpec / Scalarizer      -- state normalization + multi-objective reward
     ReplayBuffer                 -- FIFO memory pool (single session)
     BatchedReplayBuffer          -- device-resident per-session FIFO fleet pool
-    DDPGConfig / MagpieAgent     -- the RL agent (fused scan learner)
+    DDPGConfig / MagpieAgent     -- the RL agent (fused scan learner); size it
+                                    from a space with DDPGConfig.for_env/for_space
     Tuner                        -- the Fig.1 tuning loop
     FleetAgent / FleetTuner      -- N vmapped sessions as one fused program
-    baselines.BestConfigTuner    -- the paper's baseline
+    baselines.BestConfigTuner    -- the paper's baseline (plus grid/random)
 """
 
 from repro.core.action_mapping import ParamSpec, ParamSpace
@@ -19,8 +23,11 @@ from repro.core.ddpg import (
     fleet_act, fleet_init, fleet_learn_scan, sample_minibatch_indices,
 )
 from repro.core.agent import MagpieAgent
-from repro.core.tuner import Tuner, TuningResult, StepRecord
+from repro.core.tuner import Tuner, TuningResult, StepRecord, evaluate_config
 from repro.core.fleet import FleetAgent, FleetResult, FleetTuner
+from repro.core.baselines import (
+    BestConfigTuner, GridSearchTuner, RandomSearchTuner,
+)
 
 __all__ = [
     "ParamSpec", "ParamSpace", "MetricSpec", "Scalarizer", "normalize_state",
@@ -28,6 +35,7 @@ __all__ = [
     "DDPGConfig", "DDPGState", "OUNoise",
     "ddpg_init", "ddpg_update", "ddpg_learn_scan", "sample_minibatch_indices",
     "fleet_init", "fleet_act", "fleet_learn_scan",
-    "MagpieAgent", "Tuner", "TuningResult", "StepRecord",
+    "MagpieAgent", "Tuner", "TuningResult", "StepRecord", "evaluate_config",
     "FleetAgent", "FleetResult", "FleetTuner",
+    "BestConfigTuner", "GridSearchTuner", "RandomSearchTuner",
 ]

@@ -21,7 +21,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.scalarization import Scalarizer
-from repro.core.tuner import StepRecord, TuningResult
+from repro.core.tuner import StepRecord, TuningResult, evaluate_config
 
 
 @dataclasses.dataclass
@@ -61,12 +61,7 @@ class BestConfigTuner:
         self._best_unit = env.param_space.to_action(self.default_config).astype(float)
 
     def _evaluate(self, config: dict, runs: int) -> dict:
-        acc: dict = {}
-        for _ in range(runs):
-            m = self.env.apply(config, eval_run=True)
-            for k, v in m.items():
-                acc[k] = acc.get(k, 0.0) + v / runs
-        return acc
+        return evaluate_config(self.env, config, runs)
 
     # -- DDS ----------------------------------------------------------------
 

@@ -6,15 +6,27 @@ from __future__ import annotations
 import time
 
 from repro.core.scalarization import Scalarizer
-from repro.core.tuner import StepRecord, TuningResult
+from repro.core.tuner import StepRecord, TuningResult, evaluate_config
 
 
 class GridSearchTuner:
     def __init__(self, env, scalarizer: Scalarizer, points_per_dim: int = 8,
-                 eval_runs: int = 3):
+                 eval_runs: int = 3, max_grid_points: int = 200_000):
+        """The grid is sized from the ``ParamSpace``: each axis contributes
+        ``min(points_per_dim, cardinality)`` points (a boolean axis is 2, the
+        11-value stripe-size axis at most 11), and construction fails fast if
+        the Cartesian product still exceeds ``max_grid_points`` — exhaustive
+        search stops being an oracle in high-dimensional mixed spaces, which is
+        the paper's motivation for RL over black-box search."""
         self.env = env
         self.scalarizer = scalarizer
         self.points_per_dim = points_per_dim
+        n = env.param_space.grid_size(points_per_dim)
+        if n > max_grid_points:
+            raise ValueError(
+                f"grid of {n} points over {env.param_space.dim}-D space "
+                f"exceeds max_grid_points={max_grid_points}; lower "
+                f"points_per_dim or use a search baseline")
         self.eval_runs = eval_runs
         self.history: list = []
         self.simulated_restart_seconds = 0.0
@@ -26,12 +38,7 @@ class GridSearchTuner:
         self.best_objective = scalarizer.objective(self.default_metrics)
 
     def _evaluate(self, config: dict, runs: int) -> dict:
-        acc: dict = {}
-        for _ in range(runs):
-            m = self.env.apply(config, eval_run=True)
-            for k, v in m.items():
-                acc[k] = acc.get(k, 0.0) + v / runs
-        return acc
+        return evaluate_config(self.env, config, runs)
 
     def run(self, steps: int = 0, learn: bool = True) -> TuningResult:
         """Ignores ``steps``; visits the full grid."""

@@ -7,10 +7,14 @@ import time
 import numpy as np
 
 from repro.core.scalarization import Scalarizer
-from repro.core.tuner import StepRecord, TuningResult
+from repro.core.tuner import StepRecord, TuningResult, evaluate_config
 
 
 class RandomSearchTuner:
+    """Samples the unit box of whatever ``ParamSpace`` the environment owns —
+    the box's dimensionality and the unit->config decoding both come from the
+    space, so the baseline runs unchanged on 2-D or 8-D mixed-type spaces."""
+
     def __init__(self, env, scalarizer: Scalarizer, eval_runs: int = 3, seed: int = 0):
         self.env = env
         self.scalarizer = scalarizer
@@ -26,12 +30,7 @@ class RandomSearchTuner:
         self.best_objective = scalarizer.objective(self.default_metrics)
 
     def _evaluate(self, config: dict, runs: int) -> dict:
-        acc: dict = {}
-        for _ in range(runs):
-            m = self.env.apply(config, eval_run=True)
-            for k, v in m.items():
-                acc[k] = acc.get(k, 0.0) + v / runs
-        return acc
+        return evaluate_config(self.env, config, runs)
 
     def run(self, steps: int, learn: bool = True) -> TuningResult:
         del learn

@@ -73,6 +73,22 @@ class DDPGConfig(NamedTuple):
     updates_per_step: int = 96  # gradient steps per environment step (Table III)
     batch_size: int = 16
 
+    @classmethod
+    def for_space(cls, state_dim: int, space, **overrides) -> "DDPGConfig":
+        """Size the learner from a ``ParamSpace``: the actor head emits one
+        coordinate per static parameter (paper §II-C-1), so ``action_dim`` is
+        ``space.dim`` — never a hand-maintained constant. The hidden trunk is
+        dimensionality-independent (the paper's single small MLP), which keeps
+        the fused learn step's cost flat as spaces grow from 2-D to 8-D.
+        """
+        return cls(state_dim=state_dim, action_dim=space.dim, **overrides)
+
+    @classmethod
+    def for_env(cls, env, **overrides) -> "DDPGConfig":
+        """Derive state/action dims from a ``TuningEnvironment``: the state is
+        its metric vector, the action its ``param_space``."""
+        return cls.for_space(env.state_dim, env.param_space, **overrides)
+
 
 class DDPGState(NamedTuple):
     actor: Any

@@ -196,22 +196,40 @@ class FleetTuner:
     @classmethod
     def from_grid(cls, workloads: Sequence[str],
                   objectives: Sequence[Mapping[str, float]],
-                  seeds: Sequence[int], *, env_factory=None,
+                  seeds: Sequence[int], *, env_factory=None, env_cls=None,
                   ddpg_config: Optional[DDPGConfig] = None,
                   buffer_capacity: int = 64, warmup_steps: int = 8,
                   eval_runs: int = 3, extended: bool = False) -> "FleetTuner":
         """Build a fleet for the full seeds x workloads x objectives grid.
 
-        ``env_factory(workload, seed)`` defaults to ``LustreSimEnv`` — the
-        paper's evaluation environment. Every grid cell is an independent
-        tuning session; session seeds are offset per cell so no two sessions
-        share an RNG stream even under the same base seed.
+        ``env_factory(workload, seed)`` defaults to ``env_cls(workload,
+        seed=seed)`` with ``env_cls=LustreSimEnv`` — the paper's evaluation
+        environment; pass ``env_cls=LustreSimV2`` for the 8-knob space. The
+        agent's dims come from the environments' ``ParamSpace``
+        (``DDPGConfig.for_env``), so the same grid code drives any space.
+        Every grid cell is an independent tuning session; session seeds are
+        offset per cell so no two sessions share an RNG stream even under the
+        same base seed.
         """
+        if env_factory is not None and env_cls is not None:
+            raise ValueError(
+                "pass env_factory OR env_cls, not both — env_cls would be "
+                "silently ignored")
         if env_factory is None:
             from repro.envs.lustre_sim import LustreSimEnv
+            env_cls = env_cls or LustreSimEnv
 
-            def env_factory(workload, seed):
-                return LustreSimEnv(workload, seed=seed, extended=extended)
+            if env_cls is LustreSimEnv:
+                def env_factory(workload, seed):
+                    return LustreSimEnv(workload, seed=seed, extended=extended)
+            else:
+                if extended:
+                    raise ValueError(
+                        "extended=True only applies to LustreSimEnv; "
+                        f"{env_cls.__name__} defines its own space")
+
+                def env_factory(workload, seed):
+                    return env_cls(workload, seed=seed)
 
         envs, scals, labels, cell_seeds = [], [], [], []
         cell = 0
@@ -229,8 +247,7 @@ class FleetTuner:
         if not envs:
             raise ValueError(
                 "empty grid: need at least one workload, objective and seed")
-        cfg = ddpg_config or DDPGConfig(state_dim=envs[0].state_dim,
-                                        action_dim=envs[0].action_dim)
+        cfg = ddpg_config or DDPGConfig.for_env(envs[0])
         agent = FleetAgent(cfg, cell_seeds, buffer_capacity=buffer_capacity,
                            warmup_steps=warmup_steps)
         return cls(envs, scals, agent, eval_runs=eval_runs, labels=labels)
@@ -290,9 +307,10 @@ class FleetTuner:
             next_states = np.stack([
                 normalize_state(m, e.metric_specs, e.state_metrics)
                 for m, e in zip(metrics, self.envs)])
-            rewards = np.array([
-                sc.reward(prev, m) for sc, prev, m in
-                zip(self.scalarizers, self._cur_metrics, metrics)], np.float32)
+            # python floats: StepRecord.reward must match Tuner's bitwise; the
+            # replay buffer narrows to float32 on add, same as the single path
+            rewards = [sc.reward(prev, m) for sc, prev, m in
+                       zip(self.scalarizers, self._cur_metrics, metrics)]
             objectives = [sc.objective(m)
                           for sc, m in zip(self.scalarizers, metrics)]
 

@@ -24,6 +24,7 @@ from typing import Any, Optional
 import numpy as np
 
 from repro.core.agent import MagpieAgent
+from repro.core.ddpg import DDPGConfig
 from repro.core.scalarization import Scalarizer, normalize_state
 
 
@@ -91,11 +92,16 @@ class TuningResult:
 
 
 class Tuner:
-    def __init__(self, env, scalarizer: Scalarizer, agent: MagpieAgent,
-                 eval_runs: int = 3):
+    def __init__(self, env, scalarizer: Scalarizer,
+                 agent: Optional[MagpieAgent] = None,
+                 eval_runs: int = 3, seed: int = 0):
+        """``agent=None`` sizes a default DDPG agent from the environment's
+        ``ParamSpace`` (``DDPGConfig.for_env``) — the network's action head and
+        the search box both follow the space, whether it is the paper's 2-D
+        stripe space or an 8-D mixed-type space."""
         self.env = env
         self.scalarizer = scalarizer
-        self.agent = agent
+        self.agent = agent or MagpieAgent(DDPGConfig.for_env(env), seed=seed)
         self.eval_runs = eval_runs
         self.history: list = []
         self.simulated_restart_seconds = 0.0

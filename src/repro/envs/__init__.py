@@ -1,11 +1,26 @@
 from repro.envs.base import TuningEnvironment
-from repro.envs.metrics import MetricsCollector, lustre_metric_specs
+from repro.envs.metrics import (
+    LUSTRE_STATE_METRICS,
+    MetricsCollector,
+    couple_client_knobs,
+    lustre_metric_specs,
+)
 from repro.envs.workloads import WORKLOADS, Workload
-from repro.envs.lustre_sim import LustreSimEnv
+from repro.envs.lustre_sim import (
+    LustreSimEnv,
+    LustreSimV2,
+    batch_mean_performance,
+    extended_param_space,
+    magpie8_param_space,
+    paper_param_space,
+)
 
 __all__ = [
     "TuningEnvironment", "MetricsCollector", "lustre_metric_specs",
-    "WORKLOADS", "Workload", "LustreSimEnv",
+    "LUSTRE_STATE_METRICS", "couple_client_knobs",
+    "WORKLOADS", "Workload",
+    "LustreSimEnv", "LustreSimV2", "batch_mean_performance",
+    "paper_param_space", "extended_param_space", "magpie8_param_space",
 ]
 
 # NB: envs.sharding_env is imported lazily (it pulls in launch/roofline);

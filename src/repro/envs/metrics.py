@@ -12,6 +12,8 @@ from __future__ import annotations
 import collections
 from typing import Mapping
 
+import numpy as np
+
 from repro.core.scalarization import MetricSpec
 
 MiB = 1024.0 * 1024.0
@@ -59,6 +61,52 @@ LUSTRE_STATE_METRICS = [
     "cache_hit_ratio", "cpu_usage_idle", "cpu_usage_iowait",
     "ram_used_percent", "throughput", "iops",
 ]
+
+
+def couple_client_knobs(metrics: dict, config: Mapping, *, util: float,
+                        stripe_count: int, write_frac: float,
+                        seq: float) -> dict:
+    """Couple Table-I metrics to the client knobs of the 8-D space (§III-A).
+
+    The paper's thesis is that server *and client* metrics expose what a knob
+    did to the system — black-box search sees only the objective. This helper
+    enforces that visibility for the DIAL/CARAT-style client knobs: the metric
+    a knob limits is clamped at that limit, and cache/CPU metrics shift with
+    read-ahead and checksumming. Knobs absent from ``config`` (the paper's 2-D
+    space) leave the metrics untouched, and no RNG is consumed, so the scalar
+    and fleet sampling streams stay aligned.
+
+    ``util`` is delivered-throughput / network capacity in [0, 1]; ``seq`` is
+    the workload's sequentiality in [0, 1] (0 = random I/O).
+    """
+    out = dict(metrics)
+    if "max_rpcs_in_flight" in config:
+        # per-OSC, per-OST concurrency limit aggregated over the stripe width
+        cap = float(config["max_rpcs_in_flight"]) * max(1, int(stripe_count))
+        spill_r = max(0.0, out["read_rpcs_in_flight"] - cap)
+        spill_w = max(0.0, out["write_rpcs_in_flight"] - cap)
+        out["read_rpcs_in_flight"] = min(out["read_rpcs_in_flight"], cap)
+        out["write_rpcs_in_flight"] = min(out["write_rpcs_in_flight"], cap)
+        # RPCs denied a slot queue as pending pages (256 pages per 1 MiB RPC)
+        out["pending_read_pages"] += spill_r * 256.0
+        out["pending_write_pages"] += spill_w * 256.0
+    if "max_dirty_mb" in config:
+        cap = float(config["max_dirty_mb"]) * MiB
+        out["cur_dirty_bytes"] = min(out["cur_dirty_bytes"], cap)
+        out["cur_grant_bytes"] = min(out["cur_grant_bytes"],
+                                     2.0 * cap + 32.0 * MiB)
+    if "read_ahead_mb" in config:
+        ra = float(config["read_ahead_mb"])
+        h = 1.0 - np.exp(-ra / 48.0)
+        h0 = 1.0 - np.exp(-64.0 / 48.0)
+        shift = 0.10 * (1.0 - write_frac) * seq * (h / h0 - 1.0)
+        out["cache_hit_ratio"] = float(
+            np.clip(out["cache_hit_ratio"] + shift, 0.0, 1.0))
+    if "checksums" in config and bool(config["checksums"]):
+        # CRC32 on every RPC burns client/server CPU proportional to traffic
+        out["cpu_usage_idle"] = float(
+            np.clip(out["cpu_usage_idle"] - 8.0 * util, 0.0, 100.0))
+    return out
 
 
 class MetricsCollector:

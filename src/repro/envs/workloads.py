@@ -57,7 +57,7 @@ def param_arrays(workloads) -> dict:
     keeps the field list in the module that owns the dataclass.
     """
     fields = ("base_mbps", "gamma", "beta", "l_opt", "l_width", "s_amp",
-              "io_kib", "l_gate", "gate_width")
+              "io_kib", "l_gate", "gate_width", "write_frac", "meta_rate")
     return {f: np.array([getattr(w, f) for w in workloads]) for f in fields}
 
 

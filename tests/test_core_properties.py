@@ -65,6 +65,86 @@ def test_duplicate_names_rejected():
 
 
 # ---------------------------------------------------------------------------
+# Mixed-kind spaces (8-D generalization): log2_int / boolean / categorical
+# ---------------------------------------------------------------------------
+
+MIXED = ParamSpace(specs=(
+    ParamSpec("lin", "continuous", minimum=-2.0, maximum=5.0),
+    ParamSpec("disc", "discrete", minimum=1, maximum=6),
+    ParamSpec("pow2", "log2_int", minimum=4, maximum=2048),
+    ParamSpec("flag", "boolean", default=True),
+    ParamSpec("cat", "categorical", values=("a", "b", "c")),
+    ParamSpec("choice", "choice", values=(64, 128, 256, 512)),
+))
+
+
+@given(st.lists(st.floats(0, 1), min_size=6, max_size=6))
+@settings(max_examples=200, deadline=None)
+def test_mixed_action_to_config_always_valid(action):
+    cfg = MIXED.to_config(action)
+    assert MIXED.validate(cfg)
+    assert isinstance(cfg["flag"], bool)
+    assert cfg["pow2"] & (cfg["pow2"] - 1) == 0  # power of two
+    assert cfg["cat"] in ("a", "b", "c")
+
+
+@given(st.integers(1, 6), st.integers(2, 11), st.booleans(),
+       st.sampled_from(("a", "b", "c")), st.sampled_from((64, 128, 256, 512)),
+       st.floats(-2.0, 5.0))
+@settings(max_examples=200, deadline=None)
+def test_mixed_config_roundtrip(disc, pow2_exp, flag, cat, choice, lin):
+    """unit -> config -> unit -> config is the identity on every finite kind
+    (continuous round-trips to within float tolerance)."""
+    cfg = {"lin": lin, "disc": disc, "pow2": 2 ** pow2_exp, "flag": flag,
+           "cat": cat, "choice": choice}
+    assert MIXED.validate(cfg)
+    back = MIXED.to_config(MIXED.to_action(cfg))
+    for k in ("disc", "pow2", "flag", "cat", "choice"):
+        assert back[k] == cfg[k], k
+    assert abs(back["lin"] - lin) < 1e-4
+
+
+@given(st.lists(st.lists(st.floats(0, 1), min_size=6, max_size=6),
+                min_size=1, max_size=8))
+@settings(max_examples=50, deadline=None)
+def test_vectorized_roundtrip_matches_scalar(actions):
+    """to_configs/to_actions (the fleet fast path) == the scalar maps."""
+    acts = np.array(actions)
+    batch = MIXED.to_configs(acts)
+    assert batch == [MIXED.to_config(a) for a in acts]
+    units = MIXED.to_actions(batch)
+    np.testing.assert_array_equal(
+        units, np.stack([MIXED.to_action(c) for c in batch]))
+    # the round-trip is idempotent: every finite-kind value survives
+    # unit-space re-encoding exactly; continuous within float32 tolerance
+    for back, cfg in zip(MIXED.to_configs(units), batch):
+        for key in ("disc", "pow2", "flag", "cat", "choice"):
+            assert back[key] == cfg[key], key
+        assert abs(back["lin"] - cfg["lin"]) < 1e-5
+
+
+def test_cardinality_and_grid_capping():
+    cards = {s.name: s.cardinality for s in MIXED.specs}
+    assert cards == {"lin": None, "disc": 6, "pow2": 10, "flag": 2,
+                     "cat": 3, "choice": 4}
+    # grid axes never exceed cardinality: 4*6*10*2*3*4 with ppd=100
+    assert MIXED.grid_size(100) == 100 * 6 * 10 * 2 * 3 * 4
+    grid = MIXED.grid(2)
+    assert MIXED.grid_size(2) == len(grid) == 2 * 2 * 2 * 2 * 2 * 2
+    seen_flags = {c["flag"] for c in grid}
+    assert seen_flags == {False, True}
+
+
+def test_log2_int_requires_power_of_two_bounds():
+    with pytest.raises(ValueError):
+        ParamSpec("bad", "log2_int", minimum=3, maximum=64)
+    spec = ParamSpec("ok", "log2_int", minimum=1, maximum=256)
+    assert spec.cardinality == 9
+    assert not spec.validate(100)  # not a power of two
+    assert spec.validate(128)
+
+
+# ---------------------------------------------------------------------------
 # Replay buffer (paper §II-D: limited size, FIFO)
 # ---------------------------------------------------------------------------
 

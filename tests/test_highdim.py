@@ -1,0 +1,231 @@
+"""The 8-knob ``LustreSimV2`` stack: one ``ParamSpace`` drives the env, the
+DDPG agent, the fleet, and all three baselines (ISSUE 2's tentpole).
+
+Load-bearing properties:
+  * the V2 surface reduces EXACTLY to the 2-D surface when the client knobs
+    sit at their Lustre defaults (so 2-D calibration stays authoritative);
+  * client knobs both move throughput (response surface) and are VISIBLE in
+    the Table-I metric state (the paper's thesis);
+  * a fleet of one on the 8-D space is bitwise-identical to the single Tuner;
+  * every tuner/baseline runs end-to-end from the same space definition;
+  * restart costs are attributed per scope (client knob vs DFS restart).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BestConfigTuner,
+    DDPGConfig,
+    FleetTuner,
+    GridSearchTuner,
+    MagpieAgent,
+    RandomSearchTuner,
+    Scalarizer,
+    Tuner,
+)
+from repro.envs import (
+    LustreSimEnv,
+    LustreSimV2,
+    batch_mean_performance,
+    magpie8_param_space,
+)
+
+THROUGHPUT = {"throughput": 1.0}
+
+
+def _scal(env):
+    return Scalarizer(weights=dict(THROUGHPUT), specs=env.metric_specs)
+
+
+# ---------------------------------------------------------------------------
+# Response surface
+# ---------------------------------------------------------------------------
+
+def test_v2_space_is_8d_mixed():
+    space = magpie8_param_space()
+    assert space.dim == 8
+    kinds = {s.name: s.kind for s in space.specs}
+    assert kinds["stripe_size"] == "log2_int"
+    assert kinds["checksums"] == "boolean"
+    assert kinds["service_threads"] == "categorical"
+    cfg = space.default_config()  # Lustre defaults
+    assert cfg["max_rpcs_in_flight"] == 8 and cfg["max_dirty_mb"] == 32
+    assert cfg["checksums"] is True
+    assert space.validate(cfg)
+    # the "~5.5 M distinct configurations" claim in README/docs/benchmarks
+    total = int(np.prod([s.cardinality for s in space.specs]))
+    assert total == 5_488_560
+
+
+def test_v2_defaults_reduce_to_2d_surface():
+    """With client knobs at defaults, only the service-thread factor differs
+    from the paper's 2-D surface — same surface, larger box around it."""
+    v2 = LustreSimV2("seq_write", seed=0)
+    base = LustreSimEnv("seq_write", seed=0, extended=True)
+    cfg8 = v2.param_space.default_config()
+    cfg3 = {"stripe_count": 1, "stripe_size": 1 << 20, "service_threads": 64}
+    p8 = v2.mean_performance(cfg8)
+    p3 = base.mean_performance(cfg3)
+    assert np.isclose(p8["throughput"], p3["throughput"], rtol=1e-12)
+    assert np.isclose(p8["iops"], p3["iops"], rtol=1e-12)
+
+
+def test_v2_batch_surface_matches_scalar():
+    envs, configs = [], []
+    rng = np.random.default_rng(0)
+    for i, wl in enumerate(["file_server", "video_server", "seq_write",
+                            "seq_read", "random_rw"]):
+        env = LustreSimV2(wl, seed=i)
+        envs.append(env)
+        configs.append(env.param_space.to_config(
+            rng.uniform(size=env.param_space.dim)))
+    for env, config, got in zip(envs, configs,
+                                batch_mean_performance(envs, configs)):
+        ref = env.mean_performance(config)
+        for k in ref:
+            assert np.isclose(float(ref[k]), got[k], rtol=1e-12, atol=0.0), k
+
+
+def test_client_knobs_move_throughput():
+    env = LustreSimV2("seq_write", seed=0)
+    base = env.param_space.default_config()
+    t0 = env.mean_performance(base)["throughput"]
+    # starving the RPC pipeline on a wide layout hurts
+    starved = {**base, "stripe_count": 6, "max_rpcs_in_flight": 1}
+    fed = {**base, "stripe_count": 6, "max_rpcs_in_flight": 64}
+    assert (env.mean_performance(starved)["throughput"]
+            < 0.8 * env.mean_performance(fed)["throughput"])
+    # a tiny dirty cache throttles a pure-write workload
+    assert env.mean_performance({**base, "max_dirty_mb": 4})["throughput"] < t0
+    # disabling checksums buys CPU back
+    assert env.mean_performance({**base, "checksums": False})["throughput"] > t0
+    # read-ahead is wasted on pure writes: no effect on seq_write
+    assert np.isclose(
+        env.mean_performance({**base, "read_ahead_mb": 1024})["throughput"],
+        t0, rtol=1e-9)
+    # ...but collapsing it hurts a sequential reader
+    env_r = LustreSimV2("seq_read", seed=0)
+    base_r = env_r.param_space.default_config()
+    assert (env_r.mean_performance({**base_r, "read_ahead_mb": 1})["throughput"]
+            < env_r.mean_performance(base_r)["throughput"])
+
+
+def test_client_knobs_visible_in_metric_state():
+    """The paper's thesis: a knob's limit shows up in the metric it governs."""
+    env = LustreSimV2("seq_write", seed=0)
+    base = env.param_space.default_config()
+    m_small = env.apply({**base, "max_dirty_mb": 4})
+    assert m_small["cur_dirty_bytes"] <= 4 * 1024 * 1024
+    env2 = LustreSimV2("seq_write", seed=0)
+    m_rpc = env2.apply({**base, "stripe_count": 6, "max_rpcs_in_flight": 1})
+    assert m_rpc["write_rpcs_in_flight"] <= 6.0
+    # checksums on burns CPU: less idle than the checksum-free run
+    env_on = LustreSimV2("seq_write", seed=0)
+    env_off = LustreSimV2("seq_write", seed=0)
+    on = env_on.apply({**base, "stripe_count": 6, "checksums": True})
+    off = env_off.apply({**base, "stripe_count": 6, "checksums": False})
+    assert on["cpu_usage_idle"] < off["cpu_usage_idle"]
+
+
+def test_v2_true_optimum_beats_default():
+    env = LustreSimV2("video_server", seed=0)
+    best, score = env.true_optimum(THROUGHPUT, samples=256, sweeps=1)
+    assert env.param_space.validate(best)
+    default_t = env.mean_performance(
+        env.param_space.default_config())["throughput"]
+    assert env.mean_performance(best)["throughput"] > 1.3 * default_t
+
+
+# ---------------------------------------------------------------------------
+# Restart-cost accounting
+# ---------------------------------------------------------------------------
+
+def test_restart_scopes_and_episode_accounting():
+    env = LustreSimV2("seq_read", seed=0)
+    base = env.param_space.default_config()
+    assert env.restart_cost(dict(base), dict(base)) == 0.0
+    client = env.restart_cost({**base, "max_rpcs_in_flight": 64}, base)
+    assert 12.0 <= client <= 20.0  # client knob: workload restart only
+    dfs = env.restart_cost({**base, "checksums": False}, base)
+    assert 42.0 <= dfs <= 50.0     # remount: +30 s DFS restart
+    summary = env.restart_summary()
+    assert summary["workload"]["count"] == 1
+    assert summary["dfs"]["count"] == 1
+    assert np.isclose(summary["workload"]["seconds"]
+                      + summary["dfs"]["seconds"], client + dfs)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: one ParamSpace definition drives every tuner
+# ---------------------------------------------------------------------------
+
+def test_fleet_of_one_matches_single_tuner_8d():
+    """Bitwise: same seed -> identical configs, objectives, rewards, restarts."""
+    seed, wl, steps = 5, "seq_write", 8
+    env = LustreSimV2(wl, seed=seed)
+    agent = MagpieAgent(DDPGConfig.for_env(env), seed=seed)
+    single = Tuner(env, _scal(env), agent).run(steps)
+
+    fleet = FleetTuner.from_grid([wl], [THROUGHPUT], [seed],
+                                 env_cls=LustreSimV2)
+    got = fleet.run(steps).results[0]
+
+    assert got.best_config == single.best_config
+    assert got.best_objective == single.best_objective
+    assert got.default_metrics == single.default_metrics
+    for h_s, h_f in zip(single.history, got.history):
+        assert h_f.config == h_s.config
+        assert h_f.objective == h_s.objective
+        assert h_f.reward == h_s.reward
+        assert h_f.restart_seconds == h_s.restart_seconds
+
+
+def test_all_tuners_run_on_8d_space():
+    steps = 6
+    results = {}
+    env = LustreSimV2("seq_write", seed=0)
+    agent = MagpieAgent(DDPGConfig.for_env(env), seed=0)
+    results["magpie"] = Tuner(env, _scal(env), agent, eval_runs=1).run(steps)
+    env_b = LustreSimV2("seq_write", seed=0)
+    results["bestconfig"] = BestConfigTuner(
+        env_b, _scal(env_b), round_size=6, eval_runs=1, seed=0).run(steps)
+    env_r = LustreSimV2("seq_write", seed=0)
+    results["random"] = RandomSearchTuner(
+        env_r, _scal(env_r), eval_runs=1, seed=0).run(steps)
+    env_g = LustreSimV2("seq_write", seed=0)
+    results["grid"] = GridSearchTuner(
+        env_g, _scal(env_g), points_per_dim=2, eval_runs=1).run()
+    for name, res in results.items():
+        assert res.best_config.keys() == set(env.param_space.names), name
+        assert env.param_space.validate(res.best_config), name
+        assert np.isfinite(res.best_objective), name
+
+
+def test_from_grid_rejects_conflicting_env_args():
+    with pytest.raises(ValueError):
+        FleetTuner.from_grid(["seq_write"], [THROUGHPUT], [0],
+                             env_cls=LustreSimV2,
+                             env_factory=lambda w, s: LustreSimV2(w, seed=s))
+    with pytest.raises(ValueError):
+        FleetTuner.from_grid(["seq_write"], [THROUGHPUT], [0],
+                             env_cls=LustreSimV2, extended=True)
+
+
+def test_grid_search_rejects_intractable_8d_grid():
+    env = LustreSimV2("seq_write", seed=0)
+    with pytest.raises(ValueError):
+        GridSearchTuner(env, _scal(env), points_per_dim=8)
+    assert env.param_space.grid_size(8) > 200_000
+
+
+def test_ddpg_config_sized_from_space():
+    env2 = LustreSimEnv("seq_write", seed=0)
+    env8 = LustreSimV2("seq_write", seed=0)
+    cfg2, cfg8 = DDPGConfig.for_env(env2), DDPGConfig.for_env(env8)
+    assert (cfg2.state_dim, cfg2.action_dim) == (12, 2)
+    assert (cfg8.state_dim, cfg8.action_dim) == (12, 8)
+    assert cfg8.hidden == cfg2.hidden  # trunk stays flat across spaces
+    # Tuner builds its own agent from the space when none is given
+    tuner = Tuner(env8, _scal(env8), eval_runs=1)
+    assert tuner.agent.cfg.action_dim == 8
