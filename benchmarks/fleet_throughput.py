@@ -132,16 +132,117 @@ def bench_fleet_scaling(fleet_sizes: list, steps: int) -> list:
     return rows
 
 
+class _LegacyAgent(MagpieAgent):
+    """The step-by-step host learner: ``updates_per_step`` separate jitted
+    dispatches + a host minibatch sample per update — the paper's Table III
+    per-iteration architecture, and the reference 'host loop' the episode
+    engine is measured against."""
+
+    def learn(self, updates=None):
+        return super().learn(updates=updates, fused=False)
+
+
+def _scan_tuner(workload: str, seed: int, updates: int, engine: str,
+                legacy: bool = False) -> Tuner:
+    env = LustreSimEnv(workload, seed=seed).to_model_env()
+    scal = Scalarizer(weights={"throughput": 1.0}, specs=env.metric_specs)
+    agent_cls = _LegacyAgent if legacy else MagpieAgent
+    agent = agent_cls(DDPGConfig.for_env(env, updates_per_step=updates),
+                      seed=seed)
+    return Tuner(env, scal, agent, eval_runs=1, engine=engine)
+
+
+def bench_episode_engine(fleet_sizes: list, steps: int,
+                         updates: int = 96) -> tuple:
+    """Whole-episode engine vs the host loop, on the same pure env model.
+
+    Three rungs, same algorithm and budget on every one:
+
+      host_loop        the step-by-step Fig. 1 loop with per-minibatch learner
+                       dispatches (Table III's architecture) — the baseline
+      host_loop_fused  the loop with the PR-1 fused ``ddpg_learn_scan``
+                       (one learn dispatch per step, still one host round
+                       trip per act/env/learn)
+      episode_scan /   this PR: the whole episode (act → env → reward →
+      fleet_scan       store → learn) as ONE XLA program, then N sessions
+                       vmapped on a fleet axis
+
+    Throughput is session-steps/second; ``speedup_vs_host`` is against
+    ``host_loop``. Each configuration is warmed at the measured step count so
+    compilation never lands in the timer. Returns (csv rows, summary dict) —
+    the summary feeds the repo-root BENCH_<n>.json trajectory file.
+    """
+    rows = [csv_row("engine", "sessions", "session_steps_per_sec",
+                    "speedup_vs_host")]
+
+    def timed(tuner):
+        tuner.run(steps)  # warm compilation at this episode length
+        t0 = time.perf_counter()
+        tuner.run(steps)
+        return steps / (time.perf_counter() - t0)
+
+    host_sps = timed(_scan_tuner("seq_write", 0, updates, "host", legacy=True))
+    rows.append(csv_row("host_loop", 1, f"{host_sps:.2f}", "1.0"))
+
+    fused_sps = timed(_scan_tuner("seq_write", 0, updates, "host"))
+    rows.append(csv_row("host_loop_fused", 1, f"{fused_sps:.2f}",
+                        f"{fused_sps / host_sps:.1f}"))
+
+    scan_sps = timed(_scan_tuner("seq_write", 0, updates, "scan"))
+    rows.append(csv_row("episode_scan", 1, f"{scan_sps:.2f}",
+                        f"{scan_sps / host_sps:.1f}"))
+
+    summary = {"host_loop_steps_per_sec": host_sps,
+               "host_loop_fused_steps_per_sec": fused_sps,
+               "single_scan_steps_per_sec": scan_sps, "fleets": []}
+    for n in fleet_sizes:
+        cfg = DDPGConfig.for_env(LustreSimEnv("seq_write"),
+                                 updates_per_step=updates)
+        fleet = FleetTuner.from_grid(
+            ["seq_write"], [{"throughput": 1.0}], list(range(n)),
+            engine="scan", ddpg_config=cfg, eval_runs=1)
+        fleet.run(steps)
+        t0 = time.perf_counter()
+        fleet.run(steps)
+        sps = steps * n / (time.perf_counter() - t0)
+        rows.append(csv_row("fleet_scan", n, f"{sps:.2f}",
+                            f"{sps / host_sps:.1f}"))
+        summary["fleets"].append({"sessions": n, "session_steps_per_sec": sps,
+                                  "speedup_vs_host_loop": sps / host_sps})
+    return rows, summary
+
+
+def episode_summary(quick: bool = False) -> dict:
+    """BENCH_<n>.json payload: the episode-engine perf trajectory point."""
+    if quick:
+        _, summary = bench_episode_engine([8], steps=3, updates=24)
+    else:
+        _, summary = bench_episode_engine([16, 64], steps=5, updates=96)
+    top = summary["fleets"][-1]
+    return {
+        "benchmark": "episode_engine",
+        "quick": quick,
+        "host_loop_steps_per_sec": summary["host_loop_steps_per_sec"],
+        "single_scan_steps_per_sec": summary["single_scan_steps_per_sec"],
+        "fleet_size": top["sessions"],
+        "fleet_session_steps_per_sec": top["session_steps_per_sec"],
+        "speedup_vs_host_loop": top["speedup_vs_host_loop"],
+        "fleets": summary["fleets"],
+    }
+
+
 def run(quick: bool = False) -> list:
     if quick:
         rows = bench_learn_paths(env_steps=3, updates=24)
         rows += [""] + bench_dimensionality(env_steps=3, updates=24)
         rows += [""] + bench_fleet_scaling([1, 4], steps=2)
+        erows, _ = bench_episode_engine([8], steps=3, updates=24)
     else:
         rows = bench_learn_paths(env_steps=10, updates=96)
         rows += [""] + bench_dimensionality(env_steps=10, updates=96)
         rows += [""] + bench_fleet_scaling([1, 4, 8, 16], steps=5)
-    return rows
+        erows, _ = bench_episode_engine([16, 64], steps=5, updates=96)
+    return rows + [""] + erows
 
 
 if __name__ == "__main__":

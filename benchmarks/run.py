@@ -44,11 +44,30 @@ def _dryrun_summary(path="benchmarks/results/dryrun.json") -> list:
     return rows
 
 
+def _write_bench_json(summary: dict, root: str = None) -> str:
+    """Write the perf-trajectory point as BENCH_<n>.json at the repo root.
+
+    ``<n>`` is the next free index, so successive PRs leave a monotone series
+    of summaries (steps/sec, fleet size, speedup vs host loop) that can be
+    diffed across history."""
+    root = root or os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    n = 0
+    while os.path.exists(os.path.join(root, f"BENCH_{n}.json")):
+        n += 1
+    path = os.path.join(root, f"BENCH_{n}.json")
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--quick", action="store_true", help="reduced seeds/steps")
     p.add_argument("--only", default="",
                    help="fig4|fig5|fig6|fig7|table3|fleet|highdim|dryrun")
+    p.add_argument("--no-bench-json", action="store_true",
+                   help="skip writing the BENCH_<n>.json trajectory summary")
     args = p.parse_args()
 
     seeds = (0,) if args.quick else (0, 1, 2)
@@ -95,6 +114,18 @@ def main() -> None:
         for row in fn():
             print(row, flush=True)
         print(f"[{name} done in {time.time()-t0:.1f}s]", flush=True)
+
+    if not args.no_bench_json and (not args.only or args.only == "fleet"):
+        t0 = time.time()
+        print("\n=== bench-json: episode-engine trajectory point ===",
+              flush=True)
+        summary = fleet_throughput.episode_summary(quick=args.quick)
+        path = _write_bench_json(summary)
+        print(f"wrote {path} "
+              f"(fleet {summary['fleet_size']}: "
+              f"{summary['fleet_session_steps_per_sec']:.1f} session-steps/s, "
+              f"{summary['speedup_vs_host_loop']:.1f}x host loop) "
+              f"in {time.time()-t0:.1f}s", flush=True)
 
 
 if __name__ == "__main__":

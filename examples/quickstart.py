@@ -2,15 +2,36 @@
 headline experiment, single performance indicator) in ~2 minutes on CPU.
 
     PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py --engine scan --steps 30
+
+``--engine host`` steps the Fig. 1 loop from Python against the numpy
+simulator; ``--engine scan`` runs the identical episode as ONE fused XLA
+program over the pure-JAX env model (``core.episode``) — same algorithm,
+same budget, no host boundary per step.
 """
+
+import argparse
 
 from repro.core import DDPGConfig, MagpieAgent, Scalarizer, Tuner
 from repro.envs import LustreSimEnv
 
 
 def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--engine", choices=("host", "scan"), default="host",
+                        help="host = dict loop on the numpy simulator; "
+                        "scan = fused whole-episode engine on the pure-JAX "
+                        "env model")
+    parser.add_argument("--steps", type=int, default=30,
+                        help="tuning steps (paper budget: 30)")
+    args = parser.parse_args()
+
     # Environment: 6-OST Lustre + Sequential Write workload (paper §III-B).
+    # The scan engine needs the pure-model adapter; the host engine can run
+    # either — numpy simulator kept here to match the paper scripts.
     env = LustreSimEnv("seq_write", seed=0)
+    if args.engine == "scan":
+        env = env.to_model_env()
 
     # Objective: throughput only (paper §III-C); weights define preference.
     scal = Scalarizer(weights={"throughput": 1.0}, specs=env.metric_specs)
@@ -18,9 +39,10 @@ def main() -> None:
     # The agent: DDPG sized from the (stripe_count, stripe_size) ParamSpace.
     agent = MagpieAgent(DDPGConfig.for_env(env), seed=0)
 
-    tuner = Tuner(env, scal, agent)
-    result = tuner.run(steps=30)  # paper's budget
+    tuner = Tuner(env, scal, agent, engine=args.engine)
+    result = tuner.run(steps=args.steps)
 
+    print(f"engine:           {args.engine} ({args.steps} steps)")
     print(f"default config:   {result.default_config} "
           f"-> {result.default_metrics['throughput']:.1f} MB/s")
     print(f"tuned config:     {result.best_config} "
@@ -28,7 +50,7 @@ def main() -> None:
     print(f"throughput gain:  {result.gain('throughput')*100:.1f}% "
           f"(paper: +250.4% on this workload)")
     print(f"simulated restart downtime: "
-          f"{result.simulated_restart_seconds:.0f} s over 30 tuning steps")
+          f"{result.simulated_restart_seconds:.0f} s over {args.steps} tuning steps")
 
 
 if __name__ == "__main__":

@@ -10,26 +10,47 @@ are intractable (~5.5M points) and black-box search degrades — while Magpie's
 metric state still attributes what each knob did.
 
     PYTHONPATH=src python examples/tune_8knob.py
+    PYTHONPATH=src python examples/tune_8knob.py --engine scan --steps 50
+
+With ``--engine scan`` both tuners run against the pure-JAX env model:
+Magpie's episode fuses into one XLA program (``core.episode``), and
+BestConfig pushes each DDS probe batch through the vectorized pure env in a
+single dispatch.
 """
+
+import argparse
 
 from repro.core import BestConfigTuner, DDPGConfig, MagpieAgent, Scalarizer, Tuner
 from repro.envs import LustreSimV2
 
 
 def main() -> None:
-    steps = 30  # the paper's tuning budget, now spent on an 8-D space
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--engine", choices=("host", "scan"), default="host",
+                        help="host = dict loop on the numpy simulator; "
+                        "scan = fused episode + batched probes on the "
+                        "pure-JAX env model")
+    parser.add_argument("--steps", type=int, default=30,
+                        help="tuning budget (paper: 30)")
+    args = parser.parse_args()
+    steps = args.steps
+
+    def make_env(seed):
+        env = LustreSimV2("seq_write", seed=seed)
+        return env.to_model_env() if args.engine == "scan" else env
 
     # -- Magpie: DDPG sized from the 8-D ParamSpace -------------------------
-    env = LustreSimV2("seq_write", seed=0)
+    env = make_env(0)
     scal = Scalarizer(weights={"throughput": 1.0}, specs=env.metric_specs)
     agent = MagpieAgent(DDPGConfig.for_env(env), seed=0)
-    magpie = Tuner(env, scal, agent).run(steps)
+    magpie = Tuner(env, scal, agent, engine=args.engine).run(steps)
 
     # -- BestConfig: same budget, same environment seed, objective only -----
-    env_bc = LustreSimV2("seq_write", seed=0)
+    env_bc = make_env(0)
     scal_bc = Scalarizer(weights={"throughput": 1.0}, specs=env_bc.metric_specs)
     bestconfig = BestConfigTuner(env_bc, scal_bc, round_size=10, seed=0).run(steps)
 
+    print(f"engine: {args.engine} ({steps} steps)")
     print(f"space: {env.param_space.dim}-D "
           f"({', '.join(env.param_space.names)})\n")
     print(f"default config: {magpie.default_config}")

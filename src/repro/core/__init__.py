@@ -10,7 +10,12 @@ Public API:
     BatchedReplayBuffer          -- device-resident per-session FIFO fleet pool
     DDPGConfig / MagpieAgent     -- the RL agent (fused scan learner); size it
                                     from a space with DDPGConfig.for_env/for_space
-    Tuner                        -- the Fig.1 tuning loop
+    Tuner                        -- the Fig.1 tuning loop (engine="host" dict
+                                    loop, or engine="scan" fused episodes)
+    run_episode_scan / run_fleet_episode_scan -- the whole-episode engine: act, env
+                                    step, reward, store, learn as ONE
+                                    lax.scan program (vmapped + shard_mapped
+                                    over the fleet session axis)
     FleetAgent / FleetTuner      -- N vmapped sessions as one fused program
     baselines.BestConfigTuner    -- the paper's baseline (plus grid/random)
 """
@@ -24,6 +29,9 @@ from repro.core.ddpg import (
 )
 from repro.core.agent import MagpieAgent
 from repro.core.tuner import Tuner, TuningResult, StepRecord, evaluate_config
+from repro.core.episode import (
+    EpisodeTrace, run_episode_scan, run_fleet_episode_scan,
+)
 from repro.core.fleet import FleetAgent, FleetResult, FleetTuner
 from repro.core.baselines import (
     BestConfigTuner, GridSearchTuner, RandomSearchTuner,
@@ -36,6 +44,7 @@ __all__ = [
     "ddpg_init", "ddpg_update", "ddpg_learn_scan", "sample_minibatch_indices",
     "fleet_init", "fleet_act", "fleet_learn_scan",
     "MagpieAgent", "Tuner", "TuningResult", "StepRecord", "evaluate_config",
+    "EpisodeTrace", "run_episode_scan", "run_fleet_episode_scan",
     "FleetAgent", "FleetResult", "FleetTuner",
     "BestConfigTuner", "GridSearchTuner", "RandomSearchTuner",
 ]

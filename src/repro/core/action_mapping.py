@@ -242,3 +242,97 @@ class ParamSpace:
         mesh = np.meshgrid(*self.grid_axes(points_per_dim), indexing="ij")
         flat = np.stack([m.reshape(-1) for m in mesh], axis=-1)
         return self.to_configs(flat)
+
+    # -- in-graph (jit/vmap-safe) quantization -------------------------------
+
+    @property
+    def is_quantized(self) -> bool:
+        """True when every parameter has finitely many values. Pure-JAX env
+        models (``envs.base.EnvModel``) require a quantized space: the fused
+        episode engine feeds raw unit actions to the env graph while the host
+        adapter round-trips them through config dicts, and only quantized kinds
+        survive that float32 round trip with the same decoded value."""
+        return all(s.cardinality is not None for s in self.specs)
+
+
+def jax_coord_maps(space: ParamSpace) -> list:
+    """Per-coordinate in-graph versions of the paper's inverse action map.
+
+    Returns one ``fn(a_scalar) -> dict`` per parameter (jit/vmap-safe jnp
+    scalars in and out), each computing the same quantization as
+    ``ParamSpec.from_unit`` — in float32, which agrees with the host float64
+    map everywhere except knife-edge actions within ~1 ulp of a rounding
+    boundary. Keys:
+
+      value  decoded parameter value as float32 (booleans as 0/1)
+      idx    quantization index (float32 integer; quantized kinds only)
+      q      canonical unit coordinate of the decoded value (``to_unit`` of
+             ``value``) — stable across the host dict round trip, so env
+             models should derive dynamics from ``q``/``value``/``idx`` only
+      log2   log2(value) where meaningful (log2_int, and list kinds whose
+             values are all powers of two); absent otherwise
+
+    Only quantized kinds are supported (see ``ParamSpace.is_quantized``).
+    """
+    import jax.numpy as jnp
+
+    maps = []
+    for spec in space.specs:
+        if spec.cardinality is None:
+            raise ValueError(
+                f"{spec.name}: continuous parameters have no exact in-graph "
+                "quantization; use the host tuning engine for this space")
+
+        def make(spec=spec):
+            card = spec.cardinality
+            if spec.kind == "boolean":
+                def fn(a):
+                    idx = (a >= 0.5).astype(jnp.float32)
+                    return {"value": idx, "idx": idx, "q": idx}
+                return fn
+            if spec.kind == "discrete":
+                lo, hi = float(spec.minimum), float(spec.maximum)
+
+                def fn(a):
+                    v = jnp.clip(jnp.floor(a * (hi - lo) + lo + 0.5), lo, hi)
+                    idx = v - lo
+                    q = idx / max(1.0, hi - lo)
+                    return {"value": v, "idx": idx, "q": q}
+                return fn
+            if spec.kind == "log2_int":
+                e_lo, e_hi = spec._log2_span()
+                values = jnp.asarray(
+                    [float(2 ** e) for e in range(e_lo, e_hi + 1)], jnp.float32)
+
+                def fn(a):
+                    idx = jnp.clip(jnp.floor(a * (e_hi - e_lo) + 0.5),
+                                   0, e_hi - e_lo)
+                    q = idx / max(1, e_hi - e_lo)
+                    return {"value": values[idx.astype(jnp.int32)], "idx": idx,
+                            "q": q, "log2": idx + e_lo}
+                return fn
+            # list kinds (choice / categorical): index an explicit value table
+            try:
+                table = jnp.asarray([float(v) for v in spec.values],
+                                    jnp.float32)
+            except (TypeError, ValueError) as e:
+                raise ValueError(
+                    f"{spec.name}: in-graph maps need numeric values") from e
+            log2_table = None
+            if all(float(v) > 0 and float(v).is_integer() and _is_pow2(v)
+                   for v in spec.values):
+                log2_table = jnp.asarray(
+                    [float(int(v).bit_length() - 1) for v in spec.values],
+                    jnp.float32)
+
+            def fn(a):
+                idx = jnp.clip(jnp.floor(a * (card - 1) + 0.5), 0, card - 1)
+                out = {"value": table[idx.astype(jnp.int32)], "idx": idx,
+                       "q": idx / max(1, card - 1)}
+                if log2_table is not None:
+                    out["log2"] = log2_table[idx.astype(jnp.int32)]
+                return out
+            return fn
+
+        maps.append(make())
+    return maps

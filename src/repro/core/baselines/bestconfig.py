@@ -87,6 +87,26 @@ class BestConfigTuner:
 
     # -- main loop ------------------------------------------------------------
 
+    def _probe_batch(self, configs: list) -> tuple:
+        """Run one probe batch: (metric dicts, restart costs, seconds/probe).
+
+        Pure-model environments (``envs.base.ModelEnv``) evaluate the whole
+        batch in ONE dispatch (``apply_batch`` chains the same per-probe step
+        graph under ``lax.scan``, so results are bitwise those of sequential
+        applies); every other environment falls back to the host loop."""
+        import time
+        t0 = time.perf_counter()
+        if hasattr(self.env, "apply_batch"):
+            metrics, restarts = self.env.apply_batch(configs)
+        else:
+            metrics, restarts, prev = [], [], self._cur_config
+            for config in configs:
+                metrics.append(self.env.apply(config))
+                restarts.append(self.env.restart_cost(config, prev))
+                prev = config
+        per = (time.perf_counter() - t0) / max(1, len(configs))
+        return metrics, restarts, per
+
     def run(self, steps: int, learn: bool = True) -> TuningResult:
         del learn  # interface parity with Tuner
         import time
@@ -95,12 +115,12 @@ class BestConfigTuner:
         taken = 0
         while taken < steps:
             r = min(self.round_size, steps - taken)
-            for unit in self._dds_round(self._box, r):
-                config = self.env.param_space.to_config(unit)
-                t0 = time.perf_counter()
-                metrics = self.env.apply(config)
-                action_seconds = time.perf_counter() - t0
-                restart = self.env.restart_cost(config, self._cur_config)
+            units = self._dds_round(self._box, r)
+            configs = [self.env.param_space.to_config(u) for u in units]
+            all_metrics, restarts, action_seconds = self._probe_batch(configs)
+            for unit, config, metrics, restart in zip(
+                    units, configs, all_metrics, restarts):
+                restart = float(restart)
                 self.simulated_restart_seconds += restart
                 objective = self.scalarizer.objective(metrics)
                 if objective > self.best_objective:

@@ -36,11 +36,23 @@ class RandomSearchTuner:
         del learn
         t_wall = time.perf_counter()
         start = len(self.history)
-        for i in range(start, start + steps):
-            unit = self._rng.uniform(0.0, 1.0, self.env.param_space.dim)
-            config = self.env.param_space.to_config(unit)
-            metrics = self.env.apply(config)
-            restart = self.env.restart_cost(config, self._cur_config)
+        # The whole run is one probe batch: draw units in the sequential RNG
+        # order, then evaluate. Pure-model envs (``ModelEnv``) run the batch
+        # as ONE dispatch (bitwise the sequential applies); others loop.
+        units = [self._rng.uniform(0.0, 1.0, self.env.param_space.dim)
+                 for _ in range(steps)]
+        configs = [self.env.param_space.to_config(u) for u in units]
+        if hasattr(self.env, "apply_batch"):
+            all_metrics, restarts = self.env.apply_batch(configs)
+        else:
+            all_metrics, restarts, prev = [], [], self._cur_config
+            for config in configs:
+                all_metrics.append(self.env.apply(config))
+                restarts.append(self.env.restart_cost(config, prev))
+                prev = config
+        for i, (config, metrics, restart) in enumerate(
+                zip(configs, all_metrics, restarts), start=start):
+            restart = float(restart)
             self.simulated_restart_seconds += restart
             objective = self.scalarizer.objective(metrics)
             if objective > self.best_objective:

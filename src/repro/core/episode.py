@@ -1,0 +1,362 @@
+"""Whole-episode engine: the Fig. 1 loop as ONE compiled XLA program.
+
+``core.tuner.Tuner`` steps the loop from Python: every tuning step crosses the
+host boundary to act, apply the config, scalarize the reward, store the
+transition and learn. This module fuses all of it — act → env step → reward
+scalarization → buffer store → ``ddpg_learn_scan`` — into a single jitted
+``lax.scan`` over the episode (``run_episode_scan``), and vmaps/shards the same
+body over a fleet session axis (``run_fleet_episode_scan``), so a seeds ×
+workloads × objectives grid runs as one device computation.
+
+Equivalence contract (pinned by tests/test_episode.py):
+
+  * the scan body performs, step for step, the float32 arithmetic of the
+    host loop driving a ``ModelEnv`` adapter — same actor forward, same
+    exploration values (warmup plans and OU noise are state-independent, so
+    the host shell pre-consumes them from the agent's own numpy streams and
+    feeds them in as scan inputs), same env ``step_fn`` on the same key
+    chain, same normalization/objective fold (``core.scalarization`` does
+    float32 fixed-order arithmetic for exactly this reason), same FIFO write
+    and the same fused learner. The decision trajectory — every config, the
+    restart accounting, the best configuration — is exactly equal between
+    engines; float fields agree to within a few float32 ulps (XLA CPU
+    compiles the two engines as different programs, and its context-dependent
+    FMA/vectorization choices can move cancellation-prone values by single
+    ulps — the per-phase fusion islands below keep it that tight).
+  * both entry points mutate the adapter env, the agent and the replay
+    buffer exactly as ``steps`` host-loop iterations would, so progressive
+    tuning (paper Fig. 7) and the §III-E final recommendation work unchanged
+    on top.
+
+Only pure-model environments (``envs.base.ModelEnv``) can run here; real-DFS
+or other external environments keep the host loop.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ddpg import DDPGConfig, actor_apply, _learn_scan
+from repro.core.scalarization import metric_bounds, normalize_state
+
+
+class BufferState(NamedTuple):
+    """Device-side FIFO replay storage (the in-graph ``ReplayBuffer``)."""
+
+    s: jnp.ndarray
+    a: jnp.ndarray
+    r: jnp.ndarray
+    s2: jnp.ndarray
+    next_slot: jnp.ndarray  # i32 write cursor
+    size: jnp.ndarray       # i32 valid rows
+
+
+class EpisodeCarry(NamedTuple):
+    env_state: Any
+    ddpg: Any
+    buffer: BufferState
+    learn_key: jax.Array
+    state_vec: jnp.ndarray   # current normalized metric state [k]
+    objective: jnp.ndarray   # scalarized objective of state_vec (f32)
+
+
+class EpisodeTrace(NamedTuple):
+    """Per-step outputs; leading axis = episode steps (then sessions, for the
+    fleet). The host shell reconstructs ``StepRecord`` history from this."""
+
+    actions: jnp.ndarray
+    metrics: jnp.ndarray
+    rewards: jnp.ndarray
+    objectives: jnp.ndarray
+    restarts: jnp.ndarray
+
+
+def _build_episode(step_fn, cfg: DDPGConfig, actor_tx, critic_tx,
+                   learn: bool, num_updates: int):
+    """episode(params, w_vec, lo, span, carry, xs) -> (carry, EpisodeTrace).
+
+    ``xs`` = (use_warmup [T] bool, warmup_actions [T, m], noise [T, m]).
+    """
+    # lazy: envs.base imports repro.core at its own top level
+    from repro.envs.base import barriered_step, fusion_barrier
+
+    do_updates = learn and num_updates > 0
+
+    def one_step(params, w_vec, lo, span, carry, x):
+        use_warmup, warmup_a, noise = x
+
+        # act: LHS warmup override, else policy + pre-drawn OU noise. The
+        # barrier isolates the actor forward the same way the env step and
+        # learner are isolated (see envs.base.barriered_step): each phase of
+        # the Fig. 1 loop is its own fusion island, keeping per-phase CPU
+        # codegen aligned with the host loop's standalone dispatches.
+        actor, state_vec = fusion_barrier(
+            (carry.ddpg.actor, carry.state_vec))
+        policy = fusion_barrier(actor_apply(actor, state_vec))
+        explored = jnp.clip(policy + noise, 0.0, 1.0)
+        action = jnp.where(use_warmup, jnp.clip(warmup_a, 0.0, 1.0), explored)
+
+        # env transition (pure model) + state normalization; barriered_step
+        # keeps the env subgraph an isolated fusion island with the same
+        # scan-body structure the ModelEnv adapter compiles (see
+        # envs.base.barriered_step)
+        env_state, metrics_vec, restart = barriered_step(
+            step_fn, params, carry.env_state, action, False)
+        norm = jnp.where(span > 0,
+                         jnp.clip((metrics_vec - lo) / span, 0.0, 1.0), 0.0)
+
+        # objective: serial float32 fold in state order (zero-weight terms are
+        # exact no-ops) — bit-aligned with Scalarizer.objective
+        obj = jnp.float32(0.0)
+        for j in range(norm.shape[0]):
+            obj = obj + w_vec[j] * norm[j]
+        reward = (obj - carry.objective) / jnp.maximum(
+            carry.objective, jnp.float32(1e-6))
+
+        if learn:  # observe: FIFO write, exactly ReplayBuffer.add
+            buf = carry.buffer
+            capacity = buf.s.shape[0]
+            i = buf.next_slot
+            buf = BufferState(
+                s=buf.s.at[i].set(carry.state_vec),
+                a=buf.a.at[i].set(action),
+                r=buf.r.at[i].set(reward),
+                s2=buf.s2.at[i].set(norm),
+                next_slot=(i + 1) % capacity,
+                size=jnp.minimum(buf.size + 1, capacity))
+        else:
+            buf = carry.buffer
+        if do_updates:
+            learn_key, k = jax.random.split(carry.learn_key)
+            learn_in = fusion_barrier((carry.ddpg, buf, k))
+            ddpg, _ = fusion_barrier(_learn_scan(
+                learn_in[0],
+                (learn_in[1].s, learn_in[1].a, learn_in[1].r, learn_in[1].s2),
+                learn_in[1].size, learn_in[2],
+                cfg, actor_tx, critic_tx, num_updates))
+        else:
+            learn_key, ddpg = carry.learn_key, carry.ddpg
+
+        carry = EpisodeCarry(env_state, ddpg, buf, learn_key, norm, obj)
+        return carry, EpisodeTrace(action, metrics_vec, reward, obj, restart)
+
+    def episode(params, w_vec, lo, span, carry, xs):
+        body = functools.partial(one_step, params, w_vec, lo, span)
+        return jax.lax.scan(body, carry, xs)
+
+    return episode
+
+
+_EPISODE_CACHE: dict = {}
+
+
+def _compiled_episode(step_fn, cfg, actor_tx, critic_tx, learn, num_updates,
+                      fleet: bool, devices: Optional[tuple]):
+    """Jitted (and optionally vmapped + shard_mapped) episode, cached so
+    repeated ``run()`` calls and same-space fleets reuse one compilation."""
+    key = (step_fn, cfg, actor_tx, critic_tx, learn, num_updates, fleet,
+           devices)
+    if key in _EPISODE_CACHE:
+        return _EPISODE_CACHE[key]
+    episode = _build_episode(step_fn, cfg, actor_tx, critic_tx, learn,
+                             num_updates)
+    if fleet:
+        # session axis: params/w_vec/lo/span/carry stacked; xs shares the
+        # warmup schedule (sessions run in lockstep) but not plans/noise
+        episode = jax.vmap(episode, in_axes=(0, 0, 0, 0, 0, (None, 0, 0)))
+        if devices is not None and len(devices) > 1:
+            from jax.sharding import Mesh, PartitionSpec as P
+            try:
+                from jax.experimental.shard_map import shard_map
+            except ImportError:  # newer jax
+                from jax import shard_map
+            mesh = Mesh(np.array(devices), ("session",))
+            episode = shard_map(
+                episode, mesh=mesh,
+                in_specs=(P("session"), P("session"), P("session"),
+                          P("session"), P("session"),
+                          (P(), P("session"), P("session"))),
+                out_specs=P("session"), check_rep=False)
+    fn = jax.jit(episode)
+    _EPISODE_CACHE[key] = fn
+    return fn
+
+
+def _consume_exploration(agent, steps: int, session: Optional[int] = None):
+    """Pre-draw the episode's exploration from the agent's own host streams.
+
+    Warmup plans and OU noise are state-independent, so consuming them up
+    front leaves the agent's numpy RNG exactly where ``steps`` host-loop
+    ``act()`` calls would — the key to host/scan equivalence. Returns
+    (use_warmup [T], warmup_actions [T, m], noise [T, m]); advances
+    ``steps_taken``."""
+    m = agent.cfg.action_dim
+    s0 = agent.steps_taken
+    if session is None:
+        plan, noise_src = agent._warmup_plan, agent.noise
+    else:
+        plan, noise_src = agent._warmup_plans[session], agent.noises[session]
+    use_warmup = np.zeros(steps, bool)
+    warmup = np.zeros((steps, m), np.float32)
+    noise = np.zeros((steps, m), np.float32)
+    for t in range(steps):
+        if s0 + t < agent.warmup_steps:
+            use_warmup[t] = True
+            warmup[t] = plan[s0 + t]
+        else:
+            noise[t] = noise_src()
+    if session is None:  # fleet callers advance the shared counter once
+        agent.steps_taken += steps
+    return use_warmup, warmup, noise
+
+
+def run_episode_scan(env, agent, scalarizer, cur_metrics: dict, steps: int,
+                 learn: bool = True) -> EpisodeTrace:
+    """Run ``steps`` fused tuning iterations for one session.
+
+    ``env`` must be a ``ModelEnv``. Mutates ``env`` (model state, last
+    config) and ``agent`` (learner state, buffer, noise stream, steps_taken)
+    exactly as the host loop would; returns the per-step trace as numpy.
+    """
+    model = env.model
+    lo, span = metric_bounds(env.metric_specs, env.state_metrics)
+    w_vec = scalarizer.weight_vector(env.state_metrics)
+    state_vec = normalize_state(cur_metrics, env.metric_specs,
+                                env.state_metrics)
+    objective = np.float32(scalarizer.objective(cur_metrics))
+
+    (bs, ba, br, bs2), _ = agent.buffer.storage()
+    buffer = BufferState(
+        s=jnp.asarray(bs), a=jnp.asarray(ba), r=jnp.asarray(br),
+        s2=jnp.asarray(bs2),
+        next_slot=jnp.asarray(agent.buffer._next, jnp.int32),
+        size=jnp.asarray(len(agent.buffer), jnp.int32))
+    xs = _consume_exploration(agent, steps)
+    carry = EpisodeCarry(env.model_state, agent.state, buffer,
+                         agent._learn_key, jnp.asarray(state_vec),
+                         jnp.asarray(objective))
+
+    fn = _compiled_episode(model.step_fn, agent.cfg, agent._actor_tx,
+                           agent._critic_tx, learn, agent.cfg.updates_per_step,
+                           fleet=False, devices=None)
+    carry, trace = fn(model.params, jnp.asarray(w_vec), jnp.asarray(lo),
+                      jnp.asarray(span), carry, xs)
+
+    env.model_state = carry.env_state
+    agent.state = carry.ddpg
+    agent._learn_key = carry.learn_key
+    if learn:
+        agent.buffer.set_storage(
+            np.asarray(carry.buffer.s), np.asarray(carry.buffer.a),
+            np.asarray(carry.buffer.r), np.asarray(carry.buffer.s2),
+            int(carry.buffer.next_slot), int(carry.buffer.size))
+    return jax.tree_util.tree_map(np.asarray, trace)
+
+
+def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
+                       cur_metrics: Sequence, steps: int, learn: bool = True,
+                       devices: Optional[Sequence] = None) -> EpisodeTrace:
+    """Fleet variant: N sessions' episodes as one vmapped (and, with
+    ``devices``, shard_mapped) program. Trace leaves are [N, T, ...].
+
+    Sessions are padded up to a multiple of the device count by replicating
+    session 0 (results sliced off), so any grid shape shards. Per-session
+    behaviour is independent of the device count: every session's PRNG keys
+    derive from its own seed, never from its placement.
+    """
+    models = [e.model for e in envs]
+    step_fns = {m.step_fn for m in models}
+    if len(step_fns) != 1:
+        raise ValueError(
+            "fleet sessions must share one env model structure (same space / "
+            "model class); mixed fleets need the host engine")
+    n = len(envs)
+
+    def stack(trees):  # host-side stack: one transfer per leaf, not N
+        return jax.tree_util.tree_map(
+            lambda *xs: jnp.asarray(np.stack([np.asarray(x) for x in xs])),
+            *trees)
+
+    params = stack([m.params for m in models])
+    env_states = stack([e.model_state for e in envs])
+    lo, span = metric_bounds(envs[0].metric_specs, envs[0].state_metrics)
+    lo = np.broadcast_to(lo, (n, lo.shape[0]))
+    span = np.broadcast_to(span, (n, span.shape[0]))
+    w_vec = np.stack([sc.weight_vector(e.state_metrics)
+                      for sc, e in zip(scalarizers, envs)])
+    state_vecs = np.stack([
+        normalize_state(mtr, e.metric_specs, e.state_metrics)
+        for mtr, e in zip(cur_metrics, envs)])
+    objectives = np.array([np.float32(sc.objective(mtr))
+                           for sc, mtr in zip(scalarizers, cur_metrics)],
+                          np.float32)
+
+    (bs, ba, br, bs2), sizes = agent.buffer.storage()
+    buffer = BufferState(
+        s=jnp.asarray(bs), a=jnp.asarray(ba), r=jnp.asarray(br),
+        s2=jnp.asarray(bs2),
+        next_slot=jnp.full((n,), agent.buffer._next, jnp.int32),
+        size=jnp.asarray(sizes, jnp.int32))
+
+    s0 = agent.steps_taken
+    use_warmup = np.zeros(steps, bool)
+    warmup = np.zeros((n, steps, agent.cfg.action_dim), np.float32)
+    noise = np.zeros((n, steps, agent.cfg.action_dim), np.float32)
+    for t in range(steps):
+        if s0 + t < agent.warmup_steps:
+            use_warmup[t] = True
+            warmup[:, t] = agent._warmup_plans[:, s0 + t]
+        else:
+            noise[:, t] = np.stack([nz() for nz in agent.noises])
+    agent.steps_taken += steps
+
+    carry = EpisodeCarry(env_states, agent.states, buffer, agent._learn_keys,
+                         jnp.asarray(state_vecs), jnp.asarray(objectives))
+    args = [params, jnp.asarray(w_vec), jnp.asarray(lo), jnp.asarray(span),
+            carry]
+
+    devices = tuple(devices) if devices else None
+    pad = 0
+    if devices and n % len(devices):
+        pad = len(devices) - n % len(devices)
+
+        def pad_tree(tree):
+            return jax.tree_util.tree_map(
+                lambda x: jnp.concatenate(
+                    [x, jnp.repeat(x[:1], pad, axis=0)]), tree)
+
+        args = [pad_tree(a) for a in args]
+        warmup = np.concatenate([warmup, np.repeat(warmup[:1], pad, axis=0)])
+        noise = np.concatenate([noise, np.repeat(noise[:1], pad, axis=0)])
+
+    fn = _compiled_episode(models[0].step_fn, agent.cfg, agent._actor_tx,
+                           agent._critic_tx, learn, agent.cfg.updates_per_step,
+                           fleet=True, devices=devices)
+    carry, trace = fn(*args, (use_warmup, warmup, noise))
+    if pad:
+        carry, trace = jax.tree_util.tree_map(lambda x: x[:n], (carry, trace))
+
+    for e, st in zip(envs, _unstack(carry.env_state, n)):
+        e.model_state = st
+    agent.states = carry.ddpg
+    agent._learn_keys = carry.learn_key
+    if learn:
+        agent.buffer.set_storage(
+            np.asarray(carry.buffer.s), np.asarray(carry.buffer.a),
+            np.asarray(carry.buffer.r), np.asarray(carry.buffer.s2),
+            int(carry.buffer.next_slot[0]), int(carry.buffer.size[0]))
+    return jax.tree_util.tree_map(np.asarray, trace)
+
+
+def _unstack(tree, n: int) -> list:
+    return [jax.tree_util.tree_map(lambda x: x[i], tree) for i in range(n)]
+
+
+def default_devices() -> list:
+    """All local devices — the default fleet sharding axis."""
+    return list(jax.devices())

@@ -165,9 +165,22 @@ class FleetTuner:
 
     def __init__(self, envs: Sequence, scalarizers: Sequence[Scalarizer],
                  agent: FleetAgent, eval_runs: int = 3, labels=None,
-                 vectorized: Optional[bool] = None):
+                 vectorized: Optional[bool] = None, engine: str = "host",
+                 devices: Optional[Sequence] = None):
         if not (len(envs) == len(scalarizers) == agent.num_sessions):
             raise ValueError("envs, scalarizers and agent sessions must align")
+        if engine not in ("host", "scan"):
+            raise ValueError(f"unknown engine {engine!r}; use 'host' or 'scan'")
+        if engine == "scan" and any(getattr(e, "model", None) is None
+                                    for e in envs):
+            raise ValueError(
+                "engine='scan' needs pure-model environments (ModelEnv); "
+                "build the fleet with from_grid(engine='scan') or pass "
+                "ModelEnv instances")
+        if devices is not None and engine != "scan":
+            raise ValueError("devices= sharding is a scan-engine feature")
+        self.engine = engine
+        self.devices = list(devices) if devices else None
         self.envs = list(envs)
         self.scalarizers = list(scalarizers)
         self.agent = agent
@@ -176,7 +189,8 @@ class FleetTuner:
             f"session{i}" for i in range(len(self.envs))]
         if vectorized is None:
             from repro.envs.lustre_sim import LustreSimEnv
-            vectorized = all(isinstance(e, LustreSimEnv) for e in self.envs)
+            vectorized = (engine == "host" and
+                          all(isinstance(e, LustreSimEnv) for e in self.envs))
         self.vectorized = vectorized
         self.histories: list = [[] for _ in self.envs]
         self.simulated_restart_seconds = np.zeros(len(self.envs))
@@ -199,7 +213,9 @@ class FleetTuner:
                   seeds: Sequence[int], *, env_factory=None, env_cls=None,
                   ddpg_config: Optional[DDPGConfig] = None,
                   buffer_capacity: int = 64, warmup_steps: int = 8,
-                  eval_runs: int = 3, extended: bool = False) -> "FleetTuner":
+                  eval_runs: int = 3, extended: bool = False,
+                  engine: str = "host",
+                  devices: Optional[Sequence] = None) -> "FleetTuner":
         """Build a fleet for the full seeds x workloads x objectives grid.
 
         ``env_factory(workload, seed)`` defaults to ``env_cls(workload,
@@ -210,6 +226,12 @@ class FleetTuner:
         Every grid cell is an independent tuning session; session seeds are
         offset per cell so no two sessions share an RNG stream even under the
         same base seed.
+
+        ``engine="scan"`` builds each cell as a pure-model environment
+        (``env.to_model_env()``) and runs whole fleet episodes as one fused
+        XLA program; ``devices`` (default: all local devices) shards the
+        session axis with ``shard_map``. Per-session keys come from the cell
+        seed alone, so results are invariant to the device count.
         """
         if env_factory is not None and env_cls is not None:
             raise ValueError(
@@ -220,7 +242,7 @@ class FleetTuner:
             env_cls = env_cls or LustreSimEnv
 
             if env_cls is LustreSimEnv:
-                def env_factory(workload, seed):
+                def base_factory(workload, seed):
                     return LustreSimEnv(workload, seed=seed, extended=extended)
             else:
                 if extended:
@@ -228,8 +250,19 @@ class FleetTuner:
                         "extended=True only applies to LustreSimEnv; "
                         f"{env_cls.__name__} defines its own space")
 
-                def env_factory(workload, seed):
+                def base_factory(workload, seed):
                     return env_cls(workload, seed=seed)
+
+            if engine == "scan":
+                def env_factory(workload, seed):
+                    return base_factory(workload, seed).to_model_env()
+            else:
+                env_factory = base_factory
+        if devices is not None and engine == "scan" and len(devices) == 0:
+            raise ValueError("devices must be non-empty")
+        if devices is None and engine == "scan":
+            import jax as _jax
+            devices = _jax.devices()
 
         envs, scals, labels, cell_seeds = [], [], [], []
         cell = 0
@@ -250,7 +283,8 @@ class FleetTuner:
         cfg = ddpg_config or DDPGConfig.for_env(envs[0])
         agent = FleetAgent(cfg, cell_seeds, buffer_capacity=buffer_capacity,
                            warmup_steps=warmup_steps)
-        return cls(envs, scals, agent, eval_runs=eval_runs, labels=labels)
+        return cls(envs, scals, agent, eval_runs=eval_runs, labels=labels,
+                   engine=engine, devices=devices if engine == "scan" else None)
 
     # ------------------------------------------------------------------
 
@@ -284,9 +318,60 @@ class FleetTuner:
         ``TuningResult.wall_seconds``) measure the FLEET's shared step — all
         sessions act/learn in one fused computation — so they are identical
         across sessions and not comparable with single-``Tuner`` per-session
-        timings.
+        timings. With ``engine="scan"`` the whole episode is one program and
+        per-step timings are the episode average.
         """
         t_wall = time.perf_counter()
+        if self.engine == "scan":
+            self._run_scan(steps)
+        else:
+            self._run_host(steps)
+        return self._finish(t_wall)
+
+    def _run_scan(self, steps: int) -> None:
+        """Fused fleet episode (``core.episode.run_fleet_episode_scan``), history
+        reconstructed from the trace."""
+        from repro.core.episode import run_fleet_episode_scan
+        n_sessions = len(self.envs)
+        start = len(self.histories[0])
+        t0 = time.perf_counter()
+        trace = run_fleet_episode_scan(
+            self.envs, self.agent, self.scalarizers, self._cur_metrics,
+            steps, learn=True, devices=self.devices)
+        per_step = (time.perf_counter() - t0) / max(1, steps)
+
+        for i in range(n_sessions):
+            env = self.envs[i]
+            configs = env.param_space.to_configs(trace.actions[i])
+            names = env.state_metrics
+            prev_config = self._cur_configs[i]
+            for t in range(steps):
+                metrics = {n: float(v)
+                           for n, v in zip(names, trace.metrics[i, t])}
+                objective = float(trace.objectives[i, t])
+                restart = float(trace.restarts[i, t])
+                self.simulated_restart_seconds[i] += restart
+                if restart > 0:
+                    env.restart_events.append(
+                        (env._scope(configs[t], prev_config), restart))
+                if objective > self.best_objectives[i]:
+                    self.best_objectives[i] = objective
+                    self.best_configs[i] = dict(configs[t])
+                    self.best_metrics[i] = dict(metrics)
+                self.histories[i].append(StepRecord(
+                    step=start + t, config=configs[t], metrics=metrics,
+                    objective=objective, reward=float(trace.rewards[i, t]),
+                    restart_seconds=restart, action_seconds=per_step,
+                    learn_seconds=0.0,
+                ))
+                prev_config = configs[t]
+            self._cur_configs[i] = configs[-1] if steps else prev_config
+            self._cur_metrics[i] = (
+                {n: float(v) for n, v in zip(names, trace.metrics[i, -1])}
+                if steps else self._cur_metrics[i])
+            env._last_config = dict(self._cur_configs[i])
+
+    def _run_host(self, steps: int) -> None:
         n_sessions = len(self.envs)
         start = len(self.histories[0])
         for step_i in range(start, start + steps):
@@ -334,8 +419,10 @@ class FleetTuner:
             self._cur_configs = configs
             self._cur_metrics = metrics
 
+    def _finish(self, t_wall: float) -> FleetResult:
         # Final recommendation per session (the same §III-E rule as Tuner.run,
         # via the shared recommend_final helper).
+        n_sessions = len(self.envs)
         policy_actions = self.agent.act(self._states(), explore=False)
         finals = []
         for i in range(n_sessions):

@@ -76,6 +76,16 @@ class ReplayBuffer:
         """
         return (self._s, self._a, self._r, self._s2), self._size
 
+    def set_storage(self, s, a, r, s2, next_slot: int, size: int) -> None:
+        """Write back storage mutated off-host (the fused episode engine keeps
+        the FIFO on-device for the whole episode and syncs it here once)."""
+        self._s[...] = s
+        self._a[...] = a
+        self._r[...] = r
+        self._s2[...] = s2
+        self._next = int(next_slot)
+        self._size = int(size)
+
     def state_dict(self) -> dict:
         """For checkpoint/resume of a tuning session (paper §III-E: resume tuning)."""
         return {
@@ -133,6 +143,16 @@ class BatchedReplayBuffer:
         """((s, a, r, s2) stacked [N, capacity, ...] arrays, sizes [N])."""
         sizes = jnp.full((self.num_sessions,), self._size, jnp.int32)
         return (self._s, self._a, self._r, self._s2), sizes
+
+    def set_storage(self, s, a, r, s2, next_slot: int, size: int) -> None:
+        """Write back storage mutated off-host (fused fleet episodes advance
+        the lockstep FIFO on-device and sync the shared cursor here)."""
+        self._s = jnp.asarray(s, jnp.float32)
+        self._a = jnp.asarray(a, jnp.float32)
+        self._r = jnp.asarray(r, jnp.float32)
+        self._s2 = jnp.asarray(s2, jnp.float32)
+        self._next = int(next_slot)
+        self._size = int(size)
 
     def sample(self, keys: jax.Array, batch_size: int):
         """Per-session uniform minibatches: keys [N, key] -> each [N, B, ...]."""

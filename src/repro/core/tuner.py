@@ -10,6 +10,19 @@ Each tuning step: read state -> policy recommends a full configuration (all m
 parameters at once, §II-B-4) -> apply (restarting workload/DFS, cost tracked) ->
 reward = proportional scalarized performance change -> store -> learn.
 
+``Tuner`` is a host shell over two interchangeable engines:
+
+  engine="host"  the dict-based Python loop — one ``env.apply`` per step.
+                 Works for ANY ``TuningEnvironment`` (real DFS, external
+                 systems); this is the only engine for envs whose side
+                 effects live outside JAX.
+  engine="scan"  the fused whole-episode engine (``core.episode``): act, env
+                 step, reward, buffer store and the learner compile into ONE
+                 ``lax.scan`` program. Requires a pure-model environment
+                 (``envs.base.ModelEnv``); bitwise-equal to engine="host" on
+                 the same adapter (tests/test_episode.py), with per-step
+                 timing amortized over the episode.
+
 The final recommendation is the best configuration *seen* during tuning
 (§III-E: 'it recommends the best it has seen so far'), evaluated with
 ``eval_runs`` repetitions (§III-B: 'evaluated ... with three runs').
@@ -19,7 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Optional
+from typing import Optional
 
 import numpy as np
 
@@ -44,14 +57,15 @@ def evaluate_config(env, config: dict, runs: int) -> dict:
     """Average metrics over ``runs`` long evaluation runs (paper: 30 min x3).
 
     Shared by ``Tuner`` and ``FleetTuner`` so the evaluation protocol has one
-    source of truth (fleet-of-one parity depends on it).
-    """
+    source of truth (fleet-of-one parity depends on it). Sums first and
+    divides once — per-run ``v / runs`` accumulation drifts in float and made
+    the mean order-dependent."""
     acc: dict = {}
     for _ in range(runs):
         m = env.apply(config, eval_run=True)
         for k, v in m.items():
-            acc[k] = acc.get(k, 0.0) + v / runs
-    return acc
+            acc[k] = acc.get(k, 0.0) + v
+    return {k: v / runs for k, v in acc.items()}
 
 
 def recommend_final(scalarizer: Scalarizer, best_config: dict,
@@ -94,12 +108,22 @@ class TuningResult:
 class Tuner:
     def __init__(self, env, scalarizer: Scalarizer,
                  agent: Optional[MagpieAgent] = None,
-                 eval_runs: int = 3, seed: int = 0):
+                 eval_runs: int = 3, seed: int = 0, engine: str = "host"):
         """``agent=None`` sizes a default DDPG agent from the environment's
         ``ParamSpace`` (``DDPGConfig.for_env``) — the network's action head and
         the search box both follow the space, whether it is the paper's 2-D
-        stripe space or an 8-D mixed-type space."""
+        stripe space or an 8-D mixed-type space.
+
+        ``engine``: "host" (dict loop, any environment) or "scan" (fused
+        whole-episode ``lax.scan``; needs a ``ModelEnv``)."""
+        if engine not in ("host", "scan"):
+            raise ValueError(f"unknown engine {engine!r}; use 'host' or 'scan'")
+        if engine == "scan" and getattr(env, "model", None) is None:
+            raise ValueError(
+                "engine='scan' needs a pure-model environment (ModelEnv); "
+                "real-DFS/external environments must use engine='host'")
         self.env = env
+        self.engine = engine
         self.scalarizer = scalarizer
         self.agent = agent or MagpieAgent(DDPGConfig.for_env(env), seed=seed)
         self.eval_runs = eval_runs
@@ -122,12 +146,26 @@ class Tuner:
     def _state(self, metrics: dict) -> np.ndarray:
         return normalize_state(metrics, self.env.metric_specs, self.env.state_metrics)
 
+    def _track_best(self, objective: float, config: dict, metrics: dict) -> None:
+        if objective > self.best_objective:
+            self.best_objective = objective
+            self.best_config = dict(config)
+            self.best_metrics = dict(metrics)
+
     # ------------------------------------------------------------------
 
     def run(self, steps: int, learn: bool = True) -> TuningResult:
         """Run ``steps`` tuning iterations; callable repeatedly (progressive tuning,
         paper Fig. 7 — the agent, buffer and noise state persist across calls)."""
         t_wall = time.perf_counter()
+        if self.engine == "scan":
+            self._run_scan(steps, learn)
+        else:
+            self._run_host(steps, learn)
+        return self._finish(t_wall)
+
+    def _run_host(self, steps: int, learn: bool) -> None:
+        """The dict-based Fig. 1 loop — one host round trip per step."""
         start = len(self.history)
         for i in range(start, start + steps):
             state = self._state(self._cur_metrics)
@@ -151,11 +189,7 @@ class Tuner:
                 self.agent.learn()
             learn_seconds = time.perf_counter() - t0
 
-            if objective > self.best_objective:
-                self.best_objective = objective
-                self.best_config = dict(config)
-                self.best_metrics = dict(metrics)
-
+            self._track_best(objective, config, metrics)
             self.history.append(StepRecord(
                 step=i, config=config, metrics=metrics, objective=objective,
                 reward=reward, restart_seconds=restart,
@@ -164,6 +198,41 @@ class Tuner:
             self._cur_config = config
             self._cur_metrics = metrics
 
+    def _run_scan(self, steps: int, learn: bool) -> None:
+        """The fused engine: one XLA program for the whole episode, then the
+        ``StepRecord`` history reconstructed from the scanned trace."""
+        from repro.core.episode import run_episode_scan
+        start = len(self.history)
+        t0 = time.perf_counter()
+        trace = run_episode_scan(self.env, self.agent, self.scalarizer,
+                             self._cur_metrics, steps, learn=learn)
+        per_step = (time.perf_counter() - t0) / max(1, steps)
+
+        configs = self.env.param_space.to_configs(trace.actions)
+        names = self.env.state_metrics
+        prev_config = self._cur_config
+        for t in range(steps):
+            metrics = {n: float(v) for n, v in zip(names, trace.metrics[t])}
+            objective = float(trace.objectives[t])
+            restart = float(trace.restarts[t])
+            self.simulated_restart_seconds += restart
+            if restart > 0:  # adapter-side restart log (scope bookkeeping)
+                self.env.restart_events.append(
+                    (self.env._scope(configs[t], prev_config), restart))
+            self._track_best(objective, configs[t], metrics)
+            self.history.append(StepRecord(
+                step=start + t, config=configs[t], metrics=metrics,
+                objective=objective, reward=float(trace.rewards[t]),
+                restart_seconds=restart, action_seconds=per_step,
+                learn_seconds=0.0,
+            ))
+            prev_config = configs[t]
+            self._cur_config = configs[t]
+            self._cur_metrics = metrics
+        self.env._last_config = dict(self._cur_config)
+
+    def _finish(self, t_wall: float) -> TuningResult:
+        """§III-E final recommendation + result assembly (shared by engines)."""
         policy_action = self.agent.act(self._state(self._cur_metrics), explore=False)
         policy_config = self.env.param_space.to_config(policy_action)
         config, best_metrics, replaced = recommend_final(

@@ -1,4 +1,4 @@
-from repro.envs.base import TuningEnvironment
+from repro.envs.base import EnvModel, ModelEnv, TuningEnvironment
 from repro.envs.metrics import (
     LUSTRE_STATE_METRICS,
     MetricsCollector,
@@ -14,12 +14,16 @@ from repro.envs.lustre_sim import (
     magpie8_param_space,
     paper_param_space,
 )
+from repro.envs.lustre_model import LustreParams, LustreSimModel
+from repro.envs.synthetic import SyntheticSurfaceModel
 
 __all__ = [
-    "TuningEnvironment", "MetricsCollector", "lustre_metric_specs",
+    "TuningEnvironment", "EnvModel", "ModelEnv",
+    "MetricsCollector", "lustre_metric_specs",
     "LUSTRE_STATE_METRICS", "couple_client_knobs",
     "WORKLOADS", "Workload",
     "LustreSimEnv", "LustreSimV2", "batch_mean_performance",
+    "LustreSimModel", "LustreParams", "SyntheticSurfaceModel",
     "paper_param_space", "extended_param_space", "magpie8_param_space",
 ]
 

@@ -1,15 +1,31 @@
 """Tuning-environment protocol (the paper's 'Environment': DFS + workloads).
 
+Two layers live here:
+
+``TuningEnvironment`` — the host-side dict protocol the Fig. 1 loop consumes.
 An environment owns the static-parameter space and produces a metric dict per
 evaluation. ``apply`` runs (or simulates) the workload under a configuration
 and returns raw metric values; ``restart_cost`` accounts the restart downtime
 the paper highlights as the distinguishing cost of *static* parameters.
+
+``EnvModel`` — the pure-functional JAX twin: ``init_state(key) -> EnvState``
+and ``step(state, unit_action) -> (EnvState, metrics_vec, restart_cost)`` as
+jit/vmap-safe pure functions. The fused episode engine (``core.episode``)
+compiles whole tuning episodes — act, env step, reward, buffer store, learn —
+into one XLA program over these models, and vmaps/shards them across a fleet
+session axis. ``ModelEnv`` adapts any ``EnvModel`` back to the dict protocol
+(one jitted step per ``apply``), so the host-loop tuner drives the *same*
+graph the fused engine scans over — that is what makes the two engines
+bit-comparable.
 """
 
 from __future__ import annotations
 
 import abc
-from typing import Mapping
+import functools
+from typing import Any, Callable, Mapping
+
+import numpy as np
 
 from repro.core.action_mapping import ParamSpace
 from repro.core.scalarization import MetricSpec
@@ -38,3 +54,256 @@ class TuningEnvironment(abc.ABC):
     @property
     def action_dim(self) -> int:
         return self.param_space.dim
+
+
+class EnvModel(abc.ABC):
+    """A tuning environment as pure jit/vmap-safe JAX functions.
+
+    Contract:
+      * ``params`` is a pytree of arrays (per-instance constants such as
+        workload shape parameters). Everything *structural* — the parameter
+        space, metric order, sample counts — is baked into ``step_fn`` /
+        ``init_fn``, so a fleet of models sharing one space shares one
+        compiled step and stacks only ``params``.
+      * ``init_fn(params, key) -> EnvState`` and
+        ``step_fn(params, state, unit_action, eval_run) -> (EnvState,
+        metrics_vec, restart_cost)`` are pure. ``metrics_vec`` is the raw
+        metric vector ordered like ``state_metrics``; ``restart_cost`` the
+        §III-F downtime in seconds (0 when the decoded configuration did not
+        change). ``eval_run`` is a static Python bool.
+      * all stochasticity flows through the JAX key threaded in ``EnvState``,
+        and the number of random draws per step is static — a host loop
+        calling ``step`` once per apply and a ``lax.scan`` over the whole
+        episode consume the identical stream.
+      * the space must be quantized (``ParamSpace.is_quantized``) and
+        dynamics must depend on the action only through its decoded values
+        (``core.action_mapping.jax_coord_maps``), so raw actions and
+        dict-round-tripped actions are interchangeable.
+    """
+
+    param_space: ParamSpace
+    metric_specs: Mapping[str, MetricSpec]
+    state_metrics: list
+    params: Any
+    #: parameter names whose change needs a full-DFS restart
+    dfs_scope: tuple = ()
+
+    @property
+    @abc.abstractmethod
+    def init_fn(self) -> Callable:
+        """Pure ``(params, key) -> EnvState``."""
+
+    @property
+    @abc.abstractmethod
+    def step_fn(self) -> Callable:
+        """Pure ``(params, state, unit_action, eval_run) -> (EnvState,
+        metrics_vec, restart_cost)``."""
+
+    # -- bound conveniences (the protocol named in ISSUE 3) ------------------
+
+    def init_state(self, key) -> Any:
+        return self.init_fn(self.params, key)
+
+    def step(self, state, unit_action, eval_run: bool = False) -> tuple:
+        """One jitted env transition (compilation cached per step_fn)."""
+        return _jit_step(self.step_fn, eval_run)(self.params, state,
+                                                 unit_action)
+
+    @property
+    def state_dim(self) -> int:
+        return len(self.state_metrics)
+
+    @property
+    def action_dim(self) -> int:
+        return self.param_space.dim
+
+
+def fusion_barrier(tree):
+    """vmap-compatible ``optimization_barrier`` over a pytree.
+
+    ``lax.optimization_barrier`` has no batching rule in current JAX; the
+    fleet engine vmaps episode bodies over the session axis, so the barrier
+    is wrapped in ``custom_vmap`` (batching an identity barrier is the
+    barrier of the batched value)."""
+    return _fusion_barrier(tree)
+
+
+@functools.lru_cache(maxsize=1)
+def _make_fusion_barrier():
+    import jax
+    from jax.custom_batching import custom_vmap
+
+    @custom_vmap
+    def barrier(tree):
+        return jax.lax.optimization_barrier(tree)
+
+    @barrier.def_vmap
+    def _barrier_vmap(axis_size, in_batched, tree):
+        del axis_size
+        return jax.lax.optimization_barrier(tree), in_batched[0]
+
+    return barrier
+
+
+def _fusion_barrier(tree):
+    return _make_fusion_barrier()(tree)
+
+
+def barriered_step(step_fn: Callable, params, state, action, eval_run: bool):
+    """One env transition as an isolated fusion island.
+
+    ``fusion_barrier`` pins the env subgraph's boundaries so XLA cannot fuse
+    env arithmetic with whatever surrounds it. Every consumer of an
+    ``EnvModel`` — the host adapter below, probe batches, and the fused
+    episode engine (``core.episode``) — runs the step through THIS wrapper
+    inside a ``lax.scan`` body, so the env island compiles the same way in
+    all of them and cross-program results stay within ulps (bitwise for most
+    data; XLA CPU codegen is context-dependent, so exact equality of every
+    float cannot be promised across different programs)."""
+    state, action = fusion_barrier((state, action))
+    return fusion_barrier(step_fn(params, state, action, eval_run))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_step_scan(step_fn: Callable, eval_run: bool) -> Callable:
+    """Chain ``step_fn`` over [N, m] actions with ONE dispatch.
+
+    The single-``apply`` path is the N == 1 case, so host applies and probe
+    batches are bitwise-equal by construction; the scan-body structure
+    matches the episode engine's (see ``barriered_step``)."""
+    import jax
+
+    def scanned(params, state, actions):
+        def body(st, a):
+            st, vec, cost = barriered_step(step_fn, params, st, a, eval_run)
+            return st, (vec, cost)
+        return jax.lax.scan(body, state, actions)
+    return jax.jit(scanned)
+
+
+def _jit_step(step_fn: Callable, eval_run: bool) -> Callable:
+    """Single-step apply = length-1 probe batch (same compiled loop body)."""
+    scanned = _jit_step_scan(step_fn, eval_run)
+
+    def one(params, state, action):
+        state, (vecs, costs) = scanned(params, state, action[None])
+        return state, vecs[0], costs[0]
+    return one
+
+
+class ModelEnv(TuningEnvironment):
+    """Thin host adapter: dict-based ``apply`` over a pure ``EnvModel`` core.
+
+    Bit-identical to the pure core by construction — ``apply`` only encodes
+    the config to a unit action, runs one jitted ``step`` and names the
+    resulting metric vector; no arithmetic happens on the host. Restart costs
+    are computed inside the step (they are part of the pure transition) and
+    surfaced through ``restart_cost`` to keep the Fig. 1 loop's call order.
+    """
+
+    def __init__(self, model: EnvModel, seed: int = 0):
+        if not model.param_space.is_quantized:
+            raise ValueError(
+                "ModelEnv needs a quantized ParamSpace (continuous kinds do "
+                "not survive the dict round trip bit-exactly)")
+        self.model = model
+        self.param_space = model.param_space
+        self.metric_specs = model.metric_specs
+        self.state_metrics = list(model.state_metrics)
+        self.seed = seed
+        import jax
+        self.model_state = model.init_state(jax.random.PRNGKey(seed))
+        self.restart_events: list = []  # (scope, seconds) per config change
+        #: downtime accrued by tuning applies since the last restart_cost()
+        #: read; None = no tuning apply happened (eval-only protocols fall
+        #: back to the diff-based host draw below)
+        self._pending_restart = None
+        self._fallback_rng = np.random.default_rng(seed + 17)
+        self._last_scope = "workload"
+        self._last_config: dict = {}
+
+    def _scope(self, config: dict, prev: dict) -> str:
+        changed = [k for k in config if config[k] != prev.get(k)]
+        return "dfs" if any(k in self.model.dfs_scope for k in changed) else \
+            "workload"
+
+    def apply(self, config: dict, eval_run: bool = False) -> dict:
+        if not self.param_space.validate(config):
+            raise ValueError(f"invalid config {config}")
+        action = self.param_space.to_action(config)
+        self.model_state, vec, cost = self.model.step(
+            self.model_state, action, eval_run=eval_run)
+        if not eval_run:
+            # Tuning applies accrue downtime until the loop reads it via
+            # restart_cost(); evaluation runs are re-measurements, not
+            # online config switches, and are never charged (same as the
+            # host-loop tuner, which only calls restart_cost on tuning steps).
+            self._pending_restart = (self._pending_restart or 0.0) + float(cost)
+        self._last_scope = self._scope(config, self._last_config)
+        self._last_config = dict(config)
+        vec = np.asarray(vec)
+        return {name: float(v) for name, v in zip(self.state_metrics, vec)}
+
+    def apply_batch(self, configs: list, eval_run: bool = False) -> tuple:
+        """N chained applies in one dispatch: (metric dicts, restart costs).
+
+        Bitwise-equal to ``[self.apply(c) for c in configs]`` plus reading
+        each apply's restart cost — the batch runs the same step body over
+        the same key chain via ``lax.scan``. Used by the search baselines'
+        probe batches. Leaves ``_pending_restart`` untouched: the per-config
+        costs are returned directly."""
+        if not configs:
+            return [], np.zeros(0)
+        for c in configs:
+            if not self.param_space.validate(c):
+                raise ValueError(f"invalid config {c}")
+        actions = self.param_space.to_actions(configs)
+        self.model_state, (vecs, costs) = _jit_step_scan(
+            self.model.step_fn, eval_run)(self.model.params, self.model_state,
+                                          actions)
+        vecs = np.asarray(vecs)
+        costs = np.asarray(costs, np.float64)
+        prev = self._last_config
+        for c, cost in zip(configs, costs):
+            if not eval_run and cost > 0:
+                self.restart_events.append((self._scope(c, prev), float(cost)))
+            prev = c
+        self._last_scope = self._scope(configs[-1], self._last_config)
+        self._last_config = dict(configs[-1])
+        metric_dicts = [
+            {name: float(v) for name, v in zip(self.state_metrics, row)}
+            for row in vecs]
+        return metric_dicts, (costs if not eval_run else np.zeros(len(configs)))
+
+    def restart_cost(self, config: dict, prev_config: dict) -> float:
+        """Seconds of downtime for switching prev_config -> config.
+
+        The Fig. 1 loop calls ``apply(config)`` then
+        ``restart_cost(config, prev)`` once per step, so this returns exactly
+        that step's restart seconds (drawn inside the pure step). Protocols
+        that only ran evaluation applies (e.g. grid search's
+        evaluate-then-account loop) accrue nothing in the step, so the cost
+        is drawn host-side from the diff of the two configs — same §III-F
+        ranges, separate RNG stream."""
+        cost, self._pending_restart = self._pending_restart, None
+        if cost is None:
+            changed = [k for k in config or {}
+                       if config[k] != (prev_config or {}).get(k)]
+            if not changed:
+                return 0.0
+            cost = float(self._fallback_rng.uniform(12.0, 20.0))
+            if any(k in self.model.dfs_scope for k in changed):
+                cost += 30.0
+            self._last_scope = self._scope(config, prev_config or {})
+        if cost > 0:
+            self.restart_events.append((self._last_scope, cost))
+        return cost
+
+    def restart_summary(self) -> dict:
+        """{scope: {count, seconds}} over the adapter's lifetime."""
+        out = {"workload": {"count": 0, "seconds": 0.0},
+               "dfs": {"count": 0, "seconds": 0.0}}
+        for scope, seconds in self.restart_events:
+            out[scope]["count"] += 1
+            out[scope]["seconds"] += seconds
+        return out

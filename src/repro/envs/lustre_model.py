@@ -1,0 +1,336 @@
+"""Pure-JAX Lustre environment model (the fused episode engine's env core).
+
+``LustreSimModel`` is the jit/vmap-safe twin of ``envs.lustre_sim``: the same
+calibrated response surface, client-knob factors, Table-I metric coupling,
+cache-warmth AR(1) process and lognormal noise model — expressed as pure
+float32 functions over a threaded JAX PRNG key instead of host numpy with a
+``np.random.Generator``. That buys three things the numpy simulator cannot
+give:
+
+  * whole tuning episodes compile into ONE XLA program
+    (``core.episode.run_episode_scan``) — no host boundary per step;
+  * fleets vmap/shard over a session axis with per-session workload
+    parameters as data (``LustreParams``), one compiled step for any fleet;
+  * bit-reproducibility across engines: a host loop calling ``step`` once per
+    apply and a ``lax.scan`` over the episode consume the identical stream.
+
+Fidelity contract: the noise-free surface matches
+``lustre_sim.batch_mean_performance`` to float32 accuracy (pinned in
+tests/test_episode.py); the noise *structure* (which draws exist, what they
+multiply) mirrors ``LustreSimEnv._run_with_perf`` draw-for-draw, but the
+streams differ (JAX threefry vs numpy PCG64), so individual runs are not
+comparable sample-for-sample — distributions are.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.action_mapping import ParamSpace, jax_coord_maps
+from repro.envs.base import EnvModel
+from repro.envs.lustre_sim import (
+    CLIENT_NIC_MBPS,
+    HDD_MBPS,
+    L_DEFAULT,
+    NET_CAP,
+    paper_param_space,
+)
+from repro.envs.metrics import LUSTRE_STATE_METRICS, MiB, lustre_metric_specs
+from repro.envs.workloads import WORKLOADS, Workload
+
+
+class LustreParams(NamedTuple):
+    """Per-session workload shape parameters (traced data, so a fleet mixing
+    workloads shares one compiled step)."""
+
+    base_mbps: jnp.ndarray
+    gamma: jnp.ndarray
+    beta: jnp.ndarray
+    l_opt: jnp.ndarray
+    l_width: jnp.ndarray
+    s_amp: jnp.ndarray
+    io_kib: jnp.ndarray
+    write_frac: jnp.ndarray
+    meta_rate: jnp.ndarray
+    cache_base: jnp.ndarray
+    noise_sigma: jnp.ndarray
+    l_gate: jnp.ndarray
+    gate_width: jnp.ndarray
+    cache_kappa: jnp.ndarray
+
+    @classmethod
+    def from_workload(cls, w: Workload) -> "LustreParams":
+        return cls(*(jnp.float32(getattr(w, f)) for f in cls._fields))
+
+
+class LustreEnvState(NamedTuple):
+    """Carried env state: PRNG chain, latent cache warmth, and the decoded
+    value vector of the last applied configuration (NaN before the first
+    apply, so the first apply always counts as a config change — matching
+    ``LustreSimEnv``'s empty ``_last_config``)."""
+
+    key: jax.Array
+    warmth: jnp.ndarray        # f32 scalar in [0, 1]
+    last_values: jnp.ndarray   # f32 [m] decoded parameter values
+
+
+@functools.lru_cache(maxsize=None)
+def build_lustre_fns(space: ParamSpace, dfs_scope: tuple,
+                     run_seconds: float, sample_period: float) -> tuple:
+    """(init_fn, step_fn) for one parameter space (cached: fleets sharing a
+    space share the function objects, hence one jit cache entry)."""
+    maps = jax_coord_maps(space)
+    names = space.names
+    m = space.dim
+    pos = {n: j for j, n in enumerate(names)}
+    if "stripe_count" not in pos or "stripe_size" not in pos:
+        raise ValueError("Lustre model needs stripe_count and stripe_size")
+    dfs_mask = jnp.asarray([n in dfs_scope for n in names])
+    n_samples = max(2, int(run_seconds / sample_period))
+
+    def init_fn(params, key):
+        del params
+        return LustreEnvState(key=key, warmth=jnp.float32(0.5),
+                              last_values=jnp.full((m,), jnp.nan, jnp.float32))
+
+    def mean_perf(params, d):
+        """Noise-free surface for one decoded config — the in-graph twin of
+        ``lustre_sim.batch_mean_performance`` (N == 1)."""
+        p = params
+        sc = d[pos["stripe_count"]]["value"]
+        l = d[pos["stripe_size"]]["log2"] - 16.0  # log2(bytes / 64 KiB)
+
+        # striping parallelism vs contention, gated by stripe size
+        par = sc ** p.gamma * jnp.exp(-p.beta * (sc - 1.0))
+        r_gate = 1.0 / (1.0 + jnp.exp(-(l - p.l_gate) / p.gate_width))
+        p_eff = jnp.where(par >= 1.0, 1.0 + (par - 1.0) * r_gate, par)
+
+        def s_raw(ll):
+            return 1.0 + p.s_amp * (1.0 - ((ll - p.l_opt) / p.l_width) ** 2)
+
+        s = jnp.maximum(0.4, s_raw(l)) / jnp.maximum(0.4, s_raw(L_DEFAULT))
+        x = jnp.maximum(
+            0.6, 1.0 - 0.03 * jnp.maximum(0.0, sc - 1.0)
+            * jnp.maximum(0.0, l - 8.0))
+        t = p.base_mbps * p_eff * s * x
+
+        if "service_threads" in pos:
+            lg_th = d[pos["service_threads"]]["log2"]
+            t = t * (0.75 + 0.33 * jnp.exp(-((lg_th - 7.0) / 3.0) ** 2))
+
+        # client-knob factors (exactly the ``_client_knob_factor`` responses)
+        if "max_rpcs_in_flight" in pos:
+            rif = d[pos["max_rpcs_in_flight"]]["value"]
+            lg_rif = d[pos["max_rpcs_in_flight"]]["log2"]
+            per_ost = rif / jnp.maximum(sc, 1.0)
+            conc = per_ost / (per_ost + 2.0)
+            over = 1.0 - 0.03 * p.meta_rate * jnp.maximum(0.0, lg_rif - 5.0)
+            t = t * conc / (8.0 / 10.0) * jnp.maximum(over, 0.7)
+        if "max_pages_per_rpc" in pos:
+            lg_pg = d[pos["max_pages_per_rpc"]]["log2"]
+            lr_opt = jnp.clip(p.l_opt, 0.0, 4.0)
+
+            def rpc_resp(lr):
+                return 1.0 + 0.10 * (1.0 - ((lr - lr_opt) / 4.0) ** 2)
+
+            # wire RPC = min(pages * 4 KiB, stripe_size), in log2(KiB / 64)
+            t = t * rpc_resp(jnp.minimum(lg_pg - 4.0, l)) \
+                / rpc_resp(jnp.minimum(4.0, l))
+        if "max_dirty_mb" in pos:
+            dirty = d[pos["max_dirty_mb"]]["value"]
+            lg_dirty = d[pos["max_dirty_mb"]]["log2"]
+            h = 1.0 - jnp.exp(-dirty / 24.0)
+            h0 = 1.0 - np.exp(-32.0 / 24.0)
+            burst = 1.0 - 0.02 * jnp.maximum(0.0, lg_dirty - 9.0)
+            t = t * ((1.0 - p.write_frac) + p.write_frac * h / h0) * burst
+        if "read_ahead_mb" in pos:
+            ra = d[pos["read_ahead_mb"]]["value"]
+            lg_ra = d[pos["read_ahead_mb"]]["log2"]
+            seq = jnp.clip(jnp.log2(p.io_kib / 8.0) / 7.0, 0.0, 1.0)
+            rf = 1.0 - p.write_frac
+            h = 1.0 - jnp.exp(-ra / 48.0)
+            h0 = 1.0 - np.exp(-64.0 / 48.0)
+            gain = 0.25 * rf * seq * (h / h0 - 1.0)
+            waste = 0.12 * rf * (1.0 - seq) * jnp.clip(
+                (lg_ra - 6.0) / 4.0, 0.0, 1.0)
+            t = t * (1.0 + gain - waste)
+        if "checksums" in pos:
+            ck_on = d[pos["checksums"]]["value"] >= 0.5
+            t = t * jnp.where(ck_on, 1.0, 1.04 + 0.06 * p.write_frac)
+
+        t = jnp.minimum(jnp.minimum(t, NET_CAP * 0.95), sc * HDD_MBPS * 1.05)
+        amp = 1.0 + 0.6 * jnp.maximum(0.0, L_DEFAULT - l) / L_DEFAULT
+        iops = t * 1024.0 / p.io_kib * amp
+        return {"throughput": t, "iops": iops, "util": t / NET_CAP,
+                "l": l, "sc": sc}
+
+    def perf_fn(params, action):
+        """Noise-free surface for one unit action (tests/benchmarks)."""
+        a = jnp.clip(jnp.asarray(action, jnp.float32), 0.0, 1.0)
+        return mean_perf(params, [maps[j](a[j]) for j in range(m)])
+
+    def step_fn(params, state, action, eval_run):
+        p = params
+        a = jnp.clip(jnp.asarray(action, jnp.float32), 0.0, 1.0)
+        d = [maps[j](a[j]) for j in range(m)]
+        values = jnp.stack([c["value"] for c in d])
+        changed = values != state.last_values  # NaN != v on the first apply
+        changed_any = jnp.any(changed)
+        dfs_changed = jnp.any(changed & dfs_mask)
+
+        key, k_w, k_run, k_samp, k_restart, k_metrics = jax.random.split(
+            state.key, 6)
+
+        # latent cache warmth: layout change flushes caches; AR(1) otherwise
+        warmth = jnp.where(changed_any, state.warmth * 0.4, state.warmth)
+        warmth = 0.6 * warmth + 0.4 * jax.random.uniform(k_w)
+        warmth_eff = jnp.float32(0.5) if eval_run else warmth
+
+        perf = mean_perf(params, d)
+        t, iops, util = perf["throughput"], perf["iops"], perf["util"]
+        l, sc = perf["l"], perf["sc"]
+
+        # run-level noise: explainable (cache warmth) x heteroscedastic
+        run_len = 1800.0 if eval_run else run_seconds
+        cache_factor = jnp.exp(p.cache_kappa * (warmth_eff - 0.5))
+        het = 1.4 - 0.8 * jnp.minimum(1.0, util)
+        sigma = p.noise_sigma * het * np.float32(
+            np.sqrt(run_seconds / run_len))
+        run_factor = cache_factor * jnp.exp(sigma * jax.random.normal(k_run))
+        sample_factor = jnp.exp(
+            (p.noise_sigma / 2.0)
+            * jax.random.normal(k_samp, (n_samples,)))
+        tput = t * run_factor * sample_factor      # [n_samples]
+        iops_s = iops * run_factor * sample_factor
+
+        # Table-I metrics, consistent with the delivered per-sample throughput
+        ks = jax.random.split(k_metrics, 10)
+
+        def jitter(v, k, s=0.05):
+            return v * jnp.exp(s * jax.random.normal(k, (n_samples,)))
+
+        rpc_mb = jnp.minimum(jnp.exp2(l - 4.0), 4.0)  # RPC <= 4 MiB
+        latency = 0.05 * (1.0 + 3.0 * util ** 2)
+        write_mb = tput * p.write_frac
+        read_mb = tput - write_mb
+        cur_dirty = jitter(write_mb * 2.0 * MiB, ks[0])
+        cur_grant = jitter((sc * 32.0 + write_mb) * MiB, ks[1])
+        read_rpcs = jitter(read_mb / jnp.maximum(rpc_mb, 1e-3) * latency,
+                           ks[2])
+        write_rpcs = jitter(write_mb / jnp.maximum(rpc_mb, 1e-3) * latency,
+                            ks[3])
+        pend_r = jitter((read_mb / 4.0) * 256.0 * util ** 2, ks[4])
+        pend_w = jitter((write_mb / 4.0) * 256.0 * util ** 2, ks[5])
+        cache_hit = jnp.clip(
+            p.cache_base + 0.45 * (warmth_eff - 0.5)
+            + 0.03 * (l - L_DEFAULT) - 0.2 * util
+            + 0.02 * jax.random.normal(ks[6], (n_samples,)), 0.0, 1.0)
+        cpu_idle = jnp.clip(
+            100.0 - 55.0 * p.meta_rate - 25.0 * util
+            + 2.0 * jax.random.normal(ks[7], (n_samples,)), 0.0, 100.0)
+        iowait = jnp.clip(
+            35.0 * p.meta_rate * (0.5 + util) + 8.0 * util
+            + 1.5 * jax.random.normal(ks[8], (n_samples,)), 0.0, 100.0)
+        ram = jnp.clip(
+            28.0 + 40.0 * util + write_mb * 2.0 / (16.0 * 1024.0) * 100.0
+            + 1.5 * jax.random.normal(ks[9], (n_samples,)), 0.0, 100.0)
+
+        # client-knob visibility (``envs.metrics.couple_client_knobs``)
+        if "max_rpcs_in_flight" in pos:
+            cap = d[pos["max_rpcs_in_flight"]]["value"] * jnp.maximum(sc, 1.0)
+            pend_r = pend_r + jnp.maximum(0.0, read_rpcs - cap) * 256.0
+            pend_w = pend_w + jnp.maximum(0.0, write_rpcs - cap) * 256.0
+            read_rpcs = jnp.minimum(read_rpcs, cap)
+            write_rpcs = jnp.minimum(write_rpcs, cap)
+        if "max_dirty_mb" in pos:
+            cap = d[pos["max_dirty_mb"]]["value"] * MiB
+            cur_dirty = jnp.minimum(cur_dirty, cap)
+            cur_grant = jnp.minimum(cur_grant, 2.0 * cap + 32.0 * MiB)
+        if "read_ahead_mb" in pos:
+            ra = d[pos["read_ahead_mb"]]["value"]
+            seq = jnp.clip(jnp.log2(p.io_kib / 8.0) / 7.0, 0.0, 1.0)
+            h = 1.0 - jnp.exp(-ra / 48.0)
+            h0 = 1.0 - np.exp(-64.0 / 48.0)
+            shift = 0.10 * (1.0 - p.write_frac) * seq * (h / h0 - 1.0)
+            cache_hit = jnp.clip(cache_hit + shift, 0.0, 1.0)
+        if "checksums" in pos:
+            ck_on = d[pos["checksums"]]["value"] >= 0.5
+            cpu_idle = jnp.where(
+                ck_on, jnp.clip(cpu_idle - 8.0 * util, 0.0, 100.0), cpu_idle)
+
+        # Windowed mean over the run's samples, in LUSTRE_STATE_METRICS order.
+        # Serial left-to-right fold, NOT jnp.mean: XLA's reduce emitter picks
+        # context-dependent reduction trees on CPU, which would let the fused
+        # episode and the host-adapter step disagree by ulps under
+        # cancellation — the bitwise engine-parity contract forbids that.
+        def smean(x):
+            acc = x[0]
+            for i in range(1, n_samples):
+                acc = acc + x[i]
+            return acc / n_samples
+
+        metrics_vec = jnp.stack([
+            smean(cur_dirty), smean(cur_grant), smean(read_rpcs),
+            smean(write_rpcs), smean(pend_r), smean(pend_w),
+            smean(cache_hit), smean(cpu_idle), smean(iowait),
+            smean(ram), smean(tput), smean(iops_s),
+        ]).astype(jnp.float32)
+
+        # §III-F restart downtime: 12-20 s workload restart, +30 s DFS scope
+        u = jax.random.uniform(k_restart, minval=12.0, maxval=20.0)
+        cost = jnp.where(
+            changed_any, u + jnp.where(dfs_changed, 30.0, 0.0), 0.0)
+
+        new_state = LustreEnvState(key=key, warmth=warmth, last_values=values)
+        return new_state, metrics_vec, cost
+
+    return init_fn, step_fn, perf_fn
+
+
+class LustreSimModel(EnvModel):
+    """``EnvModel`` over the calibrated Lustre surface.
+
+    ``space`` defaults to the paper's 2-D layout pair; pass
+    ``magpie8_param_space()`` (with ``dfs_scope=("service_threads",
+    "checksums")``) for the 8-knob V2 environment — or build either via
+    ``LustreSimEnv.as_model()`` / ``LustreSimV2.as_model()``.
+    """
+
+    def __init__(self, workload: str = "file_server",
+                 space: ParamSpace = None,
+                 dfs_scope: tuple = ("service_threads",),
+                 run_seconds: float = 120.0, sample_period: float = 10.0):
+        if workload not in WORKLOADS:
+            raise ValueError(f"unknown workload {workload!r}; "
+                             f"choose from {sorted(WORKLOADS)}")
+        self.workload = WORKLOADS[workload]
+        self.param_space = space if space is not None else paper_param_space()
+        self.dfs_scope = tuple(k for k in dfs_scope
+                               if k in self.param_space.names)
+        self.metric_specs = lustre_metric_specs()
+        self.state_metrics = list(LUSTRE_STATE_METRICS)
+        self.run_seconds = run_seconds
+        self.sample_period = sample_period
+        self.params = LustreParams.from_workload(self.workload)
+        self._init_fn, self._step_fn, self._perf_fn = build_lustre_fns(
+            self.param_space, self.dfs_scope, run_seconds, sample_period)
+
+    @property
+    def init_fn(self):
+        return self._init_fn
+
+    @property
+    def step_fn(self):
+        return self._step_fn
+
+    def mean_performance(self, config: dict) -> dict:
+        """Noise-free steady-state performance for a config — the float32
+        in-graph twin of ``LustreSimEnv.mean_performance`` (fidelity pinned
+        in tests/test_episode.py)."""
+        perf = self._perf_fn(self.params, self.param_space.to_action(config))
+        return {k: float(v) for k, v in perf.items()}

@@ -279,6 +279,7 @@ class LustreSimEnv(TuningEnvironment):
         self.run_seconds = run_seconds
         self.sample_period = sample_period
         self.collector = MetricsCollector()
+        self._seed = seed
         self._rng = np.random.default_rng(seed)
         self.sim_clock = 0.0  # simulated seconds elapsed (runs + restarts)
         self.restart_events: list = []  # (scope, seconds) per config change
@@ -430,6 +431,29 @@ class LustreSimEnv(TuningEnvironment):
             out[scope]["count"] += 1
             out[scope]["seconds"] += seconds
         return out
+
+    # pure-JAX twin (the fused episode engine's env core) -----------------
+
+    def as_model(self):
+        """The pure-functional JAX twin of this environment: same parameter
+        space, workload, surface and metric coupling as ``EnvModel`` pure
+        functions (``envs.lustre_model.LustreSimModel``). Noise structure
+        matches draw-for-draw but flows through a JAX key instead of this
+        instance's numpy Generator, so the twin is a *model of the same
+        system*, not a bit-replay of this instance's stream."""
+        from repro.envs.lustre_model import LustreSimModel
+        return LustreSimModel(
+            self.workload.name, space=self.param_space,
+            dfs_scope=type(self).DFS_SCOPE,
+            run_seconds=self.run_seconds, sample_period=self.sample_period)
+
+    def to_model_env(self, seed: int = None):
+        """``ModelEnv`` host adapter over ``as_model()`` — a drop-in
+        ``TuningEnvironment`` whose ``apply`` is a thin dict shim over the
+        pure core (one jitted step per call, bit-identical to the graph)."""
+        from repro.envs.base import ModelEnv
+        return ModelEnv(self.as_model(),
+                        seed=self._seed if seed is None else seed)
 
     # convenience for tests / benchmarks ---------------------------------
 

@@ -1,0 +1,103 @@
+"""Synthetic pure-JAX environment model over an arbitrary quantized space.
+
+A reference ``EnvModel`` implementation (and the property-test workhorse):
+a random smooth response surface whose metrics depend on the *decoded*
+configuration only — the contract every env model must honour so the fused
+episode engine (raw actions in-graph) and the host adapter (actions
+round-tripped through config dicts) see identical dynamics. Used by
+tests/test_episode.py to prove scan/host bitwise equality over random
+``ParamSpace``s, and by docs examples that need an env without Lustre
+semantics.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.action_mapping import ParamSpace, jax_coord_maps
+from repro.core.scalarization import MetricSpec
+from repro.envs.base import EnvModel
+
+
+class SyntheticEnvState(NamedTuple):
+    key: jax.Array
+    last_values: jnp.ndarray  # f32 [m], NaN before the first apply
+
+
+class SyntheticParams(NamedTuple):
+    w: jnp.ndarray  # [k, m] surface weights
+    b: jnp.ndarray  # [k] surface offsets
+
+
+@functools.lru_cache(maxsize=None)
+def _build_fns(space: ParamSpace, n_metrics: int, noise: float,
+               dfs_scope: tuple) -> tuple:
+    maps = jax_coord_maps(space)
+    m = space.dim
+    dfs_mask = jnp.asarray([n in dfs_scope for n in space.names])
+
+    def init_fn(params, key):
+        del params
+        return SyntheticEnvState(
+            key=key, last_values=jnp.full((m,), jnp.nan, jnp.float32))
+
+    def step_fn(params, state, action, eval_run):
+        a = jnp.clip(jnp.asarray(action, jnp.float32), 0.0, 1.0)
+        d = [maps[j](a[j]) for j in range(m)]
+        values = jnp.stack([c["value"] for c in d])
+        q = jnp.stack([c["q"] for c in d])  # canonical unit coords
+        changed = values != state.last_values
+        changed_any = jnp.any(changed)
+        dfs_changed = jnp.any(changed & dfs_mask)
+
+        key, k_noise, k_restart = jax.random.split(state.key, 3)
+        clean = 5.0 * (1.0 + jnp.tanh(params.w @ q + params.b))  # [k] in (0,10)
+        sigma = np.float32(noise) * (0.25 if eval_run else 1.0)
+        metrics = clean * jnp.exp(
+            sigma * jax.random.normal(k_noise, clean.shape))
+
+        u = jax.random.uniform(k_restart, minval=5.0, maxval=10.0)
+        cost = jnp.where(
+            changed_any, u + jnp.where(dfs_changed, 20.0, 0.0), 0.0)
+        return (SyntheticEnvState(key=key, last_values=values),
+                metrics.astype(jnp.float32), cost)
+
+    return init_fn, step_fn
+
+
+class SyntheticSurfaceModel(EnvModel):
+    """Random-but-deterministic smooth surface: metrics
+    ``5 * (1 + tanh(W q + b))`` over the canonical unit coordinates ``q`` of
+    the decoded config, with multiplicative lognormal noise. ``surface_seed``
+    fixes W/b (so two instances share a surface); the episode stream comes
+    from the key passed to ``init_state``."""
+
+    def __init__(self, space: ParamSpace, n_metrics: int = 3,
+                 surface_seed: int = 0, noise: float = 0.05,
+                 dfs_scope: tuple = ()):
+        self.param_space = space
+        self.dfs_scope = tuple(k for k in dfs_scope if k in space.names)
+        self.state_metrics = [f"m{i}" for i in range(n_metrics)]
+        self.metric_specs = {
+            n: MetricSpec(n, 0.0, 10.0, description="synthetic surface metric")
+            for n in self.state_metrics}
+        rng = np.random.default_rng(surface_seed)
+        self.params = SyntheticParams(
+            w=jnp.asarray(rng.normal(0.0, 1.0, (n_metrics, space.dim)),
+                          jnp.float32),
+            b=jnp.asarray(rng.normal(0.0, 0.5, (n_metrics,)), jnp.float32))
+        self._init_fn, self._step_fn = _build_fns(
+            space, n_metrics, float(noise), self.dfs_scope)
+
+    @property
+    def init_fn(self):
+        return self._init_fn
+
+    @property
+    def step_fn(self):
+        return self._step_fn

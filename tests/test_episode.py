@@ -1,0 +1,333 @@
+"""Episode-engine tests: pure-JAX env models, the ModelEnv adapter, and the
+fused whole-episode ``lax.scan`` engine.
+
+Load-bearing properties:
+  * the fused ``run_episode_scan`` path (``Tuner(engine="scan")``) is
+    trajectory-equal to the host-loop ``Tuner`` driving the same pure model
+    through the ``ModelEnv`` adapter — decision trajectory (configs, restart
+    accounting, best config) exactly, float fields to within a few float32
+    ulps of XLA CPU cross-program codegen variance — on the paper's 2-D
+    space, the 8-knob V2 space, and (hypothesis) random mixed-kind
+    quantized spaces with random step counts;
+  * ``ModelEnv.apply_batch`` (the baselines' probe-batch fast path) is
+    bitwise the sequential applies;
+  * the pure Lustre model's noise-free surface matches the calibrated numpy
+    surface to float32 accuracy;
+  * ``evaluate_config`` sums-then-divides (regression: per-run division
+    drifted), and the evaluation path keeps fleet-of-1 parity.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DDPGConfig,
+    MagpieAgent,
+    Scalarizer,
+    Tuner,
+    evaluate_config,
+)
+from repro.core.action_mapping import ParamSpace, ParamSpec
+from repro.envs import LustreSimEnv, LustreSimV2, ModelEnv, SyntheticSurfaceModel
+
+
+def _tuner(env_cls, engine, seed=3, steps_updates=6, warmup=4, workload="seq_write"):
+    env = env_cls(workload, seed=seed).to_model_env()
+    scal = Scalarizer(weights={"throughput": 1.0}, specs=env.metric_specs)
+    agent = MagpieAgent(
+        DDPGConfig.for_env(env, updates_per_step=steps_updates),
+        seed=seed, warmup_steps=warmup)
+    return Tuner(env, scal, agent, engine=engine, eval_runs=2)
+
+
+def _ulp_equal(a: float, b: float, maxulp: int) -> bool:
+    if a == b:
+        return True
+    np.testing.assert_array_max_ulp(np.float32(a), np.float32(b),
+                                    maxulp=maxulp)
+    return True
+
+
+def _assert_bitwise_equal_runs(host, scan, maxulp: int = 4):
+    """Histories and outcomes identical (timings excluded).
+
+    The engines run the same float32 arithmetic step for step, but XLA CPU
+    compiles the host loop's standalone dispatches and the fused episode as
+    different programs, and its codegen (FMA/vectorization choices) is
+    context-dependent — so cancellation-prone values can land a few ulps
+    apart (observed ≤ 2 ULP; the fusion-island barriers in ``core.episode``
+    keep it that tight). The contract pinned here: the DECISION trajectory —
+    every config, the restart accounting, the best config — is exactly
+    equal, and every float field agrees to ``maxulp`` float32 ulps."""
+    assert len(host.history) == len(scan.history)
+    for h, s in zip(host.history, scan.history):
+        assert h.config == s.config
+        assert _ulp_equal(h.restart_seconds, s.restart_seconds, maxulp)
+        assert set(h.metrics) == set(s.metrics)
+        for k in h.metrics:
+            assert _ulp_equal(h.metrics[k], s.metrics[k], maxulp), k
+        assert _ulp_equal(h.objective, s.objective, maxulp)
+        assert _ulp_equal(h.reward, s.reward, maxulp)
+    assert host.best_config == scan.best_config
+    assert _ulp_equal(host.best_objective, scan.best_objective, maxulp)
+    for k in host.best_metrics:
+        assert _ulp_equal(host.best_metrics[k], scan.best_metrics[k], maxulp)
+    assert host.default_metrics == scan.default_metrics  # pre-episode: exact
+
+
+# ---------------------------------------------------------------------------
+# Scan engine == host loop, bitwise (acceptance: 2-D and 8-D)
+# ---------------------------------------------------------------------------
+
+def test_scan_engine_matches_host_loop_learn_free():
+    """Learning-free episodes (pure act → env → reward sweeps, the §III-E
+    evaluation mode) hold the same equivalence contract on both spaces."""
+    for env_cls in (LustreSimEnv, LustreSimV2):
+        host = _tuner(env_cls, "host").run(12, learn=False)
+        scan = _tuner(env_cls, "scan").run(12, learn=False)
+        _assert_bitwise_equal_runs(host, scan, maxulp=4)
+
+
+def test_scan_engine_matches_host_loop_2d():
+    host = _tuner(LustreSimEnv, "host").run(9)
+    scan = _tuner(LustreSimEnv, "scan").run(9)
+    _assert_bitwise_equal_runs(host, scan, maxulp=4)
+
+
+def test_scan_engine_matches_host_loop_8d():
+    host = _tuner(LustreSimV2, "host").run(9)
+    scan = _tuner(LustreSimV2, "scan").run(9)
+    _assert_bitwise_equal_runs(host, scan, maxulp=4)
+
+
+def test_scan_engine_progressive_runs_match_host():
+    """Engines stay aligned across repeated run() calls (Fig. 7 progressive
+    tuning): agent, buffer, noise and env key chain all resume identically."""
+    th = _tuner(LustreSimEnv, "host", seed=7)
+    ts = _tuner(LustreSimEnv, "scan", seed=7)
+    for steps in (3, 5):
+        _assert_bitwise_equal_runs(th.run(steps), ts.run(steps), maxulp=4)
+    assert len(ts.history) == 8
+
+
+def test_scan_engine_restart_accounting_matches_host():
+    th, ts = _tuner(LustreSimV2, "host"), _tuner(LustreSimV2, "scan")
+    th.run(8), ts.run(8)
+    sh, ss = th.env.restart_summary(), ts.env.restart_summary()
+    for scope in ("workload", "dfs"):
+        assert sh[scope]["count"] == ss[scope]["count"]
+        assert np.isclose(sh[scope]["seconds"], ss[scope]["seconds"])
+    assert np.isclose(th.simulated_restart_seconds,
+                      ts.simulated_restart_seconds)
+
+
+def test_scan_engine_requires_model_env():
+    env = LustreSimEnv("seq_write", seed=0)
+    scal = Scalarizer(weights={"throughput": 1.0}, specs=env.metric_specs)
+    with pytest.raises(ValueError, match="pure-model"):
+        Tuner(env, scal, MagpieAgent(DDPGConfig.for_env(env)), engine="scan")
+    with pytest.raises(ValueError, match="engine"):
+        Tuner(env, scal, MagpieAgent(DDPGConfig.for_env(env)), engine="warp")
+
+
+def test_model_env_rejects_continuous_spaces():
+    space = ParamSpace(specs=(
+        ParamSpec("x", "continuous", 0.0, 1.0, default=0.0),))
+    with pytest.raises(ValueError, match="host"):
+        SyntheticSurfaceModel(space)  # jax_coord_maps refuses continuous
+
+    class _FakeModel:
+        param_space = space
+
+    with pytest.raises(ValueError, match="quantized"):
+        ModelEnv(_FakeModel())
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis: random quantized spaces, random step counts
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # CI installs it (requirements.txt); skip locally without
+    HAVE_HYPOTHESIS = False
+
+
+def _random_space(rng: np.random.Generator, dim: int) -> ParamSpace:
+    kinds = ["discrete", "boolean", "log2_int", "choice", "categorical"]
+    specs = []
+    for j in range(dim):
+        kind = kinds[int(rng.integers(len(kinds)))]
+        if kind == "discrete":
+            lo = int(rng.integers(0, 4))
+            specs.append(ParamSpec(f"p{j}", "discrete", lo,
+                                   lo + int(rng.integers(1, 7)), default=lo))
+        elif kind == "boolean":
+            specs.append(ParamSpec(f"p{j}", "boolean", default=bool(j % 2)))
+        elif kind == "log2_int":
+            e_lo = int(rng.integers(0, 4))
+            e_hi = e_lo + int(rng.integers(1, 6))
+            specs.append(ParamSpec(f"p{j}", "log2_int", 2 ** e_lo, 2 ** e_hi,
+                                   default=2 ** e_lo))
+        else:
+            k = int(rng.integers(2, 7))
+            values = tuple(sorted(rng.choice(
+                np.arange(1, 64), size=k, replace=False).tolist()))
+            specs.append(ParamSpec(f"p{j}", kind, values=values,
+                                   default=values[0]))
+    return ParamSpace(specs=tuple(specs))
+
+
+def _check_random_space_parity(dim, steps, space_seed, seed):
+    rng = np.random.default_rng(space_seed)
+    space = _random_space(rng, dim)
+    dfs = tuple(n for n in space.names if rng.uniform() < 0.3)
+
+    def build(engine):
+        model = SyntheticSurfaceModel(space, n_metrics=3,
+                                      surface_seed=space_seed, dfs_scope=dfs)
+        env = ModelEnv(model, seed=seed)
+        scal = Scalarizer(weights={"m0": 0.7, "m2": 0.3},
+                          specs=env.metric_specs)
+        agent = MagpieAgent(DDPGConfig.for_env(env, updates_per_step=2),
+                            seed=seed, warmup_steps=2, buffer_capacity=8)
+        return Tuner(env, scal, agent, engine=engine, eval_runs=1)
+
+    _assert_bitwise_equal_runs(build("host").run(steps),
+                               build("scan").run(steps), maxulp=4)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=6, deadline=None)
+    @given(data=st.data())
+    def test_scan_engine_bitwise_on_random_spaces(data):
+        """run_episode_scan == host-loop Tuner over random mixed-kind spaces
+        (2-D and 8-D) and random step counts, bit for bit."""
+        _check_random_space_parity(
+            dim=data.draw(st.sampled_from([2, 8]), label="dim"),
+            steps=data.draw(st.integers(1, 6), label="steps"),
+            space_seed=data.draw(st.integers(0, 2 ** 16), label="space_seed"),
+            seed=data.draw(st.integers(0, 2 ** 16), label="seed"))
+else:
+    @pytest.mark.parametrize("dim,steps,space_seed,seed", [
+        (2, 3, 101, 7), (8, 5, 2025, 13), (8, 1, 77, 3)])
+    def test_scan_engine_bitwise_on_random_spaces(dim, steps, space_seed,
+                                                  seed):
+        """Fixed-seed fallback when hypothesis is unavailable — same check,
+        three representative draws."""
+        _check_random_space_parity(dim, steps, space_seed, seed)
+
+
+# ---------------------------------------------------------------------------
+# Pure model fidelity + adapter batch path
+# ---------------------------------------------------------------------------
+
+def test_lustre_model_surface_matches_numpy_to_f32():
+    """The in-graph surface is the calibrated numpy surface, at float32."""
+    rng = np.random.default_rng(0)
+    for env_cls in (LustreSimEnv, LustreSimV2):
+        for workload in ("seq_write", "file_server", "random_rw"):
+            env = env_cls(workload, seed=0)
+            model = env.as_model()
+            configs = env.param_space.to_configs(
+                rng.uniform(size=(20, env.param_space.dim)))
+            for c in configs:
+                ref, got = env.mean_performance(c), model.mean_performance(c)
+                for k in ("throughput", "iops", "util"):
+                    assert np.isclose(ref[k], got[k], rtol=1e-5), (
+                        workload, k, c)
+
+
+def test_model_env_apply_batch_bitwise_matches_sequential():
+    e1 = LustreSimV2("seq_write", seed=4).to_model_env()
+    e2 = LustreSimV2("seq_write", seed=4).to_model_env()
+    rng = np.random.default_rng(1)
+    configs = e1.param_space.to_configs(rng.uniform(size=(7, e1.param_space.dim)))
+    batch_metrics, batch_costs = e1.apply_batch(configs)
+    prev = dict(e2.param_space.default_config())
+    for c, bm, bc in zip(configs, batch_metrics, batch_costs):
+        m = e2.apply(c)
+        cost = e2.restart_cost(c, prev)
+        assert m == bm
+        assert cost == float(bc)
+        prev = c
+    assert e1.restart_summary() == e2.restart_summary()
+
+
+def test_model_env_restart_scope_attribution():
+    env = LustreSimV2("seq_write", seed=0).to_model_env()
+    base = env.param_space.default_config()
+    env.apply(base)
+    env.restart_cost(base, {})
+    flipped = dict(base, checksums=not base["checksums"])  # DFS-scope knob
+    env.apply(flipped)
+    env.restart_cost(flipped, base)
+    summary = env.restart_summary()
+    assert summary["dfs"]["count"] >= 1
+    assert summary["dfs"]["seconds"] >= 42.0  # 12-20 s workload + 30 s DFS
+
+
+# ---------------------------------------------------------------------------
+# evaluate_config regression (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+class _SequenceEnv:
+    """Returns scripted metric values per apply call."""
+
+    def __init__(self, values):
+        self.values = list(values)
+        self.calls = 0
+
+    def apply(self, config, eval_run=False):
+        v = self.values[self.calls % len(self.values)]
+        self.calls += 1
+        return {"m": v}
+
+
+def test_evaluate_config_sums_then_divides_once():
+    # 3 runs of 0.1: the old per-run `v / runs` accumulation yields
+    # fl(fl(0.1/3)+fl(0.1/3))+fl(0.1/3) = 0.09999999999999999 — drifted and
+    # order-dependent. The fix divides the exact sum once.
+    env = _SequenceEnv([0.1, 0.1, 0.1])
+    got = evaluate_config(env, {}, runs=3)["m"]
+    assert got == (0.1 + 0.1 + 0.1) / 3
+    drifted = 0.0
+    for _ in range(3):
+        drifted += 0.1 / 3
+    assert got != drifted  # the bug this test pins
+
+
+def test_scan_fleet_of_one_matches_host_loop_tuner():
+    """Acceptance: a fleet-of-1 fused episode reproduces the host-loop
+    ``Tuner`` session — decision trajectory exact, floats within ulps — on
+    the 2-D and the 8-D space."""
+    from repro.core import FleetTuner
+    for env_cls in (LustreSimEnv, LustreSimV2):
+        seed, steps = 5, 8
+        env = env_cls("seq_write", seed=seed).to_model_env()
+        scal = Scalarizer(weights={"throughput": 1.0}, specs=env.metric_specs)
+        agent = MagpieAgent(DDPGConfig.for_env(env), seed=seed)
+        single = Tuner(env, scal, agent, engine="host").run(steps)
+
+        fleet = FleetTuner.from_grid(
+            ["seq_write"], [{"throughput": 1.0}], [seed],
+            env_cls=env_cls, engine="scan")
+        got = fleet.run(steps).results[0]
+        _assert_bitwise_equal_runs(single, got, maxulp=4)
+
+
+def test_evaluation_path_fleet_of_one_parity():
+    """Default + final evaluations (the evaluate_config path) agree bitwise
+    between the single host Tuner and the fleet — the regression the per-run
+    division bug would reintroduce."""
+    from repro.core import FleetTuner
+    seed, workload = 11, "video_server"
+    env = LustreSimEnv(workload, seed=seed)
+    scal = Scalarizer(weights={"throughput": 1.0}, specs=env.metric_specs)
+    agent = MagpieAgent(DDPGConfig.for_env(env), seed=seed)
+    single = Tuner(env, scal, agent).run(4)
+    fleet = FleetTuner.from_grid([workload], [{"throughput": 1.0}], [seed])
+    got = fleet.run(4).results[0]
+    assert got.default_metrics == single.default_metrics
+    assert got.best_metrics == single.best_metrics
