@@ -1,6 +1,6 @@
 """Fleet-tuning performance: fused scan learner + vmapped multi-session fleet.
 
-Two measurements back the fleet subsystem's perf claims:
+Measurements backing the fleet subsystem's perf claims:
 
   1. ``learn()`` path — per-environment-step model-update time for the legacy
      path (``updates_per_step`` separate jitted dispatches + a host round-trip
@@ -15,6 +15,12 @@ Two measurements back the fleet subsystem's perf claims:
   3. Fleet scaling — wall time per tuning step for N concurrent sessions
      (vmapped learner + vectorized response surface) vs N sequential
      single-session tuners.
+  4. Learner formulations at fleet scale (``bench_learner_paths``) — the
+     pre-PR per-update-gather scan vs the pre-gathered scan (the default)
+     vs the packed blocked-GEMM XLA twin of the Pallas kernel
+     (``kernels/ddpg_fused.py``). This is the data behind the dispatch
+     default: on CPU the [P, P]-padded GEMMs lose to the unpadded scan, so
+     the packed formulation runs only as the TPU kernel's shape.
 
 Usage:
     PYTHONPATH=src python benchmarks/fleet_throughput.py [--quick]
@@ -23,13 +29,20 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row
 from repro.core import DDPGConfig, FleetTuner, MagpieAgent, Scalarizer, Tuner
+from repro.core.ddpg import (_ddpg_step, fleet_init, fleet_learn_scan,
+                             gather_minibatches, sample_minibatch_indices)
 from repro.envs import LustreSimEnv, LustreSimV2
+from repro.kernels import ddpg_fused as _fused
+from repro.kernels import ops as _kops
 
 
 def _fill_buffer(agent: MagpieAgent, n: int, rng: np.random.Generator) -> None:
@@ -132,6 +145,91 @@ def bench_fleet_scaling(fleet_sizes: list, steps: int) -> list:
     return rows
 
 
+def bench_learner_paths(fleet_size: int, updates: int, reps: int = 5) -> list:
+    """Learner formulations, one env step's worth of updates at fleet scale.
+
+    Times ONE ``updates``-deep inner loop for ``fleet_size`` concurrent
+    sessions (the per-step learner cost of the fused episode engine) under
+    three formulations of the same math:
+
+      scan_pergather   the pre-PR path: one buffer gather per update inside
+                       the scan body
+      scan_pregather   the default: all ``updates x batch`` rows gathered in
+                       one take, scan over ready batches (bitwise-identical
+                       states — tests/test_ddpg_fused.py)
+      packed_gemm_xla  the Pallas kernel's [P, P]-blocked layout compiled by
+                       XLA (``kernels.ops.ddpg_inner_loop`` fallback)
+
+    Throughput is session-steps/s: fleet_size / seconds-per-inner-loop.
+    """
+    cfg = DDPGConfig(state_dim=12, action_dim=2, updates_per_step=updates)
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in range(fleet_size)])
+    states, (atx, ctx) = fleet_init(keys, cfg)
+    rng = np.random.default_rng(0)
+    cap = 64
+    data = (jnp.asarray(rng.random((fleet_size, cap, 12)), jnp.float32),
+            jnp.asarray(rng.random((fleet_size, cap, 2)), jnp.float32),
+            jnp.asarray(rng.standard_normal((fleet_size, cap)), jnp.float32),
+            jnp.asarray(rng.random((fleet_size, cap, 12)), jnp.float32))
+    sizes = jnp.full((fleet_size,), cap, jnp.int32)
+    lkeys = jnp.stack([jax.random.PRNGKey(s + 3) for s in range(fleet_size)])
+
+    @functools.partial(jax.jit, static_argnames=("nu",))
+    def pergather(states, data, sizes, keys, nu):
+        def one(state, d, size, key):
+            idx = sample_minibatch_indices(key, nu, cfg.batch_size, size)
+            s, a, r, s2 = d
+
+            def body(st, ix):
+                return _ddpg_step(st, (s[ix], a[ix], r[ix], s2[ix]),
+                                  cfg, atx, ctx)
+
+            return jax.lax.scan(body, state, idx)
+
+        return jax.vmap(one)(states, data, sizes, keys)
+
+    dims = _fused.packed_dims(cfg.state_dim, cfg.action_dim, cfg.hidden)
+
+    @functools.partial(jax.jit, static_argnames=("nu",))
+    def packed_gemm(states, data, sizes, keys, nu):
+        def pack_one(state, d, size, key):
+            idx = sample_minibatch_indices(key, nu, cfg.batch_size, size)
+            batches = gather_minibatches(d, idx)
+            a_adam, c_adam = state.actor_opt[0], state.critic_opt[0]
+            packed = _fused.pack_params(
+                state.actor, state.critic, state.actor_targ,
+                state.critic_targ, a_adam.mu, a_adam.nu, c_adam.mu,
+                c_adam.nu, a_adam.count, c_adam.count, dims)
+            return packed, _fused.pack_minibatches(batches, dims)
+
+        packed, kb = jax.vmap(pack_one)(states, data, sizes, keys)
+        return _kops.ddpg_inner_loop(
+            packed, kb, dims=dims, gamma=cfg.gamma, tau=cfg.tau,
+            actor_lr=cfg.actor_lr, critic_lr=cfg.critic_lr, mode="xla")
+
+    def timed(fn):
+        out = fn()
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn()
+            jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / reps
+
+    t_old = timed(lambda: pergather(states, data, sizes, lkeys, updates))
+    t_new = timed(lambda: fleet_learn_scan(states, data, sizes, lkeys, cfg,
+                                           atx, ctx, updates))
+    t_pk = timed(lambda: packed_gemm(states, data, sizes, lkeys, updates))
+
+    rows = [csv_row("learner_path", "sessions", "inner_loop_seconds",
+                    "session_steps_per_sec", "speedup_vs_pergather")]
+    for name, t in (("scan_pergather", t_old), ("scan_pregather", t_new),
+                    ("packed_gemm_xla", t_pk)):
+        rows.append(csv_row(name, fleet_size, f"{t:.4f}",
+                            f"{fleet_size / t:.2f}", f"{t_old / t:.2f}"))
+    return rows
+
+
 class _LegacyAgent(MagpieAgent):
     """The step-by-step host learner: ``updates_per_step`` separate jitted
     dispatches + a host minibatch sample per update — the paper's Table III
@@ -212,14 +310,43 @@ def bench_episode_engine(fleet_sizes: list, steps: int,
     return rows, summary
 
 
+def _learner_summary(rows: list) -> dict:
+    """Parse ``bench_learner_paths`` csv rows into the BENCH json payload."""
+    out = {}
+    for row in rows[1:]:
+        name, sessions, secs, sps, speedup = row.split(",")
+        out[name] = {"sessions": int(sessions),
+                     "inner_loop_seconds": float(secs),
+                     "session_steps_per_sec": float(sps),
+                     "speedup_vs_pergather": float(speedup)}
+    return out
+
+
+# Measurements from the most recent run(quick) call, keyed by ``quick`` —
+# episode_summary reuses them so the csv table and the BENCH_<n>.json point
+# come from ONE measurement instead of re-timing (the CI box has 10-15%
+# run-to-run variance; duplicate timing would let the two outputs disagree).
+_LAST_RESULTS: dict = {}
+
+
 def episode_summary(quick: bool = False) -> dict:
-    """BENCH_<n>.json payload: the episode-engine perf trajectory point."""
-    if quick:
+    """BENCH_<n>.json payload: the episode-engine perf trajectory point,
+    plus the learner-formulation comparison and — when a previous
+    ``BENCH_<n>.json`` exists at the repo root — the measured ratio against
+    its recorded fleet throughput (same box or not, the raw numbers are
+    both preserved, so the comparison is auditable). Reuses the measurements
+    of a preceding ``run(quick)`` call in this process, measuring only if
+    none exist."""
+    if quick in _LAST_RESULTS:
+        summary, learner_rows = _LAST_RESULTS[quick]
+    elif quick:
         _, summary = bench_episode_engine([8], steps=3, updates=24)
+        learner_rows = bench_learner_paths(8, updates=24, reps=2)
     else:
         _, summary = bench_episode_engine([16, 64], steps=5, updates=96)
+        learner_rows = bench_learner_paths(64, updates=96)
     top = summary["fleets"][-1]
-    return {
+    payload = {
         "benchmark": "episode_engine",
         "quick": quick,
         "host_loop_steps_per_sec": summary["host_loop_steps_per_sec"],
@@ -228,7 +355,38 @@ def episode_summary(quick: bool = False) -> dict:
         "fleet_session_steps_per_sec": top["session_steps_per_sec"],
         "speedup_vs_host_loop": top["speedup_vs_host_loop"],
         "fleets": summary["fleets"],
+        "learner_paths": _learner_summary(learner_rows),
     }
+    prev = _previous_bench()
+    if prev is not None and not quick:
+        prev_sps = prev.get("fleet_session_steps_per_sec")
+        if prev_sps:
+            payload["vs_previous_bench"] = {
+                "file": prev["_file"],
+                "fleet_session_steps_per_sec": prev_sps,
+                "ratio": top["session_steps_per_sec"] / prev_sps,
+            }
+    return payload
+
+
+def _previous_bench() -> dict:
+    """Latest FULL-mode repo-root BENCH_<n>.json, or None.
+
+    Quick-mode points (``"quick": true`` — smaller fleets, fewer updates)
+    are skipped: a 64-session/96-update throughput divided by an
+    8-session/24-update one would be a meaningless trajectory ratio."""
+    import json
+    import os
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    latest, n = None, 0
+    while os.path.exists(os.path.join(root, f"BENCH_{n}.json")):
+        with open(os.path.join(root, f"BENCH_{n}.json")) as f:
+            point = json.load(f)
+        if not point.get("quick"):
+            point["_file"] = f"BENCH_{n}.json"
+            latest = point
+        n += 1
+    return latest
 
 
 def run(quick: bool = False) -> list:
@@ -236,13 +394,16 @@ def run(quick: bool = False) -> list:
         rows = bench_learn_paths(env_steps=3, updates=24)
         rows += [""] + bench_dimensionality(env_steps=3, updates=24)
         rows += [""] + bench_fleet_scaling([1, 4], steps=2)
-        erows, _ = bench_episode_engine([8], steps=3, updates=24)
+        learner_rows = bench_learner_paths(8, updates=24, reps=2)
+        erows, summary = bench_episode_engine([8], steps=3, updates=24)
     else:
         rows = bench_learn_paths(env_steps=10, updates=96)
         rows += [""] + bench_dimensionality(env_steps=10, updates=96)
         rows += [""] + bench_fleet_scaling([1, 4, 8, 16], steps=5)
-        erows, _ = bench_episode_engine([16, 64], steps=5, updates=96)
-    return rows + [""] + erows
+        learner_rows = bench_learner_paths(64, updates=96)
+        erows, summary = bench_episode_engine([16, 64], steps=5, updates=96)
+    _LAST_RESULTS[quick] = (summary, learner_rows)
+    return rows + [""] + learner_rows + [""] + erows
 
 
 if __name__ == "__main__":

@@ -25,7 +25,8 @@ from repro.core.scalarization import MetricSpec, Scalarizer, normalize_state
 from repro.core.replay_buffer import BatchedReplayBuffer, ReplayBuffer, Transition
 from repro.core.ddpg import (
     DDPGConfig, DDPGState, OUNoise, ddpg_init, ddpg_learn_scan, ddpg_update,
-    fleet_act, fleet_init, fleet_learn_scan, sample_minibatch_indices,
+    fleet_act, fleet_init, fleet_learn_scan, gather_minibatches,
+    sample_minibatch_indices,
 )
 from repro.core.agent import MagpieAgent
 from repro.core.tuner import Tuner, TuningResult, StepRecord, evaluate_config
@@ -42,7 +43,7 @@ __all__ = [
     "ReplayBuffer", "BatchedReplayBuffer", "Transition",
     "DDPGConfig", "DDPGState", "OUNoise",
     "ddpg_init", "ddpg_update", "ddpg_learn_scan", "sample_minibatch_indices",
-    "fleet_init", "fleet_act", "fleet_learn_scan",
+    "gather_minibatches", "fleet_init", "fleet_act", "fleet_learn_scan",
     "MagpieAgent", "Tuner", "TuningResult", "StepRecord", "evaluate_config",
     "EpisodeTrace", "run_episode_scan", "run_fleet_episode_scan",
     "FleetAgent", "FleetResult", "FleetTuner",

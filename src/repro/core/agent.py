@@ -92,6 +92,9 @@ class MagpieAgent:
         dispatch loop (benchmark reference; see benchmarks/fleet_throughput.py).
         """
         if len(self.buffer) == 0:
+            # host-path guard for the empty-buffer hazard: learning before
+            # the first observe() is a silent no-op here; the fused learner
+            # itself raises if handed size == 0 directly (core.ddpg).
             return {}
         n = self.cfg.updates_per_step if updates is None else updates
         if n <= 0:

@@ -194,24 +194,137 @@ def sample_minibatch_indices(key: jax.Array, num_updates: int, batch_size: int,
 
     On-device replacement for the host-side ``rng.integers`` loop; ``size`` is
     a dynamic operand so a growing buffer never retriggers compilation.
+
+    Precondition: ``size >= 1``. An empty buffer has nothing to sample, and
+    there is deliberately no silent clamp here (an earlier ``maximum(size, 1)``
+    made an empty buffer sample slot 0 — all-zero garbage transitions — with
+    no error). The host entry points (``ddpg_learn_scan``,
+    ``fleet_learn_scan``) raise on a concrete ``size == 0``; in-graph callers
+    must guarantee the invariant structurally, as the episode engine does by
+    writing the step's transition to the FIFO *before* learning
+    (``core.episode``).
     """
-    return jax.random.randint(
-        key, (num_updates, batch_size), 0, jnp.maximum(size, 1))
+    return jax.random.randint(key, (num_updates, batch_size), 0, size)
 
 
-def _learn_scan(state, data, size, key, cfg, actor_tx, critic_tx, num_updates):
-    s, a, r, s2 = data
+def gather_minibatches(data: tuple, idx: jnp.ndarray) -> tuple:
+    """Gather every update's minibatch in ONE take per buffer array.
+
+    ``idx`` is ``[num_updates, batch_size]``; returns (s, a, r, s2) with
+    shape ``[num_updates, batch_size, ...]``. Flattening the index matrix
+    turns ``num_updates`` (96) per-update gathers into a single contiguous
+    pass over the replay storage per environment step. Gathers are exact, so
+    the batches — and everything the learner computes from them — are
+    bitwise-identical to the per-update ``s[ix]`` path (pinned by
+    tests/test_ddpg_fused.py).
+    """
+    flat = idx.reshape(-1)
+    return tuple(x[flat].reshape(idx.shape + x.shape[1:]) for x in data)
+
+
+def _packable(state: "DDPGState", cfg: "DDPGConfig") -> bool:
+    """True when the learner state fits the fused kernel's packed layout:
+    two hidden layers (the paper's MLPs) and stock ``optim.adam`` transforms
+    (state ``(ScaleByAdamState, ())``).
+
+    CONTRACT: the kernel path derives its optimizer math entirely from
+    ``cfg`` — ``cfg.actor_lr``/``cfg.critic_lr`` plus adam's default
+    b1/b2/eps — because transforms are opaque closures that cannot be
+    introspected. Every core construction path (``ddpg_init``,
+    ``fleet_init``, the agents) builds the transforms from exactly those
+    cfg fields, so the two are never out of sync there; callers that hand
+    ``ddpg_learn_scan`` hand-built transforms disagreeing with ``cfg`` must
+    not enable ``REPRO_KERNELS=pallas|interpret`` (the XLA path honors the
+    transforms, the kernel path honors ``cfg``)."""
+    if len(cfg.hidden) != 2:
+        return False
+    for opt in (state.actor_opt, state.critic_opt):
+        if not (isinstance(opt, tuple) and len(opt) == 2
+                and hasattr(opt[0], "mu") and hasattr(opt[0], "nu")
+                and hasattr(opt[0], "count")):
+            return False
+    return True
+
+
+def _learn_packed(state, batches, cfg, num_updates, mode="pallas"):
+    """Route one session's pre-gathered inner loop through the fused-kernel
+    dispatch (``kernels.ops.ddpg_inner_loop``), packing the learner state
+    into the [P, P]-blocked VMEM layout and back. vmap-safe: under the fleet
+    vmap the kernel's session grid batches automatically."""
+    from repro.kernels import ddpg_fused as fused
+    from repro.kernels import ops
+    from repro.optim.transform import ScaleByAdamState
+
+    dims = fused.packed_dims(cfg.state_dim, cfg.action_dim, cfg.hidden)
+    a_adam, a_rest = state.actor_opt[0], state.actor_opt[1:]
+    c_adam, c_rest = state.critic_opt[0], state.critic_opt[1:]
+    packed = fused.pack_params(
+        state.actor, state.critic, state.actor_targ, state.critic_targ,
+        a_adam.mu, a_adam.nu, c_adam.mu, c_adam.nu,
+        a_adam.count, c_adam.count, dims)
+    kb = fused.pack_minibatches(batches, dims)
+    packed = jax.tree_util.tree_map(lambda x: x[None], packed)
+    kb = jax.tree_util.tree_map(lambda x: x[None], kb)
+    packed, metrics = ops.ddpg_inner_loop(
+        packed, kb, dims=dims, gamma=cfg.gamma, tau=cfg.tau,
+        actor_lr=cfg.actor_lr, critic_lr=cfg.critic_lr, mode=mode)
+    parts = fused.unpack_params(*jax.tree_util.tree_map(lambda x: x[0],
+                                                        packed), dims)
+    new_state = DDPGState(
+        actor=parts["actor"],
+        critic=parts["critic"],
+        actor_targ=parts["actor_targ"],
+        critic_targ=parts["critic_targ"],
+        actor_opt=(ScaleByAdamState(count=parts["actor_count"],
+                                    mu=parts["actor_mu"],
+                                    nu=parts["actor_nu"]), *a_rest),
+        critic_opt=(ScaleByAdamState(count=parts["critic_count"],
+                                     mu=parts["critic_mu"],
+                                     nu=parts["critic_nu"]), *c_rest),
+        step=state.step + num_updates,
+    )
+    return new_state, jax.tree_util.tree_map(lambda x: x[0], metrics)
+
+
+def _learn_scan(state, data, size, key, cfg, actor_tx, critic_tx, num_updates,
+                kernel_mode=None):
+    """Shared inner-loop body. ``kernel_mode`` ('pallas' / 'interpret' /
+    ``None``) is a STATIC operand resolved by the host-level entry points
+    (``ddpg_learn_scan``, ``fleet_learn_scan``, the episode-engine compile
+    cache) — never read from the environment inside a trace, where a cached
+    compilation would silently ignore a later mode change."""
     idx = sample_minibatch_indices(key, num_updates, cfg.batch_size, size)
+    batches = gather_minibatches(data, idx)
+    if kernel_mode is not None and _packable(state, cfg):
+        return _learn_packed(state, batches, cfg, num_updates,
+                             mode=kernel_mode)
 
-    def body(st, ix):
-        return _ddpg_step(st, (s[ix], a[ix], r[ix], s2[ix]),
-                          cfg, actor_tx, critic_tx)
+    def body(st, batch):
+        return _ddpg_step(st, batch, cfg, actor_tx, critic_tx)
 
-    return jax.lax.scan(body, state, idx)
+    return jax.lax.scan(body, state, batches)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("cfg", "actor_tx", "critic_tx", "num_updates"))
+def _require_nonempty(size) -> None:
+    """Host-path guard: raise on a concrete empty buffer instead of letting
+    index sampling hit undefined maxval-0 behaviour (the silent-zero-index
+    hazard). Traced sizes pass through — in-graph callers own the invariant
+    (see ``sample_minibatch_indices``)."""
+    if isinstance(size, jax.core.Tracer):
+        return
+    if int(np.min(np.asarray(size))) <= 0:
+        raise ValueError(
+            "cannot learn from an empty replay buffer: minibatch sampling "
+            "needs size >= 1 valid rows (observe at least one transition "
+            "before calling the fused learner)")
+
+
+_ddpg_learn_scan_jit = functools.partial(
+    jax.jit, static_argnames=("cfg", "actor_tx", "critic_tx", "num_updates",
+                              "kernel_mode")
+)(_learn_scan)
+
+
 def ddpg_learn_scan(
     state: DDPGState,
     data: tuple,       # (s, a, r, s2), each [capacity, ...] — full buffer storage
@@ -226,13 +339,24 @@ def ddpg_learn_scan(
 
     Equivalent to sampling ``num_updates`` batches with
     ``sample_minibatch_indices(key, ...)`` and applying ``ddpg_update`` to each
-    in sequence, but with minibatch sampling on-device and the whole inner loop
-    fused into a single ``jax.lax.scan`` — one dispatch per ``learn()`` instead
-    of ``updates_per_step`` (96, Table III) dispatches plus a host round-trip
-    per minibatch. Returns (state, metrics stacked over updates).
+    in sequence, but with minibatch sampling on-device, all ``num_updates x
+    batch_size`` rows gathered in one pre-pass (``gather_minibatches``), and
+    the whole inner loop fused into a single ``jax.lax.scan`` — one dispatch
+    per ``learn()`` instead of ``updates_per_step`` (96, Table III) dispatches
+    plus a host round-trip per minibatch. Under ``REPRO_KERNELS=pallas`` /
+    ``interpret`` the loop runs as the fused Pallas kernel instead
+    (``kernels/ddpg_fused.py``) — on that path the optimizer hyperparameters
+    come from ``cfg``, not from introspecting ``actor_tx``/``critic_tx``
+    (see ``_packable``), matching how every core caller builds them.
+    Raises ``ValueError`` on an empty buffer. Returns (state, metrics
+    stacked over updates).
     """
-    return _learn_scan(state, data, size, key, cfg, actor_tx, critic_tx,
-                       num_updates)
+    from repro.kernels import ops
+
+    _require_nonempty(size)
+    return _ddpg_learn_scan_jit(state, data, size, key, cfg, actor_tx,
+                                critic_tx, num_updates,
+                                kernel_mode=ops.ddpg_kernel_mode())
 
 
 # ---------------------------------------------------------------------------
@@ -261,7 +385,16 @@ def fleet_act(actors, states: jnp.ndarray) -> jnp.ndarray:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("cfg", "actor_tx", "critic_tx", "num_updates"))
+    jax.jit, static_argnames=("cfg", "actor_tx", "critic_tx", "num_updates",
+                              "kernel_mode"))
+def _fleet_learn_scan_jit(states, data, sizes, keys, cfg, actor_tx,
+                          critic_tx, num_updates, kernel_mode):
+    f = functools.partial(_learn_scan, cfg=cfg, actor_tx=actor_tx,
+                          critic_tx=critic_tx, num_updates=num_updates,
+                          kernel_mode=kernel_mode)
+    return jax.vmap(f)(states, data, sizes, keys)
+
+
 def fleet_learn_scan(
     states: DDPGState,  # stacked over sessions
     data: tuple,        # (s, a, r, s2), each [N, capacity, ...]
@@ -273,10 +406,16 @@ def fleet_learn_scan(
     num_updates: int,
 ) -> tuple:
     """vmap of ``ddpg_learn_scan`` over the session axis: the entire fleet's
-    ``N x num_updates`` gradient steps are one XLA computation."""
-    f = functools.partial(_learn_scan, cfg=cfg, actor_tx=actor_tx,
-                          critic_tx=critic_tx, num_updates=num_updates)
-    return jax.vmap(f)(states, data, sizes, keys)
+    ``N x num_updates`` gradient steps are one XLA computation (or, under
+    ``REPRO_KERNELS=pallas``/``interpret``, one Pallas kernel launch whose
+    grid is the session axis). Raises ``ValueError`` if any session's buffer
+    is empty (the fleet steps in lockstep, so sizes agree)."""
+    from repro.kernels import ops
+
+    _require_nonempty(sizes)
+    return _fleet_learn_scan_jit(states, data, sizes, keys, cfg, actor_tx,
+                                 critic_tx, num_updates,
+                                 kernel_mode=ops.ddpg_kernel_mode())
 
 
 # ---------------------------------------------------------------------------

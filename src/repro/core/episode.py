@@ -77,10 +77,13 @@ class EpisodeTrace(NamedTuple):
 
 
 def _build_episode(step_fn, cfg: DDPGConfig, actor_tx, critic_tx,
-                   learn: bool, num_updates: int):
+                   learn: bool, num_updates: int, kernel_mode=None):
     """episode(params, w_vec, lo, span, carry, xs) -> (carry, EpisodeTrace).
 
     ``xs`` = (use_warmup [T] bool, warmup_actions [T, m], noise [T, m]).
+    ``kernel_mode`` routes the in-episode learner (Pallas kernel vs XLA
+    scan); it is resolved on the host by ``_compiled_episode`` and baked
+    into this build, never read from the environment inside the trace.
     """
     # lazy: envs.base imports repro.core at its own top level
     from repro.envs.base import barriered_step, fusion_barrier
@@ -132,13 +135,18 @@ def _build_episode(step_fn, cfg: DDPGConfig, actor_tx, critic_tx,
         else:
             buf = carry.buffer
         if do_updates:
+            # size >= 1 here by construction: the FIFO write above ran in
+            # this same step (learn=True), so minibatch sampling never sees
+            # an empty buffer — the invariant sample_minibatch_indices
+            # requires now that the silent zero-index clamp is gone.
             learn_key, k = jax.random.split(carry.learn_key)
             learn_in = fusion_barrier((carry.ddpg, buf, k))
             ddpg, _ = fusion_barrier(_learn_scan(
                 learn_in[0],
                 (learn_in[1].s, learn_in[1].a, learn_in[1].r, learn_in[1].s2),
                 learn_in[1].size, learn_in[2],
-                cfg, actor_tx, critic_tx, num_updates))
+                cfg, actor_tx, critic_tx, num_updates,
+                kernel_mode=kernel_mode))
         else:
             learn_key, ddpg = carry.learn_key, carry.ddpg
 
@@ -158,13 +166,19 @@ _EPISODE_CACHE: dict = {}
 def _compiled_episode(step_fn, cfg, actor_tx, critic_tx, learn, num_updates,
                       fleet: bool, devices: Optional[tuple]):
     """Jitted (and optionally vmapped + shard_mapped) episode, cached so
-    repeated ``run()`` calls and same-space fleets reuse one compilation."""
+    repeated ``run()`` calls and same-space fleets reuse one compilation.
+    The learner kernel mode is part of the cache key: flipping
+    ``REPRO_KERNELS`` mid-process recompiles instead of silently reusing the
+    other path's program."""
+    from repro.kernels import ops
+
+    kernel_mode = ops.ddpg_kernel_mode()
     key = (step_fn, cfg, actor_tx, critic_tx, learn, num_updates, fleet,
-           devices)
+           devices, kernel_mode)
     if key in _EPISODE_CACHE:
         return _EPISODE_CACHE[key]
     episode = _build_episode(step_fn, cfg, actor_tx, critic_tx, learn,
-                             num_updates)
+                             num_updates, kernel_mode=kernel_mode)
     if fleet:
         # session axis: params/w_vec/lo/span/carry stacked; xs shares the
         # warmup schedule (sessions run in lockstep) but not plans/noise
@@ -182,7 +196,12 @@ def _compiled_episode(step_fn, cfg, actor_tx, critic_tx, learn, num_updates,
                           P("session"), P("session"),
                           (P(), P("session"), P("session"))),
                 out_specs=P("session"), check_rep=False)
-    fn = jax.jit(episode)
+    # Donating the carry (learner params + opt state + FIFO storage — the
+    # bulk of the program's operands) lets XLA reuse those buffers in place
+    # instead of defensively copying them across the call boundary. Callers
+    # never touch the input carry after the call: both run_*_episode_scan
+    # entry points rebuild agent/env/buffer state from the RETURNED carry.
+    fn = jax.jit(episode, donate_argnums=(4,))
     _EPISODE_CACHE[key] = fn
     return fn
 

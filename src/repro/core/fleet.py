@@ -107,6 +107,8 @@ class FleetAgent:
         minibatch update.
         """
         if len(self.buffer) == 0:
+            # host-path guard (see MagpieAgent.learn): never hand size == 0
+            # to minibatch sampling; fleet_learn_scan raises on direct misuse
             return {}
         n = self.cfg.updates_per_step if updates is None else updates
         if n <= 0:

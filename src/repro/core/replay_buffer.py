@@ -155,15 +155,25 @@ class BatchedReplayBuffer:
         self._size = int(size)
 
     def sample(self, keys: jax.Array, batch_size: int):
-        """Per-session uniform minibatches: keys [N, key] -> each [N, B, ...]."""
+        """Per-session uniform minibatches: keys [N, key] -> each [N, B, ...].
+
+        One ``take_along_axis`` per storage array (a single fused gather over
+        the whole fleet) instead of a vmapped per-session gather — same index
+        draws, bitwise-identical batches.
+        """
         if self._size == 0:
             raise ValueError("cannot sample from an empty buffer")
         idx = jax.vmap(
             lambda k: jax.random.randint(k, (batch_size,), 0, self._size)
         )(keys)
-        gather = jax.vmap(lambda x, ix: x[ix])
-        return (gather(self._s, idx), gather(self._a, idx),
-                gather(self._r, idx), gather(self._s2, idx))
+
+        def gather(x):
+            ix = idx.reshape(idx.shape + (1,) * (x.ndim - 2))
+            return jnp.take_along_axis(
+                x, jnp.broadcast_to(ix, idx.shape + x.shape[2:]), axis=1)
+
+        return (gather(self._s), gather(self._a),
+                gather(self._r), gather(self._s2))
 
     def as_arrays(self):
         """Valid rows only, as numpy: each [N, size, ...]."""

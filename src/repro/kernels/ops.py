@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
+from repro.kernels.ddpg_fused import ddpg_fused_learn as _ddpg_fused_learn
+from repro.kernels.ddpg_fused import ddpg_fused_xla as _ddpg_fused_xla
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.gmm import gmm as _gmm
 from repro.kernels.mamba2_scan import ssd_scan as _ssd_scan
@@ -31,6 +33,43 @@ def _mode() -> str:
     if m == "auto":
         return "pallas" if jax.default_backend() == "tpu" else "xla"
     return m
+
+
+# ---------------------------------------------------------------------------
+# Fused DDPG inner loop (the tuning hot path — paper Table III)
+# ---------------------------------------------------------------------------
+
+def ddpg_kernel_mode():
+    """'pallas' / 'interpret' when the fused DDPG learner kernel is active,
+    ``None`` when the XLA fallback should run. ``core.ddpg._learn_scan``
+    consults this before packing parameters for the kernel."""
+    m = _mode()
+    return m if m in ("pallas", "interpret") else None
+
+
+def ddpg_inner_loop(packed, batches, *, dims, gamma, tau, actor_lr,
+                    critic_lr, mode=None):
+    """Whole ``updates_per_step`` DDPG inner loop on the packed layout.
+
+    Pallas kernel (params resident in VMEM across all updates, grid over the
+    fleet session axis) under ``pallas``/``interpret``; otherwise the XLA
+    twin of the same blocked computation (``ddpg_fused_xla``). Inputs follow
+    ``kernels.ddpg_fused.pack_params`` / ``pack_minibatches``, every array
+    carrying a leading fleet axis.
+
+    ``mode`` defaults to the ``REPRO_KERNELS`` resolution — but callers that
+    sit inside a jit trace must resolve ``ddpg_kernel_mode()`` on the host
+    and pass it explicitly (a cached compilation would otherwise pin the
+    first call's mode forever; ``core.ddpg`` threads it as a static operand).
+    """
+    mode = _mode() if mode is None else mode
+    if mode in ("pallas", "interpret"):
+        return _ddpg_fused_learn(
+            packed, batches, dims=dims, gamma=gamma, tau=tau,
+            actor_lr=actor_lr, critic_lr=critic_lr,
+            interpret=mode == "interpret")
+    return _ddpg_fused_xla(packed, batches, dims=dims, gamma=gamma, tau=tau,
+                           actor_lr=actor_lr, critic_lr=critic_lr)
 
 
 # ---------------------------------------------------------------------------

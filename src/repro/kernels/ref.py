@@ -84,3 +84,95 @@ def grouped_swiglu_ref(x, w_gate, w_up, w_down):
     g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, w_gate))
     upj = jnp.einsum("ecd,edf->ecf", x, w_up)
     return jnp.einsum("ecf,efd->ecd", g * upj, w_down)
+
+
+def ddpg_fused_ref(packed, batches, *, state_dim, action_dim, pad,
+                   gamma, tau, actor_lr, critic_lr):
+    """Sequential DDPG inner loop on the packed layout (the definition).
+
+    One tuning session, no fleet axis. ``packed`` = (weights [4,L,P,P],
+    biases [4,L,P], mom_w [2,2,L,P,P], mom_b [2,2,L,P], counts [2] i32) with
+    nets ordered (actor, critic, actor_targ, critic_targ); ``batches`` =
+    (sx, cx, s2x, r), each ``[U, B, P]`` / ``[U, B]`` — already padded and
+    pre-gathered. Per §II-C, each update regresses the critic on the frozen
+    targets' Bellman value, ascends Q(s, mu(s)) with the fresh critic, takes
+    one Adam step per network (b1=0.9, b2=0.999, eps=1e-8 — ``optim.adam``'s
+    defaults) and Polyak-averages the targets. Returns (packed',
+    {critic_loss, actor_loss, q_mean} stacked over updates).
+    """
+    act_mask = (jnp.arange(pad) < action_dim).astype(jnp.float32)
+
+    def mlp(w, b, x):
+        h = jax.nn.relu(x @ w[0] + b[0])
+        h = jax.nn.relu(h @ w[1] + b[1])
+        return h @ w[2] + b[2]
+
+    def mu_fwd(w, b, x):
+        return jax.nn.sigmoid(mlp(w, b, x)) * act_mask[None, :]
+
+    def q_fwd(w, b, x):
+        return mlp(w, b, x)[:, 0]
+
+    def with_actions(base, actions):
+        rows = actions.shape[0]
+        return base + jnp.concatenate(
+            [jnp.zeros((rows, state_dim), jnp.float32),
+             actions[:, :action_dim],
+             jnp.zeros((rows, pad - state_dim - action_dim), jnp.float32)],
+            axis=1)
+
+    def adam(count, mu, nu, g, w, lr, b1=0.9, b2=0.999, eps=1e-8):
+        count = count + 1
+        cf = count.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        w = w + (mu / (1 - b1 ** cf)) / (
+            jnp.sqrt(nu / (1 - b2 ** cf)) + eps) * (-lr)
+        return count, mu, nu, w
+
+    def step(carry, batch):
+        weights, biases, mom_w, mom_b, counts = carry
+        sx, cx, s2x, r = batch
+
+        a2 = mu_fwd(weights[2], biases[2], s2x)
+        q_targ = jax.lax.stop_gradient(
+            r + gamma * q_fwd(weights[3], biases[3], with_actions(s2x, a2)))
+
+        def critic_loss_fn(wb):
+            return jnp.mean(jnp.square(q_fwd(*wb, cx) - q_targ))
+
+        critic_loss, (gcw, gcb) = jax.value_and_grad(critic_loss_fn)(
+            (weights[1], biases[1]))
+        ccnt, cmu_w, cnu_w, cw = adam(counts[1], mom_w[1, 0], mom_w[1, 1],
+                                      gcw, weights[1], critic_lr)
+        _, cmu_b, cnu_b, cb = adam(counts[1], mom_b[1, 0], mom_b[1, 1],
+                                   gcb, biases[1], critic_lr)
+
+        def actor_loss_fn(wb):
+            mu = mu_fwd(*wb, sx)
+            return -jnp.mean(q_fwd(cw, cb, with_actions(sx, mu)))
+
+        actor_loss, (gaw, gab) = jax.value_and_grad(actor_loss_fn)(
+            (weights[0], biases[0]))
+        acnt, amu_w, anu_w, aw = adam(counts[0], mom_w[0, 0], mom_w[0, 1],
+                                      gaw, weights[0], actor_lr)
+        _, amu_b, anu_b, ab = adam(counts[0], mom_b[0, 0], mom_b[0, 1],
+                                   gab, biases[0], actor_lr)
+
+        atw = (1 - tau) * weights[2] + tau * aw
+        atb = (1 - tau) * biases[2] + tau * ab
+        ctw = (1 - tau) * weights[3] + tau * cw
+        ctb = (1 - tau) * biases[3] + tau * cb
+        q_mean = jnp.mean(q_fwd(cw, cb, cx))
+
+        carry = (jnp.stack([aw, cw, atw, ctw]),
+                 jnp.stack([ab, cb, atb, ctb]),
+                 jnp.stack([jnp.stack([amu_w, anu_w]),
+                            jnp.stack([cmu_w, cnu_w])]),
+                 jnp.stack([jnp.stack([amu_b, anu_b]),
+                            jnp.stack([cmu_b, cnu_b])]),
+                 jnp.stack([acnt, ccnt]))
+        return carry, (critic_loss, actor_loss, q_mean)
+
+    packed, (cl, al, qm) = jax.lax.scan(step, packed, batches)
+    return packed, {"critic_loss": cl, "actor_loss": al, "q_mean": qm}

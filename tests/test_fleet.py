@@ -10,9 +10,12 @@ The load-bearing properties:
     exactly (sessions are independent; the fleet axis is pure throughput).
 """
 
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import (
     BatchedReplayBuffer,
@@ -50,6 +53,10 @@ def _filled_storage(rng, cap, size, state_dim=3, action_dim=2):
 # Fused scan learner
 # ---------------------------------------------------------------------------
 
+@pytest.mark.skipif(
+    os.environ.get("REPRO_KERNELS") in ("pallas", "interpret"),
+    reason="bitwise contract is the XLA scan path's; the Pallas kernel path "
+           "holds the ulp contract instead (tests/test_ddpg_fused.py)")
 def test_learn_scan_matches_sequential_updates():
     """One fused scan == the same minibatches through ddpg_update, bitwise."""
     cfg = DDPGConfig(state_dim=3, action_dim=2, updates_per_step=12)
