@@ -21,9 +21,16 @@ Measurements backing the fleet subsystem's perf claims:
      (``kernels/ddpg_fused.py``). This is the data behind the dispatch
      default: on CPU the [P, P]-padded GEMMs lose to the unpadded scan, so
      the packed formulation runs only as the TPU kernel's shape.
+  5. Streaming chunked runtime scaling (``bench_scaling``) — 16 -> 1024
+     sessions through one fixed-size chunk executable: session-steps/s
+     (median over ``--repeats``, with noise bands), end-to-end wall clock,
+     MEASURED peak resident device bytes per session, compile-reuse
+     accounting across >= 2 grid shapes, and the monolithic (chunk=None)
+     64-session control. Feeds the ``fleet_scaling`` BENCH_<n>.json point.
 
 Usage:
     PYTHONPATH=src python benchmarks/fleet_throughput.py [--quick]
+    PYTHONPATH=src python benchmarks/fleet_throughput.py --scaling [--quick]
 """
 
 from __future__ import annotations
@@ -36,7 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_row
+from benchmarks.common import csv_row, repeat_measure, vs_previous
 from repro.core import DDPGConfig, FleetTuner, MagpieAgent, Scalarizer, Tuner
 from repro.core.ddpg import (_ddpg_step, fleet_init, fleet_learn_scan,
                              gather_minibatches, sample_minibatch_indices)
@@ -251,7 +258,7 @@ def _scan_tuner(workload: str, seed: int, updates: int, engine: str,
 
 
 def bench_episode_engine(fleet_sizes: list, steps: int,
-                         updates: int = 96) -> tuple:
+                         updates: int = 96, repeats: int = 1) -> tuple:
     """Whole-episode engine vs the host loop, on the same pure env model.
 
     Three rungs, same algorithm and budget on every one:
@@ -299,14 +306,21 @@ def bench_episode_engine(fleet_sizes: list, steps: int,
         fleet = FleetTuner.from_grid(
             ["seq_write"], [{"throughput": 1.0}], list(range(n)),
             engine="scan", ddpg_config=cfg, eval_runs=1)
-        fleet.run(steps)
-        t0 = time.perf_counter()
-        fleet.run(steps)
-        sps = steps * n / (time.perf_counter() - t0)
+        fleet.run(steps)  # warm up compilation at this fleet width
+
+        def one():
+            t0 = time.perf_counter()
+            fleet.run(steps)
+            return steps * n / (time.perf_counter() - t0)
+
+        stats = repeat_measure(one, repeats)
+        sps = stats["median"]
         rows.append(csv_row("fleet_scan", n, f"{sps:.2f}",
                             f"{sps / host_sps:.1f}"))
-        summary["fleets"].append({"sessions": n, "session_steps_per_sec": sps,
-                                  "speedup_vs_host_loop": sps / host_sps})
+        summary["fleets"].append({
+            "sessions": n, "session_steps_per_sec": sps,
+            "min": stats["min"], "noise_band": stats["noise_band"],
+            "speedup_vs_host_loop": sps / host_sps})
     return rows, summary
 
 
@@ -320,6 +334,183 @@ def _learner_summary(rows: list) -> dict:
                      "session_steps_per_sec": float(sps),
                      "speedup_vs_pergather": float(speedup)}
     return out
+
+
+# ---------------------------------------------------------------------------
+# Scaling: the streaming chunked fleet runtime, 16 -> 1024 sessions
+# ---------------------------------------------------------------------------
+
+#: Established run-to-run throughput band of the identical engine on the CI
+#: box (session-steps/s at 64 sessions): BENCH_0 measured 63.3, BENCH_1 55.1.
+STEADY_STATE_BAND_64 = (55.0, 63.5)
+
+
+def _scaling_fleet(n: int, chunk, updates: int) -> FleetTuner:
+    """Fleet for ``n`` sessions. Grids of >= 64 sessions split over TWO
+    workloads, smaller ones use one — the sweep deliberately spans >= 2 grid
+    shapes so the compile-reuse claim (one chunk executable serves every
+    grid shape) is exercised by measurement, not construction."""
+    workloads = ["seq_write"] if n < 64 else ["seq_write", "file_server"]
+    cfg = DDPGConfig.for_env(LustreSimEnv("seq_write"),
+                             updates_per_step=updates)
+    return FleetTuner.from_grid(
+        workloads, [{"throughput": 1.0}], list(range(n // len(workloads))),
+        engine="scan", ddpg_config=cfg, eval_runs=1, chunk=chunk)
+
+
+def bench_scaling(session_counts: list, chunk: int, steps: int,
+                  updates: int = 96, repeats: int = 1) -> tuple:
+    """Streaming chunked runtime across fleet sizes + the monolithic control.
+
+    For every N the WHOLE fleet runs as ceil(N / chunk) chunks through one
+    compiled episode program; recorded per point: session-steps/s
+    (median over ``repeats``, with the noise band), end-to-end wall clock,
+    and the measured peak resident device bytes per session
+    (``core.episode.last_fleet_run_stats`` — sampled live-array bytes, not
+    an estimate). The monolithic control re-runs the largest-but-64 fleet at
+    chunk=None (one chunk of all 64 sessions, the pre-streaming schedule) to
+    measure the device footprint the chunked runtime removes; it runs LAST
+    so its [64]-shaped bucket cannot pollute the sweep's compile count.
+
+    Returns (csv rows, summary dict for BENCH_<n>.json).
+    """
+    from repro.core.episode import last_fleet_run_stats
+
+    rows = [csv_row("sessions", "grid", "chunks", "sps_median", "sps_min",
+                    "noise_band", "peak_bytes_per_session", "wall_s_median")]
+    points, program_ids, cache_sizes, grid_shapes = [], set(), [], set()
+    for n in session_counts:
+        fleet = _scaling_fleet(n, chunk, updates)
+        n_workloads = len(set(l.split("|")[0] for l in fleet.labels))
+        grid_shapes.add((n_workloads, len(fleet.labels)))
+        grid_label = f"{n_workloads}w-{len(fleet.labels)}cells"
+        fleet.precompile(steps)
+
+        def one():
+            t0 = time.perf_counter()
+            fleet.run(steps)
+            return steps * n / (time.perf_counter() - t0)
+
+        meas = repeat_measure(one, repeats)
+        stats = last_fleet_run_stats()
+        program_ids.add(id(stats["program"]))
+        cache_sizes.append(stats["executable_cache_size"])
+        wall = steps * n / meas["median"]
+        per_session = stats["peak_device_bytes"] / n
+        points.append({
+            "sessions": n,
+            "grid": grid_label,
+            "chunks": stats["num_chunks"],
+            "session_steps_per_sec": meas["median"],
+            "session_steps_per_sec_min": meas["min"],
+            "noise_band": meas["noise_band"],
+            "wall_seconds": wall,
+            "peak_device_bytes": stats["peak_device_bytes"],
+            "peak_device_bytes_per_session": per_session,
+        })
+        rows.append(csv_row(n, points[-1]["grid"], stats["num_chunks"],
+                            f"{meas['median']:.2f}", f"{meas['min']:.2f}",
+                            f"{meas['noise_band']:.3f}",
+                            f"{per_session:.0f}", f"{wall:.1f}"))
+
+    # monolithic control: 64 sessions, one chunk of all 64 (runs after the
+    # sweep so its extra shape bucket never counts against the sweep)
+    mono = _scaling_fleet(64, None, updates)
+    mono.precompile(steps)
+
+    def one_mono():
+        t0 = time.perf_counter()
+        mono.run(steps)
+        return steps * 64 / (time.perf_counter() - t0)
+
+    mono_meas = repeat_measure(one_mono, repeats)
+    mono_stats = last_fleet_run_stats()
+    mono_point = {
+        "sessions": 64, "chunks": mono_stats["num_chunks"],
+        "session_steps_per_sec": mono_meas["median"],
+        "noise_band": mono_meas["noise_band"],
+        "peak_device_bytes": mono_stats["peak_device_bytes"],
+        "peak_device_bytes_per_session": mono_stats["peak_device_bytes"] / 64,
+    }
+    rows.append(csv_row("64(monolithic)", "2w-64cells", 1,
+                        f"{mono_meas['median']:.2f}", f"{mono_meas['min']:.2f}",
+                        f"{mono_meas['noise_band']:.3f}",
+                        f"{mono_point['peak_device_bytes_per_session']:.0f}",
+                        f"{steps * 64 / mono_meas['median']:.1f}"))
+
+    largest = points[-1]
+    summary = {
+        "benchmark": "fleet_scaling",
+        "chunk": chunk, "steps": steps, "updates": updates,
+        "repeats": repeats,
+        "scaling": points,
+        "monolithic_64": mono_point,
+        "memory_ratio_monolithic64_vs_largest": (
+            mono_point["peak_device_bytes_per_session"]
+            / largest["peak_device_bytes_per_session"]),
+        "compile": {
+            "shared_executable": len(program_ids) == 1,
+            "executables_during_sweep": max(cache_sizes),
+            "grid_shapes": len(grid_shapes),
+        },
+    }
+    p64 = next((p for p in points if p["sessions"] == 64), None)
+    if p64 is not None:
+        lo, hi = STEADY_STATE_BAND_64
+        summary["steady_state_64"] = {
+            "session_steps_per_sec": p64["session_steps_per_sec"],
+            "established_band": [lo, hi],
+            "within_established_band": bool(
+                lo <= p64["session_steps_per_sec"] <= hi),
+            # the band was established on BENCH_0/1's single-workload fleet;
+            # the monolithic control below runs THIS sweep's exact grid, so
+            # its ratio is the composition-controlled chunking cost
+            "chunked_vs_monolithic_same_grid": (
+                p64["session_steps_per_sec"]
+                / mono_point["session_steps_per_sec"]),
+        }
+    return rows, summary
+
+
+def scaling_summary(quick: bool = False, repeats: int = None) -> dict:
+    """BENCH_<n>.json payload for the scaling benchmark (reuses the
+    measurements of a preceding same-``repeats`` ``run_scaling`` call in
+    this process)."""
+    key = ("scaling", quick, repeats)
+    if key in _LAST_RESULTS:
+        summary = _LAST_RESULTS[key]
+    else:
+        _, summary = _run_scaling_measure(quick, repeats)
+        _LAST_RESULTS[key] = summary
+    summary = dict(summary, quick=quick)
+    p64 = next((p for p in summary["scaling"] if p["sessions"] == 64), None)
+    if p64 is not None:
+        # the trajectory series' canonical key (64-session steady state), so
+        # every future BENCH point can compare against this one regardless
+        # of payload kind
+        summary["fleet_session_steps_per_sec"] = p64["session_steps_per_sec"]
+    prev = _previous_bench()
+    if prev is not None and not quick:
+        prev_sps = prev.get("fleet_session_steps_per_sec")
+        if prev_sps and p64:
+            summary["vs_previous_bench"] = vs_previous(
+                {"median": p64["session_steps_per_sec"],
+                 "noise_band": p64["noise_band"]}, prev_sps, prev["_file"])
+    return summary
+
+
+def _run_scaling_measure(quick: bool, repeats: int = None) -> tuple:
+    if quick:
+        return bench_scaling([16, 256], chunk=8, steps=2, updates=24,
+                             repeats=repeats or 1)
+    return bench_scaling([16, 64, 256, 1024], chunk=16, steps=5, updates=96,
+                         repeats=repeats or 3)
+
+
+def run_scaling(quick: bool = False, repeats: int = None) -> list:
+    rows, summary = _run_scaling_measure(quick, repeats)
+    _LAST_RESULTS[("scaling", quick, repeats)] = summary
+    return rows
 
 
 # Measurements from the most recent run(quick) call, keyed by ``quick`` —
@@ -353,6 +544,9 @@ def episode_summary(quick: bool = False) -> dict:
         "single_scan_steps_per_sec": summary["single_scan_steps_per_sec"],
         "fleet_size": top["sessions"],
         "fleet_session_steps_per_sec": top["session_steps_per_sec"],
+        "fleet_session_steps_per_sec_min": top.get(
+            "min", top["session_steps_per_sec"]),
+        "noise_band": top.get("noise_band"),
         "speedup_vs_host_loop": top["speedup_vs_host_loop"],
         "fleets": summary["fleets"],
         "learner_paths": _learner_summary(learner_rows),
@@ -361,11 +555,10 @@ def episode_summary(quick: bool = False) -> dict:
     if prev is not None and not quick:
         prev_sps = prev.get("fleet_session_steps_per_sec")
         if prev_sps:
-            payload["vs_previous_bench"] = {
-                "file": prev["_file"],
-                "fleet_session_steps_per_sec": prev_sps,
-                "ratio": top["session_steps_per_sec"] / prev_sps,
-            }
+            payload["vs_previous_bench"] = vs_previous(
+                {"median": top["session_steps_per_sec"],
+                 "noise_band": top.get("noise_band", 0.0)},
+                prev_sps, prev["_file"])
     return payload
 
 
@@ -389,19 +582,21 @@ def _previous_bench() -> dict:
     return latest
 
 
-def run(quick: bool = False) -> list:
+def run(quick: bool = False, repeats: int = 1) -> list:
     if quick:
         rows = bench_learn_paths(env_steps=3, updates=24)
         rows += [""] + bench_dimensionality(env_steps=3, updates=24)
         rows += [""] + bench_fleet_scaling([1, 4], steps=2)
         learner_rows = bench_learner_paths(8, updates=24, reps=2)
-        erows, summary = bench_episode_engine([8], steps=3, updates=24)
+        erows, summary = bench_episode_engine([8], steps=3, updates=24,
+                                              repeats=repeats)
     else:
         rows = bench_learn_paths(env_steps=10, updates=96)
         rows += [""] + bench_dimensionality(env_steps=10, updates=96)
         rows += [""] + bench_fleet_scaling([1, 4, 8, 16], steps=5)
         learner_rows = bench_learner_paths(64, updates=96)
-        erows, summary = bench_episode_engine([16, 64], steps=5, updates=96)
+        erows, summary = bench_episode_engine([16, 64], steps=5, updates=96,
+                                              repeats=repeats)
     _LAST_RESULTS[quick] = (summary, learner_rows)
     return rows + [""] + learner_rows + [""] + erows
 
@@ -410,5 +605,14 @@ if __name__ == "__main__":
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--quick", action="store_true",
                         help="small sizes for CI smoke runs")
+    parser.add_argument("--repeats", type=int, default=1,
+                        help="timed repetitions per measurement (median + "
+                        "min + noise band recorded)")
+    parser.add_argument("--scaling", action="store_true",
+                        help="run the chunked-runtime scaling benchmark "
+                        "instead of the fleet/learner set")
     args = parser.parse_args()
-    print("\n".join(run(quick=args.quick)))
+    if args.scaling:
+        print("\n".join(run_scaling(quick=args.quick, repeats=args.repeats)))
+    else:
+        print("\n".join(run(quick=args.quick, repeats=args.repeats)))

@@ -65,10 +65,15 @@ def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--quick", action="store_true", help="reduced seeds/steps")
     p.add_argument("--only", default="",
-                   help="fig4|fig5|fig6|fig7|table3|fleet|highdim|dryrun")
+                   help="fig4|fig5|fig6|fig7|table3|fleet|scaling|highdim|"
+                        "dryrun")
+    p.add_argument("--repeats", type=int, default=0,
+                   help="timed repetitions per measurement (0 = benchmark "
+                   "defaults); medians + noise bands are recorded either way")
     p.add_argument("--no-bench-json", action="store_true",
                    help="skip writing the BENCH_<n>.json trajectory summary")
     args = p.parse_args()
+    repeats = args.repeats or None
 
     seeds = (0,) if args.quick else (0, 1, 2)
     steps = 20 if args.quick else 30
@@ -93,7 +98,12 @@ def main() -> None:
         "table3": ("Table III — per-iteration timing",
                    lambda: table3_timing.run(steps=steps)),
         "fleet": ("Fleet tuning — fused learner + vmapped sessions",
-                  lambda: fleet_throughput.run(quick=args.quick)),
+                  lambda: fleet_throughput.run(quick=args.quick,
+                                               repeats=repeats or 1)),
+        "scaling": ("Streaming chunked fleet runtime — 16..1024 sessions, "
+                    "O(chunk) device memory",
+                    lambda: fleet_throughput.run_scaling(
+                        quick=args.quick, repeats=repeats)),
         "highdim": ("High-dim gap — Magpie vs BestConfig, 2-D vs 8-knob",
                     lambda: highdim_gap.run(
                         seeds=seeds, steps=steps,
@@ -115,7 +125,27 @@ def main() -> None:
             print(row, flush=True)
         print(f"[{name} done in {time.time()-t0:.1f}s]", flush=True)
 
-    if not args.no_bench_json and (not args.only or args.only == "fleet"):
+    if args.no_bench_json:
+        return
+    if not args.only or args.only == "scaling":
+        # the scaling point is the trajectory summary going forward: it
+        # carries the steady-state 64-session throughput plus the memory
+        # and compile-reuse measurements of the chunked runtime
+        t0 = time.time()
+        print("\n=== bench-json: chunked-runtime scaling trajectory point "
+              "===", flush=True)
+        summary = fleet_throughput.scaling_summary(quick=args.quick,
+                                                   repeats=repeats)
+        path = _write_bench_json(summary)
+        largest = summary["scaling"][-1]
+        print(f"wrote {path} "
+              f"({largest['sessions']} sessions @ chunk {summary['chunk']}: "
+              f"{largest['session_steps_per_sec']:.1f} session-steps/s, "
+              f"{largest['peak_device_bytes_per_session']:.0f} peak device "
+              f"B/session; monolithic-64 ratio "
+              f"{summary['memory_ratio_monolithic64_vs_largest']:.1f}x) "
+              f"in {time.time()-t0:.1f}s", flush=True)
+    elif args.only == "fleet":
         t0 = time.time()
         print("\n=== bench-json: episode-engine trajectory point ===",
               flush=True)

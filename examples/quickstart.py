@@ -3,17 +3,41 @@ headline experiment, single performance indicator) in ~2 minutes on CPU.
 
     PYTHONPATH=src python examples/quickstart.py
     PYTHONPATH=src python examples/quickstart.py --engine scan --steps 30
+    PYTHONPATH=src python examples/quickstart.py --sessions 32 --chunk 8
 
 ``--engine host`` steps the Fig. 1 loop from Python against the numpy
 simulator; ``--engine scan`` runs the identical episode as ONE fused XLA
 program over the pure-JAX env model (``core.episode``) — same algorithm,
-same budget, no host boundary per step.
+same budget, no host boundary per step. ``--sessions N`` (> 1) tunes N
+same-workload sessions (different seeds) through the streaming chunked fleet
+runtime — ``--chunk C`` sessions at a time through one compiled episode
+program, with the ``memory_plan()`` capacity summary printed up front.
+``--compile-cache`` persists compiled programs across invocations.
 """
 
 import argparse
 
 from repro.core import DDPGConfig, MagpieAgent, Scalarizer, Tuner
 from repro.envs import LustreSimEnv
+
+
+def _run_fleet(args) -> None:
+    from repro.core import FleetTuner
+    fleet = FleetTuner.from_grid(
+        ["seq_write"], [{"throughput": 1.0}], list(range(args.sessions)),
+        engine="scan", chunk=args.chunk, eval_runs=1)
+    plan = fleet.memory_plan(steps=args.steps)
+    per = plan["per_session"]
+    print(f"memory plan ({plan['sessions']} sessions, chunk {plan['chunk']}, "
+          f"{plan['steps']} steps): learner {per['learner_bytes']:,} B + "
+          f"replay {per['replay_bytes']:,} B per session; one chunk keeps "
+          f"{plan['chunk_device_bytes']:,} B on device "
+          f"(validated vs live: {plan['matches_live']})")
+    result = fleet.run(steps=args.steps)
+    stats = result.summary("throughput")
+    print(f"{stats['sessions']} sessions tuned in {result.wall_seconds:.1f}s: "
+          f"mean throughput gain {stats['mean']*100:+.1f}% "
+          f"(p50 {stats['p50']*100:+.1f}%)")
 
 
 def main() -> None:
@@ -24,7 +48,25 @@ def main() -> None:
                         "env model")
     parser.add_argument("--steps", type=int, default=30,
                         help="tuning steps (paper budget: 30)")
+    parser.add_argument("--sessions", type=int, default=1,
+                        help="tune this many same-workload sessions as a "
+                        "streamed fleet (> 1 implies the scan engine)")
+    parser.add_argument("--chunk", type=int, default=None,
+                        help="sessions per streamed chunk (fleet mode)")
+    parser.add_argument("--compile-cache", nargs="?", const="", default=None,
+                        metavar="DIR",
+                        help="enable JAX's persistent compilation cache "
+                        "(optional DIR; default ~/.cache/repro-jax-cache)")
     args = parser.parse_args()
+
+    if args.compile_cache is not None:
+        from repro.core import enable_persistent_compilation_cache
+        path = enable_persistent_compilation_cache(args.compile_cache or None)
+        print(f"persistent compilation cache: {path}")
+
+    if args.sessions > 1:
+        _run_fleet(args)
+        return
 
     # Environment: 6-OST Lustre + Sequential Write workload (paper §III-B).
     # The scan engine needs the pure-model adapter; the host engine can run

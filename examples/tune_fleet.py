@@ -1,30 +1,91 @@
 """Fleet tuning: the paper's whole evaluation grid as one fused JAX program.
 
 Runs a seeds x workloads x objectives grid of independent Magpie tuning
-sessions concurrently — vmapped DDPG learners, device-resident replay, and a
-vectorized Lustre response surface — then prints per-session results plus the
-aggregate gain statistics the paper reports in Fig. 4/5 (91.8% average
-throughput gain across workloads).
+sessions concurrently, then prints per-session results plus the aggregate
+gain statistics the paper reports in Fig. 4/5 (91.8% average throughput gain
+across workloads).
 
     PYTHONPATH=src python examples/tune_fleet.py
+    PYTHONPATH=src python examples/tune_fleet.py --sessions 64 --chunk 16
+
+``--sessions N`` spreads N sessions (seeds) over the workloads and runs them
+through the streaming chunked scan engine: chunks of ``--chunk`` sessions
+stream through ONE compiled episode program, so peak device memory is
+O(chunk) no matter how large the fleet — the printed ``memory_plan()``
+summary shows the capacity math before anything runs. ``--compile-cache``
+persists the compiled episode across processes (back-to-back runs skip
+XLA compilation entirely).
 """
+
+import argparse
 
 from repro.core import FleetTuner
 
 
 def main() -> None:
-    fleet = FleetTuner.from_grid(
-        workloads=["seq_write", "video_server", "file_server"],
-        objectives=[{"throughput": 1.0}],
-        seeds=[0, 1, 2],
-    )
-    print(f"running {fleet.agent.num_sessions} tuning sessions concurrently...")
-    result = fleet.run(steps=30)  # paper's budget, every session
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--sessions", type=int, default=9,
+                        help="total tuning sessions (spread over 3 workloads)")
+    parser.add_argument("--chunk", type=int, default=None,
+                        help="sessions per streamed chunk (scan engine); "
+                        "default: one chunk of the whole fleet")
+    parser.add_argument("--steps", type=int, default=30,
+                        help="tuning steps per session (paper budget: 30)")
+    parser.add_argument("--compile-cache", nargs="?", const="", default=None,
+                        metavar="DIR",
+                        help="enable JAX's persistent compilation cache "
+                        "(optional DIR; default ~/.cache/repro-jax-cache)")
+    args = parser.parse_args()
 
-    for label, res in zip(result.labels, result.results):
+    if args.compile_cache is not None:
+        from repro.core import enable_persistent_compilation_cache
+        path = enable_persistent_compilation_cache(args.compile_cache or None)
+        print(f"persistent compilation cache: {path}")
+
+    workloads = ["seq_write", "video_server", "file_server"]
+    # the grid is a full workloads x seeds cross product, so the session
+    # count is rounded to the nearest multiple of len(workloads) — say so
+    # instead of silently running a different fleet than requested
+    seeds = list(range(max(1, round(args.sessions / len(workloads)))))
+    n_sessions = len(workloads) * len(seeds)
+    if n_sessions != args.sessions:
+        print(f"note: running {n_sessions} sessions "
+              f"({len(workloads)} workloads x {len(seeds)} seeds; "
+              f"{args.sessions} requested)")
+    engine = "scan" if (args.chunk is not None or n_sessions > 9) else "host"
+    fleet = FleetTuner.from_grid(
+        workloads=workloads,
+        objectives=[{"throughput": 1.0}],
+        seeds=seeds,
+        engine=engine,
+        chunk=args.chunk if engine == "scan" else None,
+        eval_runs=1 if n_sessions > 9 else 3,
+    )
+
+    if engine == "scan":
+        plan = fleet.memory_plan(steps=args.steps)
+        per = plan["per_session"]
+        print(f"memory plan ({plan['sessions']} sessions, chunk "
+              f"{plan['chunk']}, {plan['steps']} steps):")
+        print(f"  per session: learner {per['learner_bytes']:,} B, replay "
+              f"{per['replay_bytes']:,} B ({plan['replay_dtype']}), trace "
+              f"{per['trace_bytes_per_step']} B/step")
+        print(f"  device (one chunk resident): "
+              f"{plan['chunk_device_bytes']:,} B")
+        print(f"  host (whole fleet): {plan['fleet_host_bytes']:,} B "
+              f"(validated vs live buffers: {plan['matches_live']})")
+
+    print(f"running {fleet.agent.num_sessions} tuning sessions "
+          f"({engine} engine)...")
+    result = fleet.run(steps=args.steps)
+
+    shown = min(len(result.results), 12)
+    for label, res in zip(result.labels[:shown], result.results[:shown]):
         print(f"{label:40s} {res.default_metrics['throughput']:7.1f} "
               f"-> {res.best_metrics['throughput']:7.1f} MB/s "
               f"({res.gain('throughput')*100:+.1f}%)  best={res.best_config}")
+    if shown < len(result.results):
+        print(f"... ({len(result.results) - shown} more sessions)")
 
     stats = result.summary("throughput")
     print(f"\naggregate throughput gain over {stats['sessions']} sessions: "
@@ -33,7 +94,7 @@ def main() -> None:
           f"{stats['p75']*100:+.1f}%  "
           f"range [{stats['min']*100:+.1f}%, {stats['max']*100:+.1f}%]")
     print(f"fleet wall time: {result.wall_seconds:.1f}s "
-          f"for {stats['sessions']} x 30-step sessions")
+          f"for {stats['sessions']} x {args.steps}-step sessions")
 
 
 if __name__ == "__main__":

@@ -31,9 +31,11 @@ from repro.core.ddpg import (
 from repro.core.agent import MagpieAgent
 from repro.core.tuner import Tuner, TuningResult, StepRecord, evaluate_config
 from repro.core.episode import (
-    EpisodeTrace, run_episode_scan, run_fleet_episode_scan,
+    EpisodeTrace, enable_persistent_compilation_cache, episode_cache_stats,
+    last_fleet_run_stats, live_device_bytes, precompile_fleet_episode,
+    run_episode_scan, run_fleet_episode_scan,
 )
-from repro.core.fleet import FleetAgent, FleetResult, FleetTuner
+from repro.core.fleet import FleetAgent, FleetResult, FleetTuner, memory_plan
 from repro.core.baselines import (
     BestConfigTuner, GridSearchTuner, RandomSearchTuner,
 )
@@ -46,6 +48,8 @@ __all__ = [
     "gather_minibatches", "fleet_init", "fleet_act", "fleet_learn_scan",
     "MagpieAgent", "Tuner", "TuningResult", "StepRecord", "evaluate_config",
     "EpisodeTrace", "run_episode_scan", "run_fleet_episode_scan",
-    "FleetAgent", "FleetResult", "FleetTuner",
+    "enable_persistent_compilation_cache", "episode_cache_stats",
+    "last_fleet_run_stats", "live_device_bytes", "precompile_fleet_episode",
+    "FleetAgent", "FleetResult", "FleetTuner", "memory_plan",
     "BestConfigTuner", "GridSearchTuner", "RandomSearchTuner",
 ]

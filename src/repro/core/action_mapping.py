@@ -141,6 +141,27 @@ class ParamSpec:
         """Forward map (used to seed the buffer with known configs)."""
         return float(self.to_unit_batch([value])[0])
 
+    def values_from_indices(self, idx: np.ndarray) -> list:
+        """Quantization indices -> native parameter values.
+
+        ``idx[i]`` is the index ``from_unit_batch`` would land on (the same
+        value ``jax_coord_maps``' in-graph ``idx`` computes), so the compact
+        episode trace can store small ints and reconstruct the exact config
+        values — same native types as ``from_unit_batch``. Quantized kinds
+        only."""
+        idx = np.asarray(idx)
+        if self.kind == "continuous":
+            raise ValueError(
+                f"{self.name}: continuous parameters have no index space")
+        if self.kind == "discrete":
+            return (idx.astype(int) + int(self.minimum)).tolist()
+        if self.kind == "boolean":
+            return [bool(i) for i in idx]
+        if self.kind == "log2_int":
+            e_lo = self._log2_span()[0]
+            return [int(2 ** (e_lo + int(i))) for i in idx]
+        return [self.values[int(i)] for i in idx]
+
     # -- validation ----------------------------------------------------------
 
     def validate(self, value) -> bool:
@@ -194,6 +215,40 @@ class ParamSpace:
 
     def to_action(self, config: dict) -> np.ndarray:
         return self.to_actions([config])[0]
+
+    # -- compact (index) trace support ---------------------------------------
+
+    def index_dtype(self) -> np.dtype:
+        """Smallest unsigned dtype holding every knob's quantization index.
+
+        The compact episode trace (``core.episode``) stores per-step actions
+        as these indices instead of float32 unit coordinates — knobs are
+        quantized by construction, so an index round-trips exactly where a
+        float action would cost 4 bytes per coordinate."""
+        if not self.is_quantized:
+            raise ValueError("continuous spaces have no index trace encoding")
+        top = max(s.cardinality - 1 for s in self.specs)
+        for dt in (np.uint8, np.uint16, np.uint32):
+            if top <= np.iinfo(dt).max:
+                return np.dtype(dt)
+        return np.dtype(np.int64)
+
+    def configs_from_indices(self, idx: np.ndarray) -> list:
+        """Vectorized index decode: [N, m] quantization indices -> N configs.
+
+        The inverse of the in-graph quantization (``jax_coord_maps``'s
+        ``idx``): for any action ``a``, ``configs_from_indices`` of the
+        indices the env graph computed equals ``to_configs(a)`` — same
+        native value types, same values (the graph quantizes in float32, the
+        host map in float64; they agree away from the ~1-ulp rounding knife
+        edges documented on ``jax_coord_maps``, exactly like env dynamics
+        already do)."""
+        idx = np.asarray(idx)
+        if idx.ndim != 2 or idx.shape[1] != self.dim:
+            raise ValueError(f"indices shape {idx.shape} != (N, {self.dim})")
+        columns = [s.values_from_indices(idx[:, j])
+                   for j, s in enumerate(self.specs)]
+        return [dict(zip(self.names, row)) for row in zip(*columns)]
 
     def to_actions(self, configs: Sequence[dict]) -> np.ndarray:
         """Vectorized forward map: N config dicts -> [N, m] unit actions."""

@@ -295,6 +295,11 @@ def _learn_scan(state, data, size, key, cfg, actor_tx, critic_tx, num_updates,
     compilation would silently ignore a later mode change."""
     idx = sample_minibatch_indices(key, num_updates, cfg.batch_size, size)
     batches = gather_minibatches(data, idx)
+    # f32 compute at gather: replay storage may be bf16 (opt-in compact
+    # mode); minibatches are widened right after the gather so every
+    # gradient step runs in float32. A same-dtype astype is the identity,
+    # so the default f32 path is untouched (bitwise).
+    batches = tuple(b.astype(jnp.float32) for b in batches)
     if kernel_mode is not None and _packable(state, cfg):
         return _learn_packed(state, batches, cfg, num_updates,
                              mode=kernel_mode)

@@ -8,7 +8,27 @@ scalarization → buffer store → ``ddpg_learn_scan`` — into a single jitted
 body over a fleet session axis (``run_fleet_episode_scan``), so a seeds ×
 workloads × objectives grid runs as one device computation.
 
-Equivalence contract (pinned by tests/test_episode.py):
+Fleet episodes execute as a STREAM of fixed-size chunks:
+
+  * ``run_fleet_episode_scan(..., chunk=C)`` runs the N-session fleet as
+    ``ceil(N / C)`` chunks of exactly C sessions through ONE compiled,
+    donated episode program. Every chunk of every grid shape reuses the same
+    executable (shape bucketing: the compiled shape is ``[C, ...]``, never
+    ``[N, ...]``); a ragged last chunk is padded by replicating its own last
+    session and the padded rows are sliced off before anything reads them.
+  * Between chunks the fleet's state (learner params/opt state, FIFO replay,
+    env states) lives in host numpy buffers; each chunk's slice is staged to
+    the device, the episode runs, and the returned carry + trace stream back
+    into preallocated host buffers. Peak device memory is O(C·T) — one
+    chunk's state and trace — instead of O(N·T).
+  * The trace is stored compactly: actions as per-knob quantization indices
+    (knobs are quantized by construction — ``ParamSpace.index_dtype``,
+    usually uint8 instead of float32 per coordinate) and restart seconds as
+    int32 fixed point (exact for every cost the env models emit; see
+    ``RESTART_FP_SCALE``). Metric/reward/objective floats stay float32.
+
+Equivalence contract (pinned by tests/test_episode.py and
+tests/test_chunked_fleet.py):
 
   * the scan body performs, step for step, the float32 arithmetic of the
     host loop driving a ``ModelEnv`` adapter — same actor forward, same
@@ -23,6 +43,10 @@ Equivalence contract (pinned by tests/test_episode.py):
     compiles the two engines as different programs, and its context-dependent
     FMA/vectorization choices can move cancellation-prone values by single
     ulps — the per-phase fusion islands below keep it that tight).
+  * chunking is pure scheduling: per-session trajectories are independent of
+    the chunk size (decision trajectory exact, floats within the same few
+    ulps — vmap width is part of XLA's codegen context), and padded sessions
+    never leak into results.
   * both entry points mutate the adapter env, the agent and the replay
     buffer exactly as ``steps`` host-loop iterations would, so progressive
     tuning (paper Fig. 7) and the §III-E final recommendation work unchanged
@@ -35,18 +59,26 @@ or other external environments keep the host loop.
 from __future__ import annotations
 
 import functools
+import math
+import os
 from typing import Any, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.action_mapping import ParamSpace, jax_coord_maps
 from repro.core.ddpg import DDPGConfig, actor_apply, _learn_scan
 from repro.core.scalarization import metric_bounds, normalize_state
 
 
 class BufferState(NamedTuple):
-    """Device-side FIFO replay storage (the in-graph ``ReplayBuffer``)."""
+    """Device-side FIFO replay storage (the in-graph ``ReplayBuffer``).
+
+    Arrays carry the replay *storage* dtype — float32 by default, bfloat16
+    under the opt-in compact mode (``BatchedReplayBuffer(storage_dtype=...)``).
+    Compute is always float32: the fused learner widens minibatches right
+    after gathering them (``core.ddpg._learn_scan``)."""
 
     s: jnp.ndarray
     a: jnp.ndarray
@@ -67,28 +99,66 @@ class EpisodeCarry(NamedTuple):
 
 class EpisodeTrace(NamedTuple):
     """Per-step outputs; leading axis = episode steps (then sessions, for the
-    fleet). The host shell reconstructs ``StepRecord`` history from this."""
+    fleet). The host shell reconstructs ``StepRecord`` history from this.
 
-    actions: jnp.ndarray
+    Compact storage: ``action_idx`` holds per-knob quantization indices
+    (``ParamSpace.index_dtype`` — decode with
+    ``ParamSpace.configs_from_indices``); ``restarts`` is int32 fixed point
+    in-graph and already-decoded float32 seconds once a ``run_*_scan`` entry
+    point returns it to the host."""
+
+    action_idx: jnp.ndarray
     metrics: jnp.ndarray
     rewards: jnp.ndarray
     objectives: jnp.ndarray
     restarts: jnp.ndarray
 
 
-def _build_episode(step_fn, cfg: DDPGConfig, actor_tx, critic_tx,
-                   learn: bool, num_updates: int, kernel_mode=None):
+# -- restart fixed-point encoding -------------------------------------------
+#
+# Restart downtime is a continuous §III-F draw, but every cost the env models
+# emit is an f32 in {0} ∪ [4 s, 1024 s) — and any float32 >= 4 has an ulp of
+# at least 2^-21, so cost * 2^21 is an exact int32. The trace therefore
+# stores restarts as int32 fixed point and the host decode is bit-exact
+# (int -> f64 -> /2^21 -> f32 round-trips the original f32). Costs >= 1024 s
+# are clamped (no model emits a 17-minute restart); nonzero costs below 4 s
+# would decode within 2^-22 s but lose bit-exactness — env models must keep
+# restart costs in the exact domain (the repo's all do: 12-20 s workload,
+# +30 s DFS, and the synthetic 5-10/+20 s ranges).
+
+RESTART_FP_SCALE = float(2 ** 21)
+RESTART_FP_MAX_SECONDS = 1023.0
+
+
+def _encode_restart(cost: jnp.ndarray) -> jnp.ndarray:
+    clipped = jnp.clip(cost, 0.0, jnp.float32(RESTART_FP_MAX_SECONDS))
+    return jnp.round(clipped * jnp.float32(RESTART_FP_SCALE)).astype(jnp.int32)
+
+
+def decode_restarts(fp: np.ndarray) -> np.ndarray:
+    """int32 fixed-point restart trace -> float32 seconds (exact; see above)."""
+    return (np.asarray(fp).astype(np.float64) / RESTART_FP_SCALE).astype(
+        np.float32)
+
+
+def _build_episode(step_fn, space: ParamSpace, cfg: DDPGConfig, actor_tx,
+                   critic_tx, learn: bool, num_updates: int, kernel_mode=None):
     """episode(params, w_vec, lo, span, carry, xs) -> (carry, EpisodeTrace).
 
     ``xs`` = (use_warmup [T] bool, warmup_actions [T, m], noise [T, m]).
     ``kernel_mode`` routes the in-episode learner (Pallas kernel vs XLA
     scan); it is resolved on the host by ``_compiled_episode`` and baked
     into this build, never read from the environment inside the trace.
+    ``space`` supplies the in-graph quantization maps for the compact
+    action-index trace (the same ``jax_coord_maps`` the env model decodes
+    with, so trace indices and env dynamics always agree).
     """
     # lazy: envs.base imports repro.core at its own top level
     from repro.envs.base import barriered_step, fusion_barrier
 
     do_updates = learn and num_updates > 0
+    coord_maps = jax_coord_maps(space)
+    idx_dtype = space.index_dtype()
 
     def one_step(params, w_vec, lo, span, carry, x):
         use_warmup, warmup_a, noise = x
@@ -103,6 +173,13 @@ def _build_episode(step_fn, cfg: DDPGConfig, actor_tx, critic_tx,
         policy = fusion_barrier(actor_apply(actor, state_vec))
         explored = jnp.clip(policy + noise, 0.0, 1.0)
         action = jnp.where(use_warmup, jnp.clip(warmup_a, 0.0, 1.0), explored)
+
+        # compact trace: the knob indices the env's own quantization lands
+        # on (f32 maps — identical to the env dynamics' decode by
+        # construction)
+        action_idx = jnp.stack(
+            [coord_maps[j](action[j])["idx"] for j in range(space.dim)]
+        ).astype(idx_dtype)
 
         # env transition (pure model) + state normalization; barriered_step
         # keeps the env subgraph an isolated fusion island with the same
@@ -126,10 +203,10 @@ def _build_episode(step_fn, cfg: DDPGConfig, actor_tx, critic_tx,
             capacity = buf.s.shape[0]
             i = buf.next_slot
             buf = BufferState(
-                s=buf.s.at[i].set(carry.state_vec),
-                a=buf.a.at[i].set(action),
-                r=buf.r.at[i].set(reward),
-                s2=buf.s2.at[i].set(norm),
+                s=buf.s.at[i].set(carry.state_vec.astype(buf.s.dtype)),
+                a=buf.a.at[i].set(action.astype(buf.a.dtype)),
+                r=buf.r.at[i].set(reward.astype(buf.r.dtype)),
+                s2=buf.s2.at[i].set(norm.astype(buf.s2.dtype)),
                 next_slot=(i + 1) % capacity,
                 size=jnp.minimum(buf.size + 1, capacity))
         else:
@@ -151,7 +228,8 @@ def _build_episode(step_fn, cfg: DDPGConfig, actor_tx, critic_tx,
             learn_key, ddpg = carry.learn_key, carry.ddpg
 
         carry = EpisodeCarry(env_state, ddpg, buf, learn_key, norm, obj)
-        return carry, EpisodeTrace(action, metrics_vec, reward, obj, restart)
+        return carry, EpisodeTrace(action_idx, metrics_vec, reward, obj,
+                                   _encode_restart(restart))
 
     def episode(params, w_vec, lo, span, carry, xs):
         body = functools.partial(one_step, params, w_vec, lo, span)
@@ -163,21 +241,24 @@ def _build_episode(step_fn, cfg: DDPGConfig, actor_tx, critic_tx,
 _EPISODE_CACHE: dict = {}
 
 
-def _compiled_episode(step_fn, cfg, actor_tx, critic_tx, learn, num_updates,
-                      fleet: bool, devices: Optional[tuple]):
+def _compiled_episode(step_fn, space, cfg, actor_tx, critic_tx, learn,
+                      num_updates, fleet: bool, devices: Optional[tuple]):
     """Jitted (and optionally vmapped + shard_mapped) episode, cached so
     repeated ``run()`` calls and same-space fleets reuse one compilation.
     The learner kernel mode is part of the cache key: flipping
     ``REPRO_KERNELS`` mid-process recompiles instead of silently reusing the
-    other path's program."""
+    other path's program. One cache entry serves EVERY chunk of EVERY grid
+    shape: the chunked fleet runner always calls it at the fixed chunk shape
+    ``[C, ...]``, so the underlying jit cache holds a single executable per
+    (chunk, steps) bucket — ``fn._cache_size()`` counts them."""
     from repro.kernels import ops
 
     kernel_mode = ops.ddpg_kernel_mode()
-    key = (step_fn, cfg, actor_tx, critic_tx, learn, num_updates, fleet,
-           devices, kernel_mode)
+    key = (step_fn, space, cfg, actor_tx, critic_tx, learn, num_updates,
+           fleet, devices, kernel_mode)
     if key in _EPISODE_CACHE:
         return _EPISODE_CACHE[key]
-    episode = _build_episode(step_fn, cfg, actor_tx, critic_tx, learn,
+    episode = _build_episode(step_fn, space, cfg, actor_tx, critic_tx, learn,
                              num_updates, kernel_mode=kernel_mode)
     if fleet:
         # session axis: params/w_vec/lo/span/carry stacked; xs shares the
@@ -234,13 +315,20 @@ def _consume_exploration(agent, steps: int, session: Optional[int] = None):
     return use_warmup, warmup, noise
 
 
+def _decode_trace(trace) -> EpisodeTrace:
+    """Device trace -> host numpy, restart fixed point decoded to seconds."""
+    trace = jax.tree_util.tree_map(np.asarray, trace)
+    return trace._replace(restarts=decode_restarts(trace.restarts))
+
+
 def run_episode_scan(env, agent, scalarizer, cur_metrics: dict, steps: int,
                  learn: bool = True) -> EpisodeTrace:
     """Run ``steps`` fused tuning iterations for one session.
 
     ``env`` must be a ``ModelEnv``. Mutates ``env`` (model state, last
     config) and ``agent`` (learner state, buffer, noise stream, steps_taken)
-    exactly as the host loop would; returns the per-step trace as numpy.
+    exactly as the host loop would; returns the per-step trace as numpy
+    (action indices + decoded restart seconds — see ``EpisodeTrace``).
     """
     model = env.model
     lo, span = metric_bounds(env.metric_specs, env.state_metrics)
@@ -260,8 +348,9 @@ def run_episode_scan(env, agent, scalarizer, cur_metrics: dict, steps: int,
                          agent._learn_key, jnp.asarray(state_vec),
                          jnp.asarray(objective))
 
-    fn = _compiled_episode(model.step_fn, agent.cfg, agent._actor_tx,
-                           agent._critic_tx, learn, agent.cfg.updates_per_step,
+    fn = _compiled_episode(model.step_fn, env.param_space, agent.cfg,
+                           agent._actor_tx, agent._critic_tx, learn,
+                           agent.cfg.updates_per_step,
                            fleet=False, devices=None)
     carry, trace = fn(model.params, jnp.asarray(w_vec), jnp.asarray(lo),
                       jnp.asarray(span), carry, xs)
@@ -274,19 +363,79 @@ def run_episode_scan(env, agent, scalarizer, cur_metrics: dict, steps: int,
             np.asarray(carry.buffer.s), np.asarray(carry.buffer.a),
             np.asarray(carry.buffer.r), np.asarray(carry.buffer.s2),
             int(carry.buffer.next_slot), int(carry.buffer.size))
-    return jax.tree_util.tree_map(np.asarray, trace)
+    return _decode_trace(trace)
+
+
+# ---------------------------------------------------------------------------
+# Streaming chunked fleet runtime
+# ---------------------------------------------------------------------------
+
+#: stats recorded by the most recent ``run_fleet_episode_scan`` call — the
+#: scaling benchmark and the compile-count regression tests read these.
+_LAST_FLEET_STATS: dict = {}
+
+
+def last_fleet_run_stats() -> dict:
+    """Measurement record of the most recent fleet episode run.
+
+    Keys: ``sessions``, ``chunk``, ``num_chunks``, ``padded_sessions``,
+    ``peak_device_bytes`` (resident jax-array bytes sampled at every chunk
+    boundary while that chunk's carry and trace are still live — a measured
+    lower bound that captures the persistent footprint the chunked runtime
+    controls), ``executable_cache_size`` (compiled shape buckets held by the
+    episode program) and ``program`` (the jitted callable itself, so tests
+    can pin that two grid shapes shared one executable)."""
+    return dict(_LAST_FLEET_STATS)
+
+
+def live_device_bytes() -> int:
+    """Total bytes of all live jax arrays in the process (measured, via
+    ``jax.live_arrays``). Process-wide: callers who want a clean reading
+    should not hold unrelated device arrays."""
+    return sum(int(getattr(x, "nbytes", 0)) for x in jax.live_arrays())
+
+
+def resolve_chunk(n: int, chunk: Optional[int], num_devices: int = 1) -> int:
+    """Effective chunk size: ``chunk`` (default: the whole fleet), capped at
+    ``n`` and rounded up to a device-count multiple so ``shard_map`` always
+    sees equal shards. The ragged remainder of the fleet — and the device
+    remainder — are padded inside the LAST chunk only (never more than one
+    chunk of padded work; asserted by the runner)."""
+    c = int(chunk) if chunk is not None else int(n)
+    if c <= 0:
+        raise ValueError(f"chunk must be positive, got {chunk}")
+    c = min(c, int(n))
+    if num_devices > 1:
+        c = int(math.ceil(c / num_devices) * num_devices)
+    return c
+
+
+def _pad_rows(x: np.ndarray, pad: int) -> np.ndarray:
+    """Pad a [rows, ...] array by replicating its own last row ``pad`` times
+    (the ragged-chunk filler: real session data, so the padded lanes run the
+    same well-defined compute and are sliced off afterwards)."""
+    if pad == 0:
+        return x
+    return np.concatenate([x, np.repeat(x[-1:], pad, axis=0)])
 
 
 def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
                        cur_metrics: Sequence, steps: int, learn: bool = True,
-                       devices: Optional[Sequence] = None) -> EpisodeTrace:
-    """Fleet variant: N sessions' episodes as one vmapped (and, with
-    ``devices``, shard_mapped) program. Trace leaves are [N, T, ...].
+                       devices: Optional[Sequence] = None,
+                       chunk: Optional[int] = None) -> EpisodeTrace:
+    """Fleet variant: N sessions' episodes streamed through one compiled
+    chunk program. Trace leaves are [N, T, ...] host numpy arrays.
 
-    Sessions are padded up to a multiple of the device count by replicating
-    session 0 (results sliced off), so any grid shape shards. Per-session
-    behaviour is independent of the device count: every session's PRNG keys
-    derive from its own seed, never from its placement.
+    ``chunk=C`` executes the fleet as ``ceil(N / C)`` chunks of exactly C
+    sessions (default: one chunk of all N — the monolithic schedule). All
+    chunks — including every other grid shape run at the same C — share ONE
+    compiled, donated episode executable; the fleet's state lives in host
+    numpy between chunks, so peak device memory is O(C·T). A ragged last
+    chunk (and, with ``devices``, the device remainder) is padded by
+    replicating the chunk's own last session; padded work never exceeds one
+    chunk and padded results are sliced off. Per-session behaviour is
+    independent of both the chunk size and the device count: every session's
+    PRNG keys derive from its own seed, never from its placement.
     """
     models = [e.model for e in envs]
     step_fns = {m.step_fn for m in models}
@@ -295,17 +444,28 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
             "fleet sessions must share one env model structure (same space / "
             "model class); mixed fleets need the host engine")
     n = len(envs)
+    space = envs[0].param_space
+    devices = tuple(devices) if devices else None
+    ndev = len(devices) if devices else 1
+    c = resolve_chunk(n, chunk, ndev)
+    num_chunks = -(-n // c)
+    pad_total = num_chunks * c - n
+    # no padded session's work exceeds one chunk: padding exists only to
+    # square off the LAST chunk (and the device remainder inside it)
+    assert pad_total < c, (pad_total, c, n)
 
-    def stack(trees):  # host-side stack: one transfer per leaf, not N
+    def stack_np(trees):  # host-side stack: plain numpy, no device residency
         return jax.tree_util.tree_map(
-            lambda *xs: jnp.asarray(np.stack([np.asarray(x) for x in xs])),
-            *trees)
+            lambda *xs: np.stack([np.asarray(x) for x in xs]), *trees)
 
-    params = stack([m.params for m in models])
-    env_states = stack([e.model_state for e in envs])
+    # -- full-fleet host staging (numpy; written back chunk by chunk) -------
+    params = stack_np([m.params for m in models])
+    env_states = stack_np([e.model_state for e in envs])
+    ddpg_states = jax.tree_util.tree_map(np.array, agent.states)
     lo, span = metric_bounds(envs[0].metric_specs, envs[0].state_metrics)
-    lo = np.broadcast_to(lo, (n, lo.shape[0]))
-    span = np.broadcast_to(span, (n, span.shape[0]))
+    k = lo.shape[0]
+    lo = np.broadcast_to(lo, (n, k))
+    span = np.broadcast_to(span, (n, k))
     w_vec = np.stack([sc.weight_vector(e.state_metrics)
                       for sc, e in zip(scalarizers, envs)])
     state_vecs = np.stack([
@@ -316,16 +476,16 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
                           np.float32)
 
     (bs, ba, br, bs2), sizes = agent.buffer.storage()
-    buffer = BufferState(
-        s=jnp.asarray(bs), a=jnp.asarray(ba), r=jnp.asarray(br),
-        s2=jnp.asarray(bs2),
-        next_slot=jnp.full((n,), agent.buffer._next, jnp.int32),
-        size=jnp.asarray(sizes, jnp.int32))
+    buf_np = tuple(np.array(x) for x in (bs, ba, br, bs2))
+    next_slots = np.full((n,), agent.buffer._next, np.int32)
+    sizes = np.array(sizes, np.int32)
+    learn_keys = np.array(agent._learn_keys)
 
     s0 = agent.steps_taken
+    m_dim = agent.cfg.action_dim
     use_warmup = np.zeros(steps, bool)
-    warmup = np.zeros((n, steps, agent.cfg.action_dim), np.float32)
-    noise = np.zeros((n, steps, agent.cfg.action_dim), np.float32)
+    warmup = np.zeros((n, steps, m_dim), np.float32)
+    noise = np.zeros((n, steps, m_dim), np.float32)
     for t in range(steps):
         if s0 + t < agent.warmup_steps:
             use_warmup[t] = True
@@ -334,42 +494,173 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
             noise[:, t] = np.stack([nz() for nz in agent.noises])
     agent.steps_taken += steps
 
-    carry = EpisodeCarry(env_states, agent.states, buffer, agent._learn_keys,
-                         jnp.asarray(state_vecs), jnp.asarray(objectives))
-    args = [params, jnp.asarray(w_vec), jnp.asarray(lo), jnp.asarray(span),
-            carry]
+    # -- preallocated host trace buffers (the stream targets) ---------------
+    out = EpisodeTrace(
+        action_idx=np.zeros((n, steps, space.dim), space.index_dtype()),
+        metrics=np.zeros((n, steps, k), np.float32),
+        rewards=np.zeros((n, steps), np.float32),
+        objectives=np.zeros((n, steps), np.float32),
+        restarts=np.zeros((n, steps), np.float32))
 
-    devices = tuple(devices) if devices else None
-    pad = 0
-    if devices and n % len(devices):
-        pad = len(devices) - n % len(devices)
-
-        def pad_tree(tree):
-            return jax.tree_util.tree_map(
-                lambda x: jnp.concatenate(
-                    [x, jnp.repeat(x[:1], pad, axis=0)]), tree)
-
-        args = [pad_tree(a) for a in args]
-        warmup = np.concatenate([warmup, np.repeat(warmup[:1], pad, axis=0)])
-        noise = np.concatenate([noise, np.repeat(noise[:1], pad, axis=0)])
-
-    fn = _compiled_episode(models[0].step_fn, agent.cfg, agent._actor_tx,
-                           agent._critic_tx, learn, agent.cfg.updates_per_step,
+    fn = _compiled_episode(models[0].step_fn, space, agent.cfg,
+                           agent._actor_tx, agent._critic_tx, learn,
+                           agent.cfg.updates_per_step,
                            fleet=True, devices=devices)
-    carry, trace = fn(*args, (use_warmup, warmup, noise))
-    if pad:
-        carry, trace = jax.tree_util.tree_map(lambda x: x[:n], (carry, trace))
 
-    for e, st in zip(envs, _unstack(carry.env_state, n)):
+    peak = live_device_bytes()
+    for ci in range(num_chunks):
+        a, b = ci * c, min(n, (ci + 1) * c)
+        cnt, pad = b - a, c - (b - a)
+
+        def chunk_of(tree):
+            return jax.tree_util.tree_map(
+                lambda x: jnp.asarray(_pad_rows(x[a:b], pad)), tree)
+
+        carry = EpisodeCarry(
+            env_state=chunk_of(env_states),
+            ddpg=chunk_of(ddpg_states),
+            buffer=BufferState(
+                s=chunk_of(buf_np[0]), a=chunk_of(buf_np[1]),
+                r=chunk_of(buf_np[2]), s2=chunk_of(buf_np[3]),
+                next_slot=chunk_of(next_slots), size=chunk_of(sizes)),
+            learn_key=chunk_of(learn_keys),
+            state_vec=chunk_of(state_vecs),
+            objective=chunk_of(objectives))
+        xs = (use_warmup,
+              jnp.asarray(_pad_rows(warmup[a:b], pad)),
+              jnp.asarray(_pad_rows(noise[a:b], pad)))
+
+        carry, trace = fn(chunk_of(params), chunk_of(w_vec), chunk_of(lo),
+                          chunk_of(span), carry, xs)
+
+        # stream the chunk's trace into the host buffers (np.asarray forces
+        # the computation and copies off-device)
+        out.action_idx[a:b] = np.asarray(trace.action_idx)[:cnt]
+        out.metrics[a:b] = np.asarray(trace.metrics)[:cnt]
+        out.rewards[a:b] = np.asarray(trace.rewards)[:cnt]
+        out.objectives[a:b] = np.asarray(trace.objectives)[:cnt]
+        out.restarts[a:b] = decode_restarts(np.asarray(trace.restarts)[:cnt])
+
+        # write the chunk's carry back into the fleet's host state
+        def write_back(dst_tree, src_tree):
+            jax.tree_util.tree_map(
+                lambda d, s: d.__setitem__(slice(a, b), np.asarray(s)[:cnt]),
+                dst_tree, src_tree)
+
+        write_back(env_states, carry.env_state)
+        write_back(ddpg_states, carry.ddpg)
+        write_back(buf_np[0], carry.buffer.s)
+        write_back(buf_np[1], carry.buffer.a)
+        write_back(buf_np[2], carry.buffer.r)
+        write_back(buf_np[3], carry.buffer.s2)
+        next_slots[a:b] = np.asarray(carry.buffer.next_slot)[:cnt]
+        sizes[a:b] = np.asarray(carry.buffer.size)[:cnt]
+        learn_keys[a:b] = np.asarray(carry.learn_key)[:cnt]
+
+        # peak sampled while this chunk's carry + trace are still live —
+        # the resident footprint the O(chunk) contract is about
+        peak = max(peak, live_device_bytes())
+        del carry, trace
+
+    _LAST_FLEET_STATS.clear()
+    _LAST_FLEET_STATS.update(
+        sessions=n, chunk=c, num_chunks=num_chunks,
+        padded_sessions=pad_total, peak_device_bytes=peak,
+        executable_cache_size=fn._cache_size(), program=fn)
+
+    for e, st in zip(envs, _unstack(env_states, n)):
         e.model_state = st
-    agent.states = carry.ddpg
-    agent._learn_keys = carry.learn_key
+    agent.states = ddpg_states
+    agent._learn_keys = jnp.asarray(learn_keys)
     if learn:
-        agent.buffer.set_storage(
-            np.asarray(carry.buffer.s), np.asarray(carry.buffer.a),
-            np.asarray(carry.buffer.r), np.asarray(carry.buffer.s2),
-            int(carry.buffer.next_slot[0]), int(carry.buffer.size[0]))
-    return jax.tree_util.tree_map(np.asarray, trace)
+        agent.buffer.set_storage(*buf_np, int(next_slots[0]), int(sizes[0]))
+    return out
+
+
+def precompile_fleet_episode(env, agent, steps: int, sessions: int,
+                             chunk: Optional[int] = None,
+                             devices: Optional[Sequence] = None,
+                             learn: bool = True):
+    """Warm the chunked fleet episode executable ahead of ``run()``.
+
+    Executes ONE dummy chunk episode (zero exploration, throwaway copies of
+    session 0's state) at exactly the shapes/dtypes the real run will use,
+    so the real run's chunks all hit the already-compiled program — and,
+    with ``enable_persistent_compilation_cache`` active, later processes
+    hit the on-disk cache. Agent, env and every RNG stream are untouched.
+    Returns the jitted episode program."""
+    model = env.model
+    space = env.param_space
+    cfg = agent.cfg
+    devices = tuple(devices) if devices else None
+    ndev = len(devices) if devices else 1
+    c = resolve_chunk(sessions, chunk, ndev)
+
+    def tile(x):
+        x = np.asarray(x)
+        return jnp.asarray(np.broadcast_to(x[None], (c,) + x.shape))
+
+    (bs, ba, br, bs2), _ = agent.buffer.storage()
+    lo, span = metric_bounds(env.metric_specs, env.state_metrics)
+    k, m = lo.shape[0], cfg.action_dim
+    carry = EpisodeCarry(
+        env_state=jax.tree_util.tree_map(tile, env.model_state),
+        ddpg=jax.tree_util.tree_map(
+            lambda x: jnp.asarray(np.repeat(np.asarray(x)[:1], c, axis=0)),
+            agent.states),
+        buffer=BufferState(
+            s=jnp.zeros((c,) + bs.shape[1:], bs.dtype),
+            a=jnp.zeros((c,) + ba.shape[1:], ba.dtype),
+            r=jnp.zeros((c,) + br.shape[1:], br.dtype),
+            s2=jnp.zeros((c,) + bs2.shape[1:], bs2.dtype),
+            next_slot=jnp.zeros((c,), jnp.int32),
+            size=jnp.zeros((c,), jnp.int32)),
+        learn_key=jnp.asarray(
+            np.zeros((c,) + np.asarray(agent._learn_keys).shape[1:],
+                     np.asarray(agent._learn_keys).dtype)),
+        state_vec=jnp.zeros((c, k), jnp.float32),
+        objective=jnp.zeros((c,), jnp.float32))
+    xs = (np.zeros(steps, bool), jnp.zeros((c, steps, m), jnp.float32),
+          jnp.zeros((c, steps, m), jnp.float32))
+
+    fn = _compiled_episode(model.step_fn, space, cfg, agent._actor_tx,
+                           agent._critic_tx, learn, cfg.updates_per_step,
+                           fleet=True, devices=devices)
+    outs = fn(jax.tree_util.tree_map(tile, model.params),
+              tile(np.zeros(k, np.float32)), tile(lo), tile(span), carry, xs)
+    jax.block_until_ready(outs)
+    return fn
+
+
+def episode_cache_stats() -> dict:
+    """Compile-reuse accounting for the episode engine: how many distinct
+    episode programs exist (one per (space, cfg, engine-shape) build) and
+    how many compiled shape buckets they hold in total."""
+    return {
+        "programs": len(_EPISODE_CACHE),
+        "executables": sum(fn._cache_size()
+                           for fn in _EPISODE_CACHE.values()),
+    }
+
+
+def enable_persistent_compilation_cache(path: Optional[str] = None) -> str:
+    """Point JAX's persistent compilation cache at ``path`` (default:
+    ``$REPRO_COMPILE_CACHE_DIR`` or ``~/.cache/repro-jax-cache``).
+
+    Repeated processes — grid sweeps, back-to-back example runs, CI lanes —
+    then deserialize the episode executable instead of recompiling it.
+    Call BEFORE the first compilation of the process (compiles that already
+    happened are not retro-cached). Returns the cache directory."""
+    path = (path or os.environ.get("REPRO_COMPILE_CACHE_DIR")
+            or os.path.join(os.path.expanduser("~"), ".cache",
+                            "repro-jax-cache"))
+    os.makedirs(path, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", path)
+    # cache everything: the episode program is worth persisting no matter
+    # how quickly this particular box compiled it
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    return path
 
 
 def _unstack(tree, n: int) -> list:

@@ -55,20 +55,50 @@ class FleetAgent:
     same network init key, warmup plan, OU-noise stream and on-device
     minibatch-sampling key — so per-session behaviour is independent of the
     fleet it runs in.
+
+    ``store="host"`` keeps the stacked learner state and replay storage in
+    host numpy (initialized in device chunks of ``init_chunk`` sessions) —
+    the streaming chunked episode runtime stages one chunk at a time, so a
+    1024-session fleet never owns O(N) device memory. Per-session values are
+    identical to the device store: JAX RNG is deterministic per key and the
+    vmap width never changes what a key produces. ``replay_dtype``
+    (default float32) is the replay *storage* precision — see
+    ``BatchedReplayBuffer``; bf16 is opt-in and changes learning
+    trajectories, so fleet-of-1 parity holds only at the default.
     """
 
     def __init__(self, cfg: DDPGConfig, seeds: Sequence[int],
-                 buffer_capacity: int = 64, warmup_steps: int = 8):
+                 buffer_capacity: int = 64, warmup_steps: int = 8,
+                 store: str = "device", replay_dtype=jnp.float32,
+                 init_chunk: Optional[int] = None):
         if not seeds:
             raise ValueError("need at least one session seed")
+        if store not in ("device", "host"):
+            raise ValueError(f"unknown store {store!r}; use 'device' or 'host'")
         self.cfg = cfg
         self.seeds = list(seeds)
         self.num_sessions = len(self.seeds)
         self.warmup_steps = warmup_steps
-        keys = jnp.stack([jax.random.PRNGKey(s) for s in self.seeds])
-        self.states, (self._actor_tx, self._critic_tx) = fleet_init(keys, cfg)
+        self.store = store
+        keys = [jax.random.PRNGKey(s) for s in self.seeds]
+        if store == "host":
+            # init in device chunks, stream to host: peak device memory for
+            # init is O(init_chunk), matching the chunked episode runtime
+            ic = int(init_chunk) if init_chunk else min(64, self.num_sessions)
+            parts = []
+            for i0 in range(0, self.num_sessions, ic):
+                states, txs = fleet_init(jnp.stack(keys[i0:i0 + ic]), cfg)
+                parts.append(jax.tree_util.tree_map(np.asarray, states))
+            self.states = jax.tree_util.tree_map(
+                lambda *xs: np.concatenate(xs), *parts)
+            self._actor_tx, self._critic_tx = txs
+        else:
+            self.states, (self._actor_tx, self._critic_tx) = fleet_init(
+                jnp.stack(keys), cfg)
         self.buffer = BatchedReplayBuffer(
-            self.num_sessions, buffer_capacity, cfg.state_dim, cfg.action_dim)
+            self.num_sessions, buffer_capacity, cfg.state_dim, cfg.action_dim,
+            storage_dtype=replay_dtype,
+            storage_backend="host" if store == "host" else "device")
         self.noises = [OUNoise(cfg.action_dim, seed=s + 1) for s in self.seeds]
         self._learn_keys = jnp.stack(
             [jax.random.PRNGKey(s + 3) for s in self.seeds])
@@ -168,7 +198,8 @@ class FleetTuner:
     def __init__(self, envs: Sequence, scalarizers: Sequence[Scalarizer],
                  agent: FleetAgent, eval_runs: int = 3, labels=None,
                  vectorized: Optional[bool] = None, engine: str = "host",
-                 devices: Optional[Sequence] = None):
+                 devices: Optional[Sequence] = None,
+                 chunk: Optional[int] = None):
         if not (len(envs) == len(scalarizers) == agent.num_sessions):
             raise ValueError("envs, scalarizers and agent sessions must align")
         if engine not in ("host", "scan"):
@@ -181,8 +212,13 @@ class FleetTuner:
                 "ModelEnv instances")
         if devices is not None and engine != "scan":
             raise ValueError("devices= sharding is a scan-engine feature")
+        if chunk is not None and engine != "scan":
+            raise ValueError("chunk= streaming is a scan-engine feature")
+        if chunk is not None and chunk <= 0:
+            raise ValueError(f"chunk must be positive, got {chunk}")
         self.engine = engine
         self.devices = list(devices) if devices else None
+        self.chunk = chunk
         self.envs = list(envs)
         self.scalarizers = list(scalarizers)
         self.agent = agent
@@ -217,7 +253,9 @@ class FleetTuner:
                   buffer_capacity: int = 64, warmup_steps: int = 8,
                   eval_runs: int = 3, extended: bool = False,
                   engine: str = "host",
-                  devices: Optional[Sequence] = None) -> "FleetTuner":
+                  devices: Optional[Sequence] = None,
+                  chunk: Optional[int] = None,
+                  replay_dtype=jnp.float32) -> "FleetTuner":
         """Build a fleet for the full seeds x workloads x objectives grid.
 
         ``env_factory(workload, seed)`` defaults to ``env_cls(workload,
@@ -230,10 +268,19 @@ class FleetTuner:
         same base seed.
 
         ``engine="scan"`` builds each cell as a pure-model environment
-        (``env.to_model_env()``) and runs whole fleet episodes as one fused
-        XLA program; ``devices`` (default: all local devices) shards the
-        session axis with ``shard_map``. Per-session keys come from the cell
-        seed alone, so results are invariant to the device count.
+        (``env.to_model_env()``) and runs whole fleet episodes as the
+        streaming chunked runtime (``core.episode``): ``chunk=C`` executes
+        the grid as chunks of C sessions through one compiled, donated
+        episode program with the fleet's state held in host numpy between
+        chunks — peak device memory O(C·T) — while ``chunk=None`` runs one
+        chunk of the whole grid. The scan agent stores its state host-side
+        for the same reason. ``devices`` (default: all local devices) shards
+        the chunk's session axis with ``shard_map``; any grid shape runs via
+        last-chunk padding. Per-session keys come from the cell seed alone,
+        so results are invariant to the device count AND the chunk size.
+        ``replay_dtype=jnp.bfloat16`` opts into compact replay storage
+        (f32 compute at gather; changes learning trajectories — see
+        ``BatchedReplayBuffer``).
         """
         if env_factory is not None and env_cls is not None:
             raise ValueError(
@@ -284,9 +331,57 @@ class FleetTuner:
                 "empty grid: need at least one workload, objective and seed")
         cfg = ddpg_config or DDPGConfig.for_env(envs[0])
         agent = FleetAgent(cfg, cell_seeds, buffer_capacity=buffer_capacity,
-                           warmup_steps=warmup_steps)
+                           warmup_steps=warmup_steps,
+                           store="host" if engine == "scan" else "device",
+                           replay_dtype=replay_dtype,
+                           init_chunk=chunk)
         return cls(envs, scals, agent, eval_runs=eval_runs, labels=labels,
-                   engine=engine, devices=devices if engine == "scan" else None)
+                   engine=engine, devices=devices if engine == "scan" else None,
+                   chunk=chunk if engine == "scan" else None)
+
+    # ------------------------------------------------------------------
+
+    def memory_plan(self, steps: int = 30) -> dict:
+        """Capacity accounting for this fleet (see module-level
+        ``memory_plan``), validated against the LIVE buffers: the predicted
+        per-session learner and replay bytes are checked against the actual
+        array sizes held by ``agent.states`` and ``agent.buffer``, and the
+        live numbers are reported alongside (``live`` /
+        ``matches_live``)."""
+        n = len(self.envs)
+        env_state_bytes = 0
+        if getattr(self.envs[0], "model", None) is not None:
+            env_state_bytes = sum(
+                int(np.asarray(leaf).nbytes) for leaf in
+                jax.tree_util.tree_leaves(self.envs[0].model_state))
+        plan = memory_plan(
+            self.agent.cfg, self.envs[0].param_space, sessions=n,
+            steps=steps, chunk=self.chunk,
+            capacity=self.agent.buffer.capacity,
+            replay_dtype=self.agent.buffer.storage_dtype,
+            num_devices=len(self.devices) if self.devices else 1,
+            env_state_bytes_per_session=env_state_bytes)
+        live_learner = sum(
+            int(np.asarray(leaf).nbytes) for leaf in
+            jax.tree_util.tree_leaves(self.agent.states)) // n
+        live_replay = self.agent.buffer.nbytes // n
+        plan["live"] = {"learner_bytes_per_session": live_learner,
+                        "replay_bytes_per_session": live_replay}
+        plan["matches_live"] = (
+            plan["per_session"]["learner_bytes"] == live_learner
+            and plan["per_session"]["replay_bytes"] == live_replay)
+        return plan
+
+    def precompile(self, steps: int):
+        """Compile the chunked episode executable ahead of ``run(steps)``
+        (and persist it, if ``enable_persistent_compilation_cache`` is
+        active) without touching tuning state. Scan engine only."""
+        if self.engine != "scan":
+            raise ValueError("precompile() applies to the scan engine")
+        from repro.core.episode import precompile_fleet_episode
+        return precompile_fleet_episode(
+            self.envs[0], self.agent, steps, sessions=len(self.envs),
+            chunk=self.chunk, devices=self.devices)
 
     # ------------------------------------------------------------------
 
@@ -331,20 +426,22 @@ class FleetTuner:
         return self._finish(t_wall)
 
     def _run_scan(self, steps: int) -> None:
-        """Fused fleet episode (``core.episode.run_fleet_episode_scan``), history
-        reconstructed from the trace."""
+        """Streaming chunked fleet episode
+        (``core.episode.run_fleet_episode_scan``), history reconstructed from
+        the compact trace."""
         from repro.core.episode import run_fleet_episode_scan
         n_sessions = len(self.envs)
         start = len(self.histories[0])
         t0 = time.perf_counter()
         trace = run_fleet_episode_scan(
             self.envs, self.agent, self.scalarizers, self._cur_metrics,
-            steps, learn=True, devices=self.devices)
+            steps, learn=True, devices=self.devices, chunk=self.chunk)
         per_step = (time.perf_counter() - t0) / max(1, steps)
 
         for i in range(n_sessions):
             env = self.envs[i]
-            configs = env.param_space.to_configs(trace.actions[i])
+            configs = env.param_space.configs_from_indices(
+                trace.action_idx[i])
             names = env.state_metrics
             prev_config = self._cur_configs[i]
             for t in range(steps):
@@ -454,3 +551,72 @@ class FleetTuner:
             ))
         return FleetResult(results=results, labels=list(self.labels),
                            wall_seconds=wall)
+
+
+def memory_plan(cfg: DDPGConfig, space, *, sessions: int, steps: int,
+                chunk: Optional[int] = None, capacity: int = 64,
+                replay_dtype=np.float32, num_devices: int = 1,
+                env_state_bytes_per_session: int = 0) -> dict:
+    """Bytes-per-session capacity accounting for the chunked fleet runtime.
+
+    Everything is derived from the shapes the runtime actually allocates:
+
+      * ``learner_bytes`` — one session's DDPG state: online + target
+        actor/critic (2× each) and both Adam moment sets, i.e. 4× the
+        actor + critic parameter floats, plus the step/Adam counters;
+      * ``replay_bytes`` — ``capacity × (2·state_dim + action_dim + 1)``
+        entries at the replay storage dtype (f32 default, bf16 opt-in);
+      * ``trace_bytes_per_step`` — the compact trace: per-knob index ints
+        (``ParamSpace.index_dtype``), the float32 metric vector,
+        reward/objective floats and the int32 fixed-point restart;
+      * ``chunk_device_bytes`` — what one chunk keeps resident on device
+        (state + replay + env state + exploration inputs + the chunk's
+        trace): the streaming runtime's peak, O(chunk·steps);
+      * ``fleet_host_bytes`` — the whole fleet's host-side state and trace
+        buffers, O(sessions·steps).
+
+    ``FleetTuner.memory_plan`` validates the learner/replay rows against the
+    live arrays (tests pin that the prediction IS the allocation).
+    """
+    from repro.core.episode import resolve_chunk
+
+    k, m = cfg.state_dim, cfg.action_dim
+
+    def mlp_floats(sizes):
+        return sum(i * o + o for i, o in zip(sizes[:-1], sizes[1:]))
+
+    actor = mlp_floats((k, *cfg.hidden, m))
+    critic = mlp_floats((k + m, *cfg.hidden, 1))
+    # online + target + Adam mu + Adam nu (4 copies of each net), f32,
+    # plus the learner step counter and one Adam count per optimizer (i32)
+    learner_bytes = 4 * (actor + critic) * 4 + 3 * 4
+    itemsize = np.dtype(replay_dtype).itemsize
+    replay_bytes = capacity * (2 * k + m + 1) * itemsize
+    idx_size = space.index_dtype().itemsize
+    trace_bytes_per_step = m * idx_size + k * 4 + 4 + 4 + 4
+    exploration_bytes_per_step = 2 * m * 4  # warmup + noise rows, f32
+
+    c = resolve_chunk(sessions, chunk, num_devices)
+    per_session_resident = (learner_bytes + replay_bytes
+                            + env_state_bytes_per_session)
+    chunk_device_bytes = c * (
+        per_session_resident
+        + steps * (trace_bytes_per_step + exploration_bytes_per_step))
+    fleet_host_bytes = sessions * (
+        per_session_resident
+        + steps * (trace_bytes_per_step + exploration_bytes_per_step))
+    return {
+        "sessions": sessions,
+        "chunk": c,
+        "steps": steps,
+        "capacity": capacity,
+        "replay_dtype": str(np.dtype(replay_dtype)),
+        "per_session": {
+            "learner_bytes": learner_bytes,
+            "replay_bytes": replay_bytes,
+            "env_state_bytes": env_state_bytes_per_session,
+            "trace_bytes_per_step": trace_bytes_per_step,
+        },
+        "chunk_device_bytes": chunk_device_bytes,
+        "fleet_host_bytes": fleet_host_bytes,
+    }

@@ -105,52 +105,97 @@ class ReplayBuffer:
 class BatchedReplayBuffer:
     """N independent FIFO buffers stacked on a leading session axis.
 
-    Device-resident (jax arrays) so the vmapped fleet learner reads transitions
-    without a host round-trip. Sessions step in lockstep — one ``add`` writes
-    one transition per session — so a single write cursor serves the fleet and
-    per-session eviction order is exactly ``ReplayBuffer``'s.
+    Device-resident (jax arrays) by default so the vmapped fleet learner reads
+    transitions without a host round-trip; ``storage_backend="host"`` keeps
+    the stacked arrays in numpy instead — the streaming chunked episode
+    runtime (``core.episode``) slices per-chunk views out of them, so a
+    1024-session fleet never materializes its whole replay pool on device.
+    Sessions step in lockstep — one ``add`` writes one transition per session
+    — so a single write cursor serves the fleet and per-session eviction
+    order is exactly ``ReplayBuffer``'s.
+
+    ``storage_dtype`` is the *storage* precision (default float32, which is
+    bitwise the single-session path). ``jnp.bfloat16`` halves replay bytes
+    per session; compute stays float32 — transitions are cast back to f32 at
+    minibatch gather (here in ``sample`` and in the fused learner's
+    post-gather cast), never accumulated in bf16. Opt-in because storage
+    rounding changes learning trajectories: fleet-of-1 parity with the single
+    ``Tuner`` holds only at the f32 default.
     """
 
     def __init__(self, num_sessions: int, capacity: int, state_dim: int,
-                 action_dim: int):
+                 action_dim: int, storage_dtype=jnp.float32,
+                 storage_backend: str = "device"):
         if capacity <= 0:
             raise ValueError("capacity must be positive")
         if num_sessions <= 0:
             raise ValueError("num_sessions must be positive")
+        if storage_backend not in ("device", "host"):
+            raise ValueError(f"unknown storage_backend {storage_backend!r}")
         self.num_sessions = num_sessions
         self.capacity = capacity
-        self._s = jnp.zeros((num_sessions, capacity, state_dim), jnp.float32)
-        self._a = jnp.zeros((num_sessions, capacity, action_dim), jnp.float32)
-        self._r = jnp.zeros((num_sessions, capacity), jnp.float32)
-        self._s2 = jnp.zeros((num_sessions, capacity, state_dim), jnp.float32)
+        self.storage_dtype = np.dtype(storage_dtype)
+        self.storage_backend = storage_backend
+        zeros = np.zeros if storage_backend == "host" else jnp.zeros
+        dt = self.storage_dtype
+        self._s = zeros((num_sessions, capacity, state_dim), dt)
+        self._a = zeros((num_sessions, capacity, action_dim), dt)
+        self._r = zeros((num_sessions, capacity), dt)
+        self._s2 = zeros((num_sessions, capacity, state_dim), dt)
         self._next = 0
         self._size = 0
 
     def __len__(self) -> int:
         return self._size
 
+    @property
+    def nbytes(self) -> int:
+        """Live storage bytes (all four stacked arrays, whole fleet)."""
+        return sum(int(x.nbytes) for x in (self._s, self._a, self._r,
+                                           self._s2))
+
     def add(self, state, action, reward, next_state) -> None:
         """Add one transition per session; each argument is [N, ...]."""
         i = self._next
-        self._s = self._s.at[:, i].set(jnp.asarray(state, jnp.float32))
-        self._a = self._a.at[:, i].set(jnp.asarray(action, jnp.float32))
-        self._r = self._r.at[:, i].set(jnp.asarray(reward, jnp.float32))
-        self._s2 = self._s2.at[:, i].set(jnp.asarray(next_state, jnp.float32))
+        dt = self.storage_dtype
+        if self.storage_backend == "host":
+            self._s[:, i] = np.asarray(state, jnp.float32).astype(dt)
+            self._a[:, i] = np.asarray(action, jnp.float32).astype(dt)
+            self._r[:, i] = np.asarray(reward, jnp.float32).astype(dt)
+            self._s2[:, i] = np.asarray(next_state, jnp.float32).astype(dt)
+        else:
+            # both backends narrow through f32 first (the transition's wire
+            # precision), so host and device storage round identically
+            self._s = self._s.at[:, i].set(
+                jnp.asarray(state, jnp.float32).astype(dt))
+            self._a = self._a.at[:, i].set(
+                jnp.asarray(action, jnp.float32).astype(dt))
+            self._r = self._r.at[:, i].set(
+                jnp.asarray(reward, jnp.float32).astype(dt))
+            self._s2 = self._s2.at[:, i].set(
+                jnp.asarray(next_state, jnp.float32).astype(dt))
         self._next = (i + 1) % self.capacity  # FIFO eviction once full
         self._size = min(self._size + 1, self.capacity)
 
     def storage(self):
-        """((s, a, r, s2) stacked [N, capacity, ...] arrays, sizes [N])."""
-        sizes = jnp.full((self.num_sessions,), self._size, jnp.int32)
+        """((s, a, r, s2) stacked [N, capacity, ...] arrays, sizes [N]).
+
+        Arrays come back in the storage dtype and backend (bf16 stays bf16;
+        host mode returns numpy views) — the fused learner casts minibatches
+        to f32 after gathering them."""
+        full = np.full if self.storage_backend == "host" else jnp.full
+        sizes = full((self.num_sessions,), self._size, jnp.int32)
         return (self._s, self._a, self._r, self._s2), sizes
 
     def set_storage(self, s, a, r, s2, next_slot: int, size: int) -> None:
         """Write back storage mutated off-host (fused fleet episodes advance
         the lockstep FIFO on-device and sync the shared cursor here)."""
-        self._s = jnp.asarray(s, jnp.float32)
-        self._a = jnp.asarray(a, jnp.float32)
-        self._r = jnp.asarray(r, jnp.float32)
-        self._s2 = jnp.asarray(s2, jnp.float32)
+        conv = np.asarray if self.storage_backend == "host" else jnp.asarray
+        dt = self.storage_dtype
+        self._s = conv(s, dt)
+        self._a = conv(a, dt)
+        self._r = conv(r, dt)
+        self._s2 = conv(s2, dt)
         self._next = int(next_slot)
         self._size = int(size)
 
@@ -159,7 +204,8 @@ class BatchedReplayBuffer:
 
         One ``take_along_axis`` per storage array (a single fused gather over
         the whole fleet) instead of a vmapped per-session gather — same index
-        draws, bitwise-identical batches.
+        draws, bitwise-identical batches. Minibatches are returned float32
+        regardless of the storage dtype (f32 compute at gather).
         """
         if self._size == 0:
             raise ValueError("cannot sample from an empty buffer")
@@ -168,18 +214,20 @@ class BatchedReplayBuffer:
         )(keys)
 
         def gather(x):
+            x = jnp.asarray(x)
             ix = idx.reshape(idx.shape + (1,) * (x.ndim - 2))
-            return jnp.take_along_axis(
+            rows = jnp.take_along_axis(
                 x, jnp.broadcast_to(ix, idx.shape + x.shape[2:]), axis=1)
+            return rows.astype(jnp.float32)
 
         return (gather(self._s), gather(self._a),
                 gather(self._r), gather(self._s2))
 
     def as_arrays(self):
-        """Valid rows only, as numpy: each [N, size, ...]."""
+        """Valid rows only, as float32 numpy: each [N, size, ...]."""
         n = self._size
-        return (np.asarray(self._s[:, :n]), np.asarray(self._a[:, :n]),
-                np.asarray(self._r[:, :n]), np.asarray(self._s2[:, :n]))
+        return tuple(np.asarray(x[:, :n]).astype(np.float32)
+                     for x in (self._s, self._a, self._r, self._s2))
 
     def state_dict(self) -> dict:
         return {
@@ -189,9 +237,11 @@ class BatchedReplayBuffer:
         }
 
     def load_state_dict(self, d: dict) -> None:
-        self._s = jnp.asarray(d["s"])
-        self._a = jnp.asarray(d["a"])
-        self._r = jnp.asarray(d["r"])
-        self._s2 = jnp.asarray(d["s2"])
+        conv = np.asarray if self.storage_backend == "host" else jnp.asarray
+        dt = self.storage_dtype
+        self._s = conv(d["s"], dt)
+        self._a = conv(d["a"], dt)
+        self._r = conv(d["r"], dt)
+        self._s2 = conv(d["s2"], dt)
         self._next = int(d["next"])
         self._size = int(d["size"])

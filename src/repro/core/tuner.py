@@ -208,7 +208,7 @@ class Tuner:
                              self._cur_metrics, steps, learn=learn)
         per_step = (time.perf_counter() - t0) / max(1, steps)
 
-        configs = self.env.param_space.to_configs(trace.actions)
+        configs = self.env.param_space.configs_from_indices(trace.action_idx)
         names = self.env.state_metrics
         prev_config = self._cur_config
         for t in range(steps):

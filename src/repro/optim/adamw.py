@@ -2,6 +2,7 @@
 
 from __future__ import annotations
 
+import functools
 from typing import Callable
 
 from repro.optim.transform import (
@@ -20,7 +21,22 @@ def _lr_transform(learning_rate) -> GradientTransformation:
     return scale(-float(learning_rate))
 
 
+@functools.lru_cache(maxsize=None)
+def _adam_cached(learning_rate: float, b1: float, b2: float,
+                 eps: float) -> GradientTransformation:
+    return chain(scale_by_adam(b1=b1, b2=b2, eps=eps),
+                 _lr_transform(learning_rate))
+
+
 def adam(learning_rate, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> GradientTransformation:
+    """Adam. Constant-rate instances are memoized: transforms are stateless
+    ``(init, update)`` pairs, and returning the SAME object for the same
+    hyperparameters lets every jit cache keyed on a transform (the fused
+    learner, the episode engine's compile cache) hit across independently
+    constructed agents — a fleet grid compiles its episode program once, not
+    once per ``FleetTuner``."""
+    if not callable(learning_rate):
+        return _adam_cached(float(learning_rate), b1, b2, eps)
     return chain(scale_by_adam(b1=b1, b2=b2, eps=eps), _lr_transform(learning_rate))
 
 
