@@ -27,10 +27,19 @@ Measurements backing the fleet subsystem's perf claims:
      MEASURED peak resident device bytes per session, compile-reuse
      accounting across >= 2 grid shapes, and the monolithic (chunk=None)
      64-session control. Feeds the ``fleet_scaling`` BENCH_<n>.json point.
+  6. Overlap A/B (``bench_overlap_ab``) — the double-buffered chunk staging
+     pipeline off vs on at the largest sweep size. Outputs are bitwise
+     identical either way; this isolates the wall-clock win from hiding
+     host<->device staging under compute.
+  7. Service mode (``bench_service``) — ``advance()`` rounds on a standing
+     ``FleetService`` (leased chunk slots, per-session host state) vs the
+     batch ``FleetTuner`` numbers, quantifying the serving-loop overhead.
 
 Usage:
     PYTHONPATH=src python benchmarks/fleet_throughput.py [--quick]
     PYTHONPATH=src python benchmarks/fleet_throughput.py --scaling [--quick]
+    PYTHONPATH=src python benchmarks/fleet_throughput.py --service [--quick]
+    PYTHONPATH=src python benchmarks/fleet_throughput.py --overlap-ab [--quick]
 """
 
 from __future__ import annotations
@@ -345,7 +354,8 @@ def _learner_summary(rows: list) -> dict:
 STEADY_STATE_BAND_64 = (55.0, 63.5)
 
 
-def _scaling_fleet(n: int, chunk, updates: int) -> FleetTuner:
+def _scaling_fleet(n: int, chunk, updates: int,
+                   overlap: bool = True) -> FleetTuner:
     """Fleet for ``n`` sessions. Grids of >= 64 sessions split over TWO
     workloads, smaller ones use one — the sweep deliberately spans >= 2 grid
     shapes so the compile-reuse claim (one chunk executable serves every
@@ -355,7 +365,86 @@ def _scaling_fleet(n: int, chunk, updates: int) -> FleetTuner:
                              updates_per_step=updates)
     return FleetTuner.from_grid(
         workloads, [{"throughput": 1.0}], list(range(n // len(workloads))),
-        engine="scan", ddpg_config=cfg, eval_runs=1, chunk=chunk)
+        engine="scan", ddpg_config=cfg, eval_runs=1, chunk=chunk,
+        overlap=overlap)
+
+
+def bench_overlap_ab(n: int, chunk: int, steps: int, updates: int = 96,
+                     repeats: int = 1) -> tuple:
+    """Double-buffered chunk staging A/B: the same fleet, overlap off vs on.
+
+    ``overlap=False`` is the pre-overlap serial schedule (stage -> compute ->
+    drain per chunk); ``overlap=True`` hides host->device staging and host
+    trace decode under the previous chunk's compute. Outputs are bitwise
+    identical (pinned by tests/test_chunked_fleet.py) — this measures the
+    wall-clock difference only. Returns (csv rows, summary fragment)."""
+    rows = [csv_row("overlap", "sessions", "chunks", "sps_median", "sps_min",
+                    "noise_band")]
+    out = {"sessions": n, "chunk": chunk, "steps": steps, "updates": updates}
+    from repro.core.episode import last_fleet_run_stats
+    for overlap in (False, True):
+        fleet = _scaling_fleet(n, chunk, updates, overlap=overlap)
+        fleet.precompile(steps)
+
+        def one():
+            t0 = time.perf_counter()
+            fleet.run(steps)
+            return steps * n / (time.perf_counter() - t0)
+
+        meas = repeat_measure(one, repeats)
+        stats = last_fleet_run_stats()
+        assert stats["overlap"] == overlap
+        key = "on" if overlap else "off"
+        out[key] = {"session_steps_per_sec": meas["median"],
+                    "min": meas["min"], "noise_band": meas["noise_band"],
+                    "peak_device_bytes": stats["peak_device_bytes"]}
+        rows.append(csv_row(key, n, stats["num_chunks"],
+                            f"{meas['median']:.2f}", f"{meas['min']:.2f}",
+                            f"{meas['noise_band']:.3f}"))
+    out["speedup_on_vs_off"] = (out["on"]["session_steps_per_sec"]
+                                / out["off"]["session_steps_per_sec"])
+    rows.append(csv_row("speedup_on_vs_off",
+                        f"{out['speedup_on_vs_off']:.2f}", "", "", "", ""))
+    return rows, out
+
+
+def bench_service(n: int, chunk: int, steps: int, updates: int = 96,
+                  repeats: int = 1) -> tuple:
+    """Service-mode throughput: the persistent ``FleetService`` driving the
+    same session population through its leased-slot chunk loop.
+
+    Measures ``advance(steps)`` rounds on a standing fleet — the serving-
+    loop overhead (per-session host state, boundary restaging, lease
+    bookkeeping) relative to the batch ``FleetTuner`` numbers above.
+    Returns (csv rows, summary fragment)."""
+    from repro.core import FleetService
+
+    cfg = DDPGConfig.for_env(LustreSimEnv("seq_write"),
+                             updates_per_step=updates)
+    svc = FleetService(chunk=chunk, ddpg_config=cfg, eval_runs=1)
+    for i in range(n):
+        svc.request_join("seq_write", {"throughput": 1.0}, i)
+    svc.advance(steps)  # lease + warm the chunk executable
+
+    def one():
+        t0 = time.perf_counter()
+        svc.advance(steps)
+        return steps * n / (time.perf_counter() - t0)
+
+    meas = repeat_measure(one, repeats)
+    stats = {k: v for k, v in svc.last_stats.items() if k != "program"}
+    rows = [csv_row("mode", "sessions", "chunks", "sps_median", "sps_min",
+                    "noise_band"),
+            csv_row("service", n, stats["num_chunks"],
+                    f"{meas['median']:.2f}", f"{meas['min']:.2f}",
+                    f"{meas['noise_band']:.3f}")]
+    return rows, {
+        "sessions": n, "chunk": chunk, "steps": steps, "updates": updates,
+        "session_steps_per_sec": meas["median"], "min": meas["min"],
+        "noise_band": meas["noise_band"],
+        "peak_device_bytes": stats["peak_device_bytes"],
+        "executable_cache_size": stats["executable_cache_size"],
+    }
 
 
 def bench_scaling(session_counts: list, chunk: int, steps: int,
@@ -483,6 +572,7 @@ def scaling_summary(quick: bool = False, repeats: int = None) -> dict:
         _, summary = _run_scaling_measure(quick, repeats)
         _LAST_RESULTS[key] = summary
     summary = dict(summary, quick=quick)
+    summary.update(_scaling_fragments(quick, repeats))
     p64 = next((p for p in summary["scaling"] if p["sessions"] == 64), None)
     if p64 is not None:
         # the trajectory series' canonical key (64-session steady state), so
@@ -497,6 +587,27 @@ def scaling_summary(quick: bool = False, repeats: int = None) -> dict:
                 {"median": p64["session_steps_per_sec"],
                  "noise_band": p64["noise_band"]}, prev_sps, prev["_file"])
     return summary
+
+
+def _scaling_fragments(quick: bool, repeats: int = None) -> dict:
+    """Overlap A/B + service-mode fragments riding along in the scaling
+    BENCH point (cached so a csv run and the json summary measure once)."""
+    key = ("scaling_frag", quick, repeats)
+    if key not in _LAST_RESULTS:
+        if quick:
+            _, ab = bench_overlap_ab(256, chunk=8, steps=2, updates=24,
+                                     repeats=repeats or 1)
+            _, svc = bench_service(32, chunk=8, steps=2, updates=24,
+                                   repeats=repeats or 1)
+        else:
+            # A/B at the sweep's largest size — that is where the synchronous
+            # staging dip lived; service point at 256 to bound join cost
+            _, ab = bench_overlap_ab(1024, chunk=16, steps=5, updates=96,
+                                     repeats=repeats or 1)
+            _, svc = bench_service(256, chunk=16, steps=5, updates=96,
+                                   repeats=repeats or 3)
+        _LAST_RESULTS[key] = {"overlap_ab": ab, "service_mode": svc}
+    return _LAST_RESULTS[key]
 
 
 def _run_scaling_measure(quick: bool, repeats: int = None) -> tuple:
@@ -611,8 +722,22 @@ if __name__ == "__main__":
     parser.add_argument("--scaling", action="store_true",
                         help="run the chunked-runtime scaling benchmark "
                         "instead of the fleet/learner set")
+    parser.add_argument("--service", action="store_true",
+                        help="run the persistent-FleetService throughput "
+                        "benchmark (advance() rounds on a standing fleet)")
+    parser.add_argument("--overlap-ab", action="store_true",
+                        help="run the double-buffered staging A/B "
+                        "(overlap off vs on, bitwise-identical outputs)")
     args = parser.parse_args()
-    if args.scaling:
+    if args.service:
+        n, c, s, u = (32, 8, 2, 24) if args.quick else (256, 16, 5, 96)
+        rows, _ = bench_service(n, c, s, u, repeats=args.repeats)
+        print("\n".join(rows))
+    elif args.overlap_ab:
+        n, c, s, u = (256, 8, 2, 24) if args.quick else (1024, 16, 5, 96)
+        rows, _ = bench_overlap_ab(n, c, s, u, repeats=args.repeats)
+        print("\n".join(rows))
+    elif args.scaling:
         print("\n".join(run_scaling(quick=args.quick, repeats=args.repeats)))
     else:
         print("\n".join(run(quick=args.quick, repeats=args.repeats)))

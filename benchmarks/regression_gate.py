@@ -1,0 +1,107 @@
+"""Benchmark-regression gate: fail CI when throughput leaves the noise band.
+
+The committed BENCH_<n>.json series is the perf trajectory; every full-mode
+point carries ``fleet_session_steps_per_sec`` (the canonical 64-session
+steady-state number) and a ``noise_band``. This gate re-measures that same
+point at FULL fidelity (64 sessions, chunk 16, 5 steps, 96 updates — the
+quick smoke parameters are deliberately NOT comparable), compares it against
+the latest committed full-mode point with the same ``vs_previous`` machinery
+the BENCH writer uses, and exits non-zero only on a ``regression`` label.
+``within_noise`` and ``improvement`` pass — the gate enforces the trajectory,
+it does not demand monotone speedups from a noisy box.
+
+    PYTHONPATH=src python -m benchmarks.regression_gate            # measure
+    PYTHONPATH=src python -m benchmarks.regression_gate --repeats 5
+
+With no committed full-mode BENCH point the gate passes vacuously (a fresh
+clone has nothing to regress against).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from benchmarks.common import repeat_measure, vs_previous
+
+
+def evaluate_gate(current: dict, prev_sps: float, prev_file: str) -> dict:
+    """Pure gate decision, unit-testable without timing anything.
+
+    ``current`` is a ``repeat_measure``-shaped dict (``median`` +
+    ``noise_band``); the gate fails ONLY on the ``regression`` label —
+    a median ratio below ``1 - noise_band``."""
+    comparison = vs_previous(current, prev_sps, prev_file)
+    return {"ok": comparison["label"] != "regression",
+            "comparison": comparison}
+
+
+def measure_steady_state(repeats: int = 3, steps: int = 5,
+                         updates: int = 96) -> dict:
+    """The canonical trajectory point: 64-session chunked fleet throughput
+    at full benchmark fidelity, median over ``repeats`` fresh runs."""
+    from benchmarks.fleet_throughput import _scaling_fleet
+
+    fleet = _scaling_fleet(64, chunk=16, updates=updates)
+    fleet.precompile(steps)
+
+    def one() -> float:
+        t0 = time.perf_counter()
+        fleet.run(steps)
+        return steps * 64 / (time.perf_counter() - t0)
+
+    return repeat_measure(one, repeats)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--repeats", type=int, default=3,
+                   help="fresh timed runs for the gate measurement")
+    p.add_argument("--bench-json", default=None,
+                   help="gate a pre-written full-mode BENCH json instead of "
+                        "measuring (must carry fleet_session_steps_per_sec)")
+    args = p.parse_args(argv)
+
+    from benchmarks.fleet_throughput import _previous_bench
+
+    prev = _previous_bench()
+    if prev is None:
+        print("regression-gate: no committed full-mode BENCH point; "
+              "passing vacuously")
+        return 0
+
+    if args.bench_json:
+        with open(args.bench_json) as f:
+            point = json.load(f)
+        if point.get("quick"):
+            print(f"regression-gate: {args.bench_json} is a quick-mode "
+                  "point — not comparable to the committed trajectory",
+                  file=sys.stderr)
+            return 2
+        current = {"median": point["fleet_session_steps_per_sec"],
+                   "noise_band": point.get("noise_band") or
+                   max(pt.get("noise_band", 0.0)
+                       for pt in point.get("scaling", [{}])) or 0.14}
+    else:
+        current = measure_steady_state(repeats=args.repeats)
+
+    verdict = evaluate_gate(current, prev["fleet_session_steps_per_sec"],
+                            prev["_file"])
+    print(json.dumps(verdict, indent=2, sort_keys=True))
+    if not verdict["ok"]:
+        print(f"regression-gate: FAIL — "
+              f"{verdict['comparison']['median']:.1f} session-steps/s is "
+              f"{verdict['comparison']['ratio']:.2f}x the committed "
+              f"{verdict['comparison']['previous']:.1f} "
+              f"({verdict['comparison']['file']}), outside the "
+              f"{verdict['comparison']['noise_band']:.0%} noise band",
+              file=sys.stderr)
+        return 1
+    print(f"regression-gate: ok ({verdict['comparison']['label']})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -45,12 +45,16 @@ def _dryrun_summary(path="benchmarks/results/dryrun.json") -> list:
 
 
 def _write_bench_json(summary: dict, root: str = None) -> str:
-    """Write the perf-trajectory point as BENCH_<n>.json at the repo root.
+    """Write the perf-trajectory point as BENCH_<n>.json under ``root``
+    (default: the repo root).
 
-    ``<n>`` is the next free index, so successive PRs leave a monotone series
-    of summaries (steps/sec, fleet size, speedup vs host loop) that can be
-    diffed across history."""
+    ``<n>`` is the next free index *within root*, so successive PRs leave a
+    monotone series of summaries (steps/sec, fleet size, speedup vs host
+    loop) that can be diffed across history. CI smoke lanes pass
+    ``--output-dir`` so their throwaway points number against a scratch
+    directory instead of appending to the committed trajectory."""
     root = root or os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    os.makedirs(root, exist_ok=True)
     n = 0
     while os.path.exists(os.path.join(root, f"BENCH_{n}.json")):
         n += 1
@@ -72,6 +76,10 @@ def main() -> None:
                    "defaults); medians + noise bands are recorded either way")
     p.add_argument("--no-bench-json", action="store_true",
                    help="skip writing the BENCH_<n>.json trajectory summary")
+    p.add_argument("--output-dir", default=None,
+                   help="directory for BENCH_<n>.json (default: repo root; "
+                        "CI smoke lanes MUST set this so they never clobber "
+                        "the committed perf trajectory)")
     args = p.parse_args()
     repeats = args.repeats or None
 
@@ -136,7 +144,7 @@ def main() -> None:
               "===", flush=True)
         summary = fleet_throughput.scaling_summary(quick=args.quick,
                                                    repeats=repeats)
-        path = _write_bench_json(summary)
+        path = _write_bench_json(summary, root=args.output_dir)
         largest = summary["scaling"][-1]
         print(f"wrote {path} "
               f"({largest['sessions']} sessions @ chunk {summary['chunk']}: "
@@ -150,7 +158,7 @@ def main() -> None:
         print("\n=== bench-json: episode-engine trajectory point ===",
               flush=True)
         summary = fleet_throughput.episode_summary(quick=args.quick)
-        path = _write_bench_json(summary)
+        path = _write_bench_json(summary, root=args.output_dir)
         print(f"wrote {path} "
               f"(fleet {summary['fleet_size']}: "
               f"{summary['fleet_session_steps_per_sec']:.1f} session-steps/s, "

@@ -7,6 +7,8 @@ across workloads).
 
     PYTHONPATH=src python examples/tune_fleet.py
     PYTHONPATH=src python examples/tune_fleet.py --sessions 64 --chunk 16
+    PYTHONPATH=src python examples/tune_fleet.py --service --checkpoint /tmp/f
+    PYTHONPATH=src python examples/tune_fleet.py --resume /tmp/f
 
 ``--sessions N`` spreads N sessions (seeds) over the workloads and runs them
 through the streaming chunked scan engine: chunks of ``--chunk`` sessions
@@ -15,11 +17,63 @@ O(chunk) no matter how large the fleet — the printed ``memory_plan()``
 summary shows the capacity math before anything runs. ``--compile-cache``
 persists the compiled episode across processes (back-to-back runs skip
 XLA compilation entirely).
+
+``--service`` runs the same grid through the persistent ``FleetService``
+(leased chunk slots, advance() rounds, checkpoint every round when
+``--checkpoint DIR`` is set); ``--resume DIR`` restores a checkpointed
+service and finishes its remaining rounds bit-identically to a run that
+was never interrupted.
 """
 
 import argparse
 
-from repro.core import FleetTuner
+from repro.core import FleetService, FleetTuner
+
+
+def _run_service(args) -> None:
+    """The grid as a persistent FleetService: advance() rounds with an
+    optional checkpoint each round; --resume continues bit-identically."""
+    weights = {"throughput": 1.0}
+    if args.resume:
+        svc = FleetService.restore(args.resume)
+        print(f"resumed service from {args.resume}: {len(svc.active)} "
+              f"sessions at step {svc.total_steps}/{args.steps}")
+    else:
+        workloads = ["seq_write", "video_server", "file_server"]
+        seeds = list(range(max(1, round(args.sessions / len(workloads)))))
+        svc = FleetService(chunk=args.chunk or 8, eval_runs=1,
+                           checkpoint_dir=args.checkpoint)
+        # same per-cell seed offsets as FleetTuner.from_grid, so a service
+        # run is comparable session-for-session with the batch path
+        cell = 0
+        for w in workloads:
+            for s in seeds:
+                svc.request_join(w, weights, s + 1000 * cell)
+                cell += 1
+        print(f"service: {cell} sessions joining, chunk {svc.chunk}")
+    while svc.total_steps < args.steps:
+        steps = min(args.round_steps, args.steps - svc.total_steps)
+        sids = svc.advance(steps)
+        st = svc.last_stats
+        print(f"round -> step {svc.total_steps}/{args.steps}: "
+              f"{len(sids)} sessions, "
+              f"{st['session_steps_per_sec']:.1f} session-steps/s")
+        if svc.checkpoint_dir:
+            print(f"  checkpoint: {svc.checkpoint()}")
+    labels = dict(svc.active)
+    for sid in labels:
+        svc.request_leave(sid)
+    svc.advance(0)
+    gains = []
+    for sid, label in list(labels.items())[:12]:
+        res = svc.result(sid)
+        print(f"{label:40s} {res.default_metrics['throughput']:7.1f} "
+              f"-> {res.best_metrics['throughput']:7.1f} MB/s "
+              f"({res.gain('throughput')*100:+.1f}%)")
+    for sid in labels:
+        gains.append(svc.result(sid).gain("throughput"))
+    print(f"\naggregate throughput gain over {len(gains)} sessions: "
+          f"mean {sum(gains)/len(gains)*100:+.1f}%")
 
 
 def main() -> None:
@@ -35,12 +89,27 @@ def main() -> None:
                         metavar="DIR",
                         help="enable JAX's persistent compilation cache "
                         "(optional DIR; default ~/.cache/repro-jax-cache)")
+    parser.add_argument("--service", action="store_true",
+                        help="run through the persistent FleetService "
+                        "(leased slots, advance() rounds)")
+    parser.add_argument("--checkpoint", default=None, metavar="DIR",
+                        help="service mode: checkpoint directory, written "
+                        "every round")
+    parser.add_argument("--resume", default=None, metavar="DIR",
+                        help="restore a checkpointed service from DIR and "
+                        "finish its rounds (implies --service)")
+    parser.add_argument("--round-steps", type=int, default=5,
+                        help="service mode: tuning steps per advance() round")
     args = parser.parse_args()
 
     if args.compile_cache is not None:
         from repro.core import enable_persistent_compilation_cache
         path = enable_persistent_compilation_cache(args.compile_cache or None)
         print(f"persistent compilation cache: {path}")
+
+    if args.service or args.resume:
+        _run_service(args)
+        return
 
     workloads = ["seq_write", "video_server", "file_server"]
     # the grid is a full workloads x seeds cross product, so the session

@@ -35,7 +35,10 @@ from repro.core.episode import (
     last_fleet_run_stats, live_device_bytes, precompile_fleet_episode,
     run_episode_scan, run_fleet_episode_scan,
 )
-from repro.core.fleet import FleetAgent, FleetResult, FleetTuner, memory_plan
+from repro.core.fleet import (
+    FleetAgent, FleetResult, FleetTuner, memory_plan, replay_compact_trace,
+)
+from repro.core.service import FleetService
 from repro.core.baselines import (
     BestConfigTuner, GridSearchTuner, RandomSearchTuner,
 )
@@ -50,6 +53,7 @@ __all__ = [
     "EpisodeTrace", "run_episode_scan", "run_fleet_episode_scan",
     "enable_persistent_compilation_cache", "episode_cache_stats",
     "last_fleet_run_stats", "live_device_bytes", "precompile_fleet_episode",
-    "FleetAgent", "FleetResult", "FleetTuner", "memory_plan",
+    "FleetAgent", "FleetResult", "FleetTuner", "FleetService", "memory_plan",
+    "replay_compact_trace",
     "BestConfigTuner", "GridSearchTuner", "RandomSearchTuner",
 ]

@@ -261,9 +261,10 @@ def _compiled_episode(step_fn, space, cfg, actor_tx, critic_tx, learn,
     episode = _build_episode(step_fn, space, cfg, actor_tx, critic_tx, learn,
                              num_updates, kernel_mode=kernel_mode)
     if fleet:
-        # session axis: params/w_vec/lo/span/carry stacked; xs shares the
-        # warmup schedule (sessions run in lockstep) but not plans/noise
-        episode = jax.vmap(episode, in_axes=(0, 0, 0, 0, 0, (None, 0, 0)))
+        # session axis: params/w_vec/lo/span/carry stacked; xs — including
+        # the warmup mask — are per-session so sessions of DIFFERENT ages
+        # (FleetService join/leave churn) can ride one chunk program
+        episode = jax.vmap(episode, in_axes=(0, 0, 0, 0, 0, (0, 0, 0)))
         if devices is not None and len(devices) > 1:
             from jax.sharding import Mesh, PartitionSpec as P
             try:
@@ -275,7 +276,7 @@ def _compiled_episode(step_fn, space, cfg, actor_tx, critic_tx, learn,
                 episode, mesh=mesh,
                 in_specs=(P("session"), P("session"), P("session"),
                           P("session"), P("session"),
-                          (P(), P("session"), P("session"))),
+                          (P("session"), P("session"), P("session"))),
                 out_specs=P("session"), check_rep=False)
     # Donating the carry (learner params + opt state + FIFO storage — the
     # bulk of the program's operands) lets XLA reuse those buffers in place
@@ -378,7 +379,8 @@ _LAST_FLEET_STATS: dict = {}
 def last_fleet_run_stats() -> dict:
     """Measurement record of the most recent fleet episode run.
 
-    Keys: ``sessions``, ``chunk``, ``num_chunks``, ``padded_sessions``,
+    Keys: ``sessions``, ``chunk``, ``num_chunks``, ``overlap`` (whether the
+    double-buffered chunk schedule was used), ``padded_sessions``,
     ``peak_device_bytes`` (resident jax-array bytes sampled at every chunk
     boundary while that chunk's carry and trace are still live — a measured
     lower bound that captures the persistent footprint the chunked runtime
@@ -419,10 +421,54 @@ def _pad_rows(x: np.ndarray, pad: int) -> np.ndarray:
     return np.concatenate([x, np.repeat(x[-1:], pad, axis=0)])
 
 
+def stream_chunks(call, stage, drain, num_chunks: int,
+                  overlap: bool = True) -> None:
+    """Drive the chunked episode pipeline, optionally double-buffered.
+
+    ``stage(ci)`` builds chunk ``ci``'s device operands (host -> device,
+    asynchronous under JAX's async dispatch), ``call(args)`` dispatches the
+    compiled episode program (returns device futures immediately), and
+    ``drain(ci, out)`` blocks on chunk ``ci``'s results, copies them to host
+    and decodes the compact trace.
+
+    ``overlap=False`` is the strictly serial schedule: stage -> compute ->
+    drain, one chunk at a time (the pre-overlap behaviour; one chunk of
+    device state resident).
+
+    ``overlap=True`` double-buffers: while chunk k computes on device,
+    chunk k+1's operands are staged host -> device and chunk k-1's results
+    are drained and decoded on the host — transfer and host decode hide
+    under compute, at the cost of at most TWO chunks of state in flight
+    (still O(chunk)). Chunks cover disjoint sessions, so the schedule change
+    cannot affect any session's results: outputs are bitwise identical to
+    the serial schedule, which is pinned by tests/test_chunked_fleet.py.
+    """
+    if num_chunks <= 0:
+        return
+    inflight = None
+    staged = stage(0)
+    for ci in range(num_chunks):
+        out = call(staged)
+        staged = None  # drop our handle; donation invalidated the carry
+        if overlap:
+            if ci + 1 < num_chunks:
+                staged = stage(ci + 1)  # host->device under chunk ci's compute
+            if inflight is not None:
+                drain(*inflight)        # blocks on chunk ci-1, ci still runs
+            inflight = (ci, out)
+        else:
+            drain(ci, out)
+            if ci + 1 < num_chunks:
+                staged = stage(ci + 1)
+    if inflight is not None:
+        drain(*inflight)
+
+
 def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
                        cur_metrics: Sequence, steps: int, learn: bool = True,
                        devices: Optional[Sequence] = None,
-                       chunk: Optional[int] = None) -> EpisodeTrace:
+                       chunk: Optional[int] = None,
+                       overlap: bool = True) -> EpisodeTrace:
     """Fleet variant: N sessions' episodes streamed through one compiled
     chunk program. Trace leaves are [N, T, ...] host numpy arrays.
 
@@ -436,6 +482,12 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
     chunk and padded results are sliced off. Per-session behaviour is
     independent of both the chunk size and the device count: every session's
     PRNG keys derive from its own seed, never from its placement.
+
+    ``overlap=True`` (default) double-buffers the chunk stream: while chunk
+    k computes, chunk k+1's state is staged host -> device and chunk k-1's
+    trace is decoded on the host (``stream_chunks``). Pure scheduling — the
+    compiled program and its inputs are unchanged, so results are bitwise
+    the serial schedule's; peak device residency is at most two chunks.
     """
     models = [e.model for e in envs]
     step_fns = {m.step_fn for m in models}
@@ -483,12 +535,12 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
 
     s0 = agent.steps_taken
     m_dim = agent.cfg.action_dim
-    use_warmup = np.zeros(steps, bool)
+    use_warmup = np.zeros((n, steps), bool)
     warmup = np.zeros((n, steps, m_dim), np.float32)
     noise = np.zeros((n, steps, m_dim), np.float32)
     for t in range(steps):
         if s0 + t < agent.warmup_steps:
-            use_warmup[t] = True
+            use_warmup[:, t] = True
             warmup[:, t] = agent._warmup_plans[:, s0 + t]
         else:
             noise[:, t] = np.stack([nz() for nz in agent.noises])
@@ -507,14 +559,15 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
                            agent.cfg.updates_per_step,
                            fleet=True, devices=devices)
 
-    peak = live_device_bytes()
-    for ci in range(num_chunks):
+    peak = [live_device_bytes()]
+
+    def stage(ci):
         a, b = ci * c, min(n, (ci + 1) * c)
-        cnt, pad = b - a, c - (b - a)
+        pad = c - (b - a)
 
         def chunk_of(tree):
             return jax.tree_util.tree_map(
-                lambda x: jnp.asarray(_pad_rows(x[a:b], pad)), tree)
+                lambda x: jax.device_put(_pad_rows(x[a:b], pad)), tree)
 
         carry = EpisodeCarry(
             env_state=chunk_of(env_states),
@@ -526,12 +579,22 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
             learn_key=chunk_of(learn_keys),
             state_vec=chunk_of(state_vecs),
             objective=chunk_of(objectives))
-        xs = (use_warmup,
-              jnp.asarray(_pad_rows(warmup[a:b], pad)),
-              jnp.asarray(_pad_rows(noise[a:b], pad)))
+        xs = (chunk_of(use_warmup), chunk_of(warmup), chunk_of(noise))
+        return (chunk_of(params), chunk_of(w_vec), chunk_of(lo),
+                chunk_of(span), carry, xs)
 
-        carry, trace = fn(chunk_of(params), chunk_of(w_vec), chunk_of(lo),
-                          chunk_of(span), carry, xs)
+    def call(args):
+        return fn(*args)
+
+    def drain(ci, out_pair):
+        carry, trace = out_pair
+        a, b = ci * c, min(n, (ci + 1) * c)
+        cnt = b - a
+
+        # peak sampled while this chunk's carry + trace (and, under overlap,
+        # the next chunk's staged operands) are still live — the resident
+        # footprint the O(chunk) contract is about
+        peak[0] = max(peak[0], live_device_bytes())
 
         # stream the chunk's trace into the host buffers (np.asarray forces
         # the computation and copies off-device)
@@ -557,15 +620,12 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
         sizes[a:b] = np.asarray(carry.buffer.size)[:cnt]
         learn_keys[a:b] = np.asarray(carry.learn_key)[:cnt]
 
-        # peak sampled while this chunk's carry + trace are still live —
-        # the resident footprint the O(chunk) contract is about
-        peak = max(peak, live_device_bytes())
-        del carry, trace
+    stream_chunks(call, stage, drain, num_chunks, overlap=overlap)
 
     _LAST_FLEET_STATS.clear()
     _LAST_FLEET_STATS.update(
-        sessions=n, chunk=c, num_chunks=num_chunks,
-        padded_sessions=pad_total, peak_device_bytes=peak,
+        sessions=n, chunk=c, num_chunks=num_chunks, overlap=overlap,
+        padded_sessions=pad_total, peak_device_bytes=peak[0],
         executable_cache_size=fn._cache_size(), program=fn)
 
     for e, st in zip(envs, _unstack(env_states, n)):
@@ -620,7 +680,7 @@ def precompile_fleet_episode(env, agent, steps: int, sessions: int,
                      np.asarray(agent._learn_keys).dtype)),
         state_vec=jnp.zeros((c, k), jnp.float32),
         objective=jnp.zeros((c,), jnp.float32))
-    xs = (np.zeros(steps, bool), jnp.zeros((c, steps, m), jnp.float32),
+    xs = (jnp.zeros((c, steps), bool), jnp.zeros((c, steps, m), jnp.float32),
           jnp.zeros((c, steps, m), jnp.float32))
 
     fn = _compiled_episode(model.step_fn, space, cfg, agent._actor_tx,

@@ -184,6 +184,56 @@ class FleetResult:
         return self.results[self.labels.index(label)]
 
 
+def replay_compact_trace(env, trace, i: int, *, start: int, per_step: float,
+                         prev_config: dict, best_objective: float,
+                         restart_seconds: float = 0.0) -> dict:
+    """Reconstruct session ``i``'s decision history from a compact trace.
+
+    The scan engine returns action INDICES and fixed-point restarts; this
+    decodes them into the exact ``StepRecord`` stream the host engine would
+    have produced — shared by ``FleetTuner._run_scan`` and the persistent
+    ``FleetService`` so both replay one trace the same way, bit for bit.
+    Mutates ``env`` exactly like the host loop: appends ``restart_events``
+    and sets ``_last_config``.
+
+    Returns a dict: ``records`` (list of StepRecord), ``cur_config`` /
+    ``cur_metrics`` (the post-episode session state; ``cur_metrics`` is None
+    for an empty trace), ``best`` (None, or the new best
+    config/metrics/objective beating ``best_objective``) and
+    ``restart_seconds`` (the running total, accumulated step-by-step from
+    the passed-in value so the float addition order matches the host loop).
+    """
+    steps = trace.rewards.shape[1]
+    configs = env.param_space.configs_from_indices(trace.action_idx[i])
+    names = env.state_metrics
+    records, best = [], None
+    for t in range(steps):
+        metrics = {n: float(v) for n, v in zip(names, trace.metrics[i, t])}
+        objective = float(trace.objectives[i, t])
+        restart = float(trace.restarts[i, t])
+        restart_seconds += restart
+        if restart > 0:
+            env.restart_events.append(
+                (env._scope(configs[t], prev_config), restart))
+        if objective > (best["objective"] if best else best_objective):
+            best = {"objective": objective, "config": dict(configs[t]),
+                    "metrics": dict(metrics)}
+        records.append(StepRecord(
+            step=start + t, config=configs[t], metrics=metrics,
+            objective=objective, reward=float(trace.rewards[i, t]),
+            restart_seconds=restart, action_seconds=per_step,
+            learn_seconds=0.0,
+        ))
+        prev_config = configs[t]
+    cur_config = configs[-1] if steps else prev_config
+    cur_metrics = ({n: float(v) for n, v in zip(names, trace.metrics[i, -1])}
+                   if steps else None)
+    env._last_config = dict(cur_config)
+    return {"records": records, "cur_config": cur_config,
+            "cur_metrics": cur_metrics, "best": best,
+            "restart_seconds": restart_seconds}
+
+
 class FleetTuner:
     """N concurrent Magpie tuning sessions sharing one fused learner.
 
@@ -199,7 +249,7 @@ class FleetTuner:
                  agent: FleetAgent, eval_runs: int = 3, labels=None,
                  vectorized: Optional[bool] = None, engine: str = "host",
                  devices: Optional[Sequence] = None,
-                 chunk: Optional[int] = None):
+                 chunk: Optional[int] = None, overlap: bool = True):
         if not (len(envs) == len(scalarizers) == agent.num_sessions):
             raise ValueError("envs, scalarizers and agent sessions must align")
         if engine not in ("host", "scan"):
@@ -219,6 +269,7 @@ class FleetTuner:
         self.engine = engine
         self.devices = list(devices) if devices else None
         self.chunk = chunk
+        self.overlap = overlap  # double-buffered chunk schedule (scan engine)
         self.envs = list(envs)
         self.scalarizers = list(scalarizers)
         self.agent = agent
@@ -254,7 +305,7 @@ class FleetTuner:
                   eval_runs: int = 3, extended: bool = False,
                   engine: str = "host",
                   devices: Optional[Sequence] = None,
-                  chunk: Optional[int] = None,
+                  chunk: Optional[int] = None, overlap: bool = True,
                   replay_dtype=jnp.float32) -> "FleetTuner":
         """Build a fleet for the full seeds x workloads x objectives grid.
 
@@ -280,7 +331,9 @@ class FleetTuner:
         so results are invariant to the device count AND the chunk size.
         ``replay_dtype=jnp.bfloat16`` opts into compact replay storage
         (f32 compute at gather; changes learning trajectories — see
-        ``BatchedReplayBuffer``).
+        ``BatchedReplayBuffer``). ``overlap`` (default on) double-buffers
+        the chunk stream — staging and trace decode hide under device
+        compute; bitwise the serial schedule (pure scheduling).
         """
         if env_factory is not None and env_cls is not None:
             raise ValueError(
@@ -337,7 +390,7 @@ class FleetTuner:
                            init_chunk=chunk)
         return cls(envs, scals, agent, eval_runs=eval_runs, labels=labels,
                    engine=engine, devices=devices if engine == "scan" else None,
-                   chunk=chunk if engine == "scan" else None)
+                   chunk=chunk if engine == "scan" else None, overlap=overlap)
 
     # ------------------------------------------------------------------
 
@@ -435,40 +488,25 @@ class FleetTuner:
         t0 = time.perf_counter()
         trace = run_fleet_episode_scan(
             self.envs, self.agent, self.scalarizers, self._cur_metrics,
-            steps, learn=True, devices=self.devices, chunk=self.chunk)
+            steps, learn=True, devices=self.devices, chunk=self.chunk,
+            overlap=self.overlap)
         per_step = (time.perf_counter() - t0) / max(1, steps)
 
         for i in range(n_sessions):
-            env = self.envs[i]
-            configs = env.param_space.configs_from_indices(
-                trace.action_idx[i])
-            names = env.state_metrics
-            prev_config = self._cur_configs[i]
-            for t in range(steps):
-                metrics = {n: float(v)
-                           for n, v in zip(names, trace.metrics[i, t])}
-                objective = float(trace.objectives[i, t])
-                restart = float(trace.restarts[i, t])
-                self.simulated_restart_seconds[i] += restart
-                if restart > 0:
-                    env.restart_events.append(
-                        (env._scope(configs[t], prev_config), restart))
-                if objective > self.best_objectives[i]:
-                    self.best_objectives[i] = objective
-                    self.best_configs[i] = dict(configs[t])
-                    self.best_metrics[i] = dict(metrics)
-                self.histories[i].append(StepRecord(
-                    step=start + t, config=configs[t], metrics=metrics,
-                    objective=objective, reward=float(trace.rewards[i, t]),
-                    restart_seconds=restart, action_seconds=per_step,
-                    learn_seconds=0.0,
-                ))
-                prev_config = configs[t]
-            self._cur_configs[i] = configs[-1] if steps else prev_config
-            self._cur_metrics[i] = (
-                {n: float(v) for n, v in zip(names, trace.metrics[i, -1])}
-                if steps else self._cur_metrics[i])
-            env._last_config = dict(self._cur_configs[i])
+            rep = replay_compact_trace(
+                self.envs[i], trace, i, start=start, per_step=per_step,
+                prev_config=self._cur_configs[i],
+                best_objective=self.best_objectives[i],
+                restart_seconds=float(self.simulated_restart_seconds[i]))
+            self.histories[i].extend(rep["records"])
+            self.simulated_restart_seconds[i] = rep["restart_seconds"]
+            if rep["best"] is not None:
+                self.best_objectives[i] = rep["best"]["objective"]
+                self.best_configs[i] = dict(rep["best"]["config"])
+                self.best_metrics[i] = dict(rep["best"]["metrics"])
+            self._cur_configs[i] = rep["cur_config"]
+            if rep["cur_metrics"] is not None:
+                self._cur_metrics[i] = rep["cur_metrics"]
 
     def _run_host(self, steps: int) -> None:
         n_sessions = len(self.envs)
@@ -572,6 +610,9 @@ def memory_plan(cfg: DDPGConfig, space, *, sessions: int, steps: int,
       * ``chunk_device_bytes`` — what one chunk keeps resident on device
         (state + replay + env state + exploration inputs + the chunk's
         trace): the streaming runtime's peak, O(chunk·steps);
+      * ``overlap_device_bytes`` — the double-buffered schedule's bound:
+        at most TWO chunks in flight (chunk k computing while k+1 stages
+        and k-1 drains), still O(chunk·steps);
       * ``fleet_host_bytes`` — the whole fleet's host-side state and trace
         buffers, O(sessions·steps).
 
@@ -618,5 +659,6 @@ def memory_plan(cfg: DDPGConfig, space, *, sessions: int, steps: int,
             "trace_bytes_per_step": trace_bytes_per_step,
         },
         "chunk_device_bytes": chunk_device_bytes,
+        "overlap_device_bytes": 2 * chunk_device_bytes,
         "fleet_host_bytes": fleet_host_bytes,
     }

@@ -1,0 +1,597 @@
+"""Persistent fleet serving: leased chunk slots, mid-flight join/leave,
+checkpointed bit-identical resume.
+
+``FleetTuner`` fixes its roster at ``from_grid`` time — the fleet IS the
+grid. Magpie's deployment story (tuning live tenants of a shared file
+system) needs the opposite: sessions arrive and depart while the fleet
+keeps running. ``FleetService`` lifts the streaming chunked episode runtime
+into a persistent serving loop — the worker/serving-loop split of the
+ROADMAP's vLLM TPU-worker exemplar:
+
+  * slots are LEASED: the compiled chunk program is fixed at width C for
+    the service's whole life; a joining session claims the lowest free
+    slot and frees it on leave. Every ``advance`` runs ``ceil(active/C)``
+    chunks of exactly C rows (vacant rows padded with a replicated live
+    row, padded results discarded), so one donated executable serves any
+    population.
+  * join/leave are REQUESTS, queued and applied only at ``advance``
+    boundaries — membership never changes mid-episode. That, plus vmap row
+    independence (a session's whole trajectory derives from its own seed
+    streams, never from its row placement or chunk-mates), makes churn
+    bit-neutral for surviving sessions: the churn CI lane pins a
+    join/leave-every-round service against a static fleet, exactly.
+  * per-session progress — learner params + opt state, FIFO replay, env
+    model state, exploration streams (LHS plan position, OU-noise RNG),
+    on-device learn key, step counter, decision history — checkpoints
+    through ``checkpoint/store.py`` (atomic publish, CRC-verified read),
+    so a killed service restores and continues bit-identically. A partial
+    or corrupt checkpoint RAISES (``KeyError``/``IOError``) rather than
+    silently reinitializing a session from scratch.
+
+Sessions of different ages ride one chunk program because the episode
+engine's exploration inputs — including the warmup mask — are per-session
+(``core.episode``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.agent import lhs_warmup_plan
+from repro.core.ddpg import DDPGConfig, OUNoise, actor_apply, fleet_init
+from repro.core.episode import (
+    BufferState,
+    EpisodeCarry,
+    EpisodeTrace,
+    _compiled_episode,
+    _pad_rows,
+    decode_restarts,
+    live_device_bytes,
+    stream_chunks,
+)
+from repro.core.fleet import replay_compact_trace
+from repro.core.scalarization import (
+    Scalarizer,
+    metric_bounds,
+    normalize_state,
+)
+from repro.core.tuner import (
+    StepRecord,
+    TuningResult,
+    evaluate_config,
+    recommend_final,
+)
+from repro.checkpoint.store import (
+    restore_checkpoint,
+    restore_into,
+    save_checkpoint,
+)
+
+
+@dataclasses.dataclass
+class _Session:
+    """One tenant's complete tuning state, host-resident between rounds."""
+
+    sid: int
+    label: str
+    workload: str
+    weights: dict
+    seed: int
+    env: object                # ModelEnv (owns model params + model_state)
+    scalarizer: Scalarizer
+    ddpg: object               # DDPGState pytree, UNSTACKED numpy leaves
+    buf: dict                  # {"s","a","r","s2"} numpy + "next","size" ints
+    learn_key: np.ndarray
+    noise: OUNoise
+    warmup_plan: np.ndarray    # [warmup_steps, m]
+    steps_taken: int
+    default_config: dict
+    default_metrics: dict
+    cur_config: dict
+    cur_metrics: dict
+    best_config: dict
+    best_metrics: dict
+    best_objective: float
+    history: list
+    restart_seconds: float
+    joined_at: float
+
+
+class FleetService:
+    """A persistent, elastic fleet of Magpie tuning sessions.
+
+    ``chunk`` is the leased slot width C — the one compiled episode width
+    for the service's lifetime. ``request_join``/``request_leave`` enqueue
+    membership changes; ``advance(steps)`` applies the queue at its
+    boundary and then runs ``steps`` fused tuning iterations for every
+    active session. ``advance(0)`` is a membership-only boundary.
+
+    Each session is seeded exactly like ``MagpieAgent(cfg, seed=s)`` /
+    ``FleetTuner``'s cells, so a session that joins at round 0 and leaves
+    after the same rounds reproduces the static fleet's trajectory.
+    ``leave`` finalizes the session with the shared §III-E rule
+    (``recommend_final``) and returns its ``TuningResult``.
+    """
+
+    def __init__(self, *, chunk: int, env_factory=None, env_cls=None,
+                 ddpg_config: Optional[DDPGConfig] = None,
+                 buffer_capacity: int = 64, warmup_steps: int = 8,
+                 eval_runs: int = 3, overlap: bool = True,
+                 checkpoint_dir: Optional[str] = None, keep: int = 3):
+        if chunk <= 0:
+            raise ValueError(f"chunk must be positive, got {chunk}")
+        if env_factory is not None and env_cls is not None:
+            raise ValueError("pass env_factory OR env_cls, not both")
+        if env_factory is None:
+            from repro.envs.lustre_sim import LustreSimEnv
+            cls_ = env_cls or LustreSimEnv
+
+            def env_factory(workload, seed):
+                return cls_(workload, seed=seed).to_model_env()
+        self.chunk = int(chunk)
+        self.env_factory = env_factory
+        self.cfg = ddpg_config
+        self.buffer_capacity = buffer_capacity
+        self.warmup_steps = warmup_steps
+        self.eval_runs = eval_runs
+        self.overlap = overlap
+        self.checkpoint_dir = checkpoint_dir
+        self.keep = keep
+        self.total_steps = 0
+        self._slots: list = []          # slot index -> sid or None (leases)
+        self._sessions: dict = {}       # sid -> _Session (leased only)
+        self._join_queue: list = []     # _Session, in request order
+        self._leave_queue: list = []    # sid, in request order
+        self._completed: dict = {}      # sid -> TuningResult
+        self._next_sid = 0
+        self._actor_tx = None
+        self._critic_tx = None
+        self.last_stats: dict = {}
+
+    # -- membership requests ------------------------------------------------
+
+    def request_join(self, workload: str, weights: Mapping[str, float],
+                     seed: int, label: Optional[str] = None) -> int:
+        """Queue a new tuning session; leased at the next boundary.
+
+        The session is fully initialized NOW (env build + default-config
+        evaluation, mirroring ``FleetTuner.from_grid``) so the join order —
+        not the boundary order — fixes its RNG streams. Returns its sid.
+        """
+        sid = self._next_sid
+        self._next_sid += 1
+        if label is None:
+            label = f"{workload}|{'+'.join(sorted(weights))}|seed{seed}"
+        self._join_queue.append(
+            self._new_session(sid, workload, dict(weights), seed, label))
+        return sid
+
+    def request_leave(self, sid: int) -> None:
+        """Queue a session's departure; finalized at the next boundary."""
+        if sid not in self._sessions and \
+                all(s.sid != sid for s in self._join_queue):
+            raise KeyError(f"unknown or already-finished session {sid}")
+        if sid not in self._leave_queue:
+            self._leave_queue.append(sid)
+
+    def result(self, sid: int) -> TuningResult:
+        """The ``TuningResult`` of a departed session."""
+        if sid not in self._completed:
+            raise KeyError(f"session {sid} has not left (or never existed)")
+        return self._completed[sid]
+
+    @property
+    def active(self) -> dict:
+        """{sid: label} of currently leased sessions."""
+        return {sid: s.label for sid, s in self._sessions.items()}
+
+    def lease_table(self) -> list:
+        """slot index -> sid (or None): the service's chunk-row leases."""
+        return list(self._slots)
+
+    # -- session construction ------------------------------------------------
+
+    def _new_session(self, sid, workload, weights, seed, label,
+                     evaluate_default: bool = True) -> _Session:
+        env = self.env_factory(workload, seed)
+        if self.cfg is None:
+            self.cfg = DDPGConfig.for_env(env)
+        scal = Scalarizer(weights=weights, specs=env.metric_specs)
+        # identical to FleetAgent's per-seed streams (width-1 vmap init
+        # produces the same per-key values as any other width)
+        states, (atx, ctx) = fleet_init(
+            jnp.stack([jax.random.PRNGKey(seed)]), self.cfg)
+        if self._actor_tx is None:
+            self._actor_tx, self._critic_tx = atx, ctx
+        ddpg = jax.tree_util.tree_map(lambda x: np.asarray(x)[0], states)
+        cap, k, m = self.buffer_capacity, self.cfg.state_dim, \
+            self.cfg.action_dim
+        buf = {"s": np.zeros((cap, k), np.float32),
+               "a": np.zeros((cap, m), np.float32),
+               "r": np.zeros((cap,), np.float32),
+               "s2": np.zeros((cap, k), np.float32),
+               "next": 0, "size": 0}
+        default_config = env.param_space.default_config()
+        if evaluate_default:
+            default_metrics = evaluate_config(env, default_config,
+                                              self.eval_runs)
+        else:
+            default_metrics = {}  # restore path fills from the checkpoint
+        return _Session(
+            sid=sid, label=label, workload=workload, weights=weights,
+            seed=seed, env=env, scalarizer=scal, ddpg=ddpg, buf=buf,
+            learn_key=np.asarray(jax.random.PRNGKey(seed + 3)),
+            noise=OUNoise(m, seed=seed + 1),
+            warmup_plan=lhs_warmup_plan(
+                np.random.default_rng(seed + 2), self.warmup_steps, m),
+            steps_taken=0,
+            default_config=dict(default_config),
+            default_metrics=dict(default_metrics),
+            cur_config=dict(default_config),
+            cur_metrics=dict(default_metrics),
+            best_config=dict(default_config),
+            best_metrics=dict(default_metrics),
+            best_objective=(scal.objective(default_metrics)
+                            if default_metrics else float("-inf")),
+            history=[], restart_seconds=0.0, joined_at=time.perf_counter())
+
+    # -- boundary: apply the request queue -----------------------------------
+
+    def _lease(self, sess: _Session) -> None:
+        for i, sid in enumerate(self._slots):
+            if sid is None:
+                self._slots[i] = sess.sid
+                break
+        else:
+            self._slots.append(sess.sid)
+        self._sessions[sess.sid] = sess
+
+    def _apply_requests(self) -> None:
+        # leaves first, so a same-boundary join can reuse the freed slot
+        for sid in self._leave_queue:
+            if sid in self._sessions:
+                self._finalize(self._sessions.pop(sid))
+                self._slots[self._slots.index(sid)] = None
+            else:  # joined and left within one boundary: never leased
+                sess = next(s for s in self._join_queue if s.sid == sid)
+                self._join_queue.remove(sess)
+                self._finalize(sess)
+        self._leave_queue = []
+        for sess in self._join_queue:
+            self._lease(sess)
+        self._join_queue = []
+
+    def _finalize(self, sess: _Session) -> None:
+        """§III-E final recommendation for one departing session."""
+        state_vec = normalize_state(sess.cur_metrics, sess.env.metric_specs,
+                                    sess.env.state_metrics)
+        a = np.asarray(actor_apply(
+            jax.tree_util.tree_map(jnp.asarray, sess.ddpg.actor),
+            jnp.asarray(state_vec, jnp.float32)))
+        policy_config = sess.env.param_space.to_config(
+            np.clip(a, 0.0, 1.0).astype(np.float32))
+        config, best_metrics, replaced = recommend_final(
+            sess.scalarizer, sess.best_config, policy_config,
+            lambda c: evaluate_config(sess.env, c, self.eval_runs))
+        if replaced:
+            sess.best_config = dict(config)
+        self._completed[sess.sid] = TuningResult(
+            best_config=dict(sess.best_config),
+            best_objective=sess.scalarizer.objective(best_metrics),
+            best_metrics=best_metrics,
+            default_config=dict(sess.default_config),
+            default_metrics=dict(sess.default_metrics),
+            history=list(sess.history),
+            simulated_restart_seconds=float(sess.restart_seconds),
+            wall_seconds=time.perf_counter() - sess.joined_at)
+
+    # -- the serving loop ----------------------------------------------------
+
+    def advance(self, steps: int) -> list:
+        """One boundary + ``steps`` fused tuning iterations for every active
+        session. Returns the sids that advanced (slot order)."""
+        self._apply_requests()
+        order = [sid for sid in self._slots if sid is not None]
+        if not order or steps <= 0:
+            return []
+        sessions = [self._sessions[sid] for sid in order]
+        self._advance_sessions(sessions, steps)
+        self.total_steps += steps
+        return order
+
+    def _advance_sessions(self, sessions: Sequence[_Session],
+                          steps: int) -> None:
+        """Run one ``steps``-long episode segment for ``sessions`` through
+        the chunked (double-buffered) episode program — the service-side
+        mirror of ``core.episode.run_fleet_episode_scan``, with per-session
+        ages, FIFO cursors and exploration streams first-class."""
+        step_fns = {s.env.model.step_fn for s in sessions}
+        if len(step_fns) != 1:
+            raise ValueError("all service sessions must share one env model "
+                             "structure (same space / model class)")
+        n = len(sessions)
+        c = self.chunk  # fixed lease width: ONE compiled width, always
+        num_chunks = -(-n // c)
+        space = sessions[0].env.param_space
+        env0 = sessions[0].env
+        cfg = self.cfg
+        k_dim, m_dim = cfg.state_dim, cfg.action_dim
+
+        def stack_np(trees):
+            return jax.tree_util.tree_map(
+                lambda *xs: np.stack([np.asarray(x) for x in xs]), *trees)
+
+        params = stack_np([s.env.model.params for s in sessions])
+        env_states = stack_np([s.env.model_state for s in sessions])
+        ddpg_states = stack_np([s.ddpg for s in sessions])
+        lo, span = metric_bounds(env0.metric_specs, env0.state_metrics)
+        k = lo.shape[0]
+        lo = np.broadcast_to(lo, (n, k))
+        span = np.broadcast_to(span, (n, k))
+        w_vec = np.stack([s.scalarizer.weight_vector(s.env.state_metrics)
+                          for s in sessions])
+        state_vecs = np.stack([
+            normalize_state(s.cur_metrics, s.env.metric_specs,
+                            s.env.state_metrics) for s in sessions])
+        objectives = np.array(
+            [np.float32(s.scalarizer.objective(s.cur_metrics))
+             for s in sessions], np.float32)
+        buf_np = tuple(
+            np.stack([s.buf[key] for s in sessions])
+            for key in ("s", "a", "r", "s2"))
+        next_slots = np.array([s.buf["next"] for s in sessions], np.int32)
+        sizes = np.array([s.buf["size"] for s in sessions], np.int32)
+        learn_keys = np.stack([s.learn_key for s in sessions])
+
+        # per-session exploration: each session consumes ITS OWN streams at
+        # ITS OWN age (this is what lets mixed-age chunks be exact)
+        use_warmup = np.zeros((n, steps), bool)
+        warmup = np.zeros((n, steps, m_dim), np.float32)
+        noise = np.zeros((n, steps, m_dim), np.float32)
+        for j, s in enumerate(sessions):
+            s0 = s.steps_taken
+            for t in range(steps):
+                if s0 + t < self.warmup_steps:
+                    use_warmup[j, t] = True
+                    warmup[j, t] = s.warmup_plan[s0 + t]
+                else:
+                    noise[j, t] = s.noise()
+            s.steps_taken += steps
+
+        out = EpisodeTrace(
+            action_idx=np.zeros((n, steps, space.dim), space.index_dtype()),
+            metrics=np.zeros((n, steps, k), np.float32),
+            rewards=np.zeros((n, steps), np.float32),
+            objectives=np.zeros((n, steps), np.float32),
+            restarts=np.zeros((n, steps), np.float32))
+
+        fn = _compiled_episode(env0.model.step_fn, space, cfg,
+                               self._actor_tx, self._critic_tx, True,
+                               cfg.updates_per_step, fleet=True, devices=None)
+        peak = [live_device_bytes()]
+        t0 = time.perf_counter()
+
+        def stage(ci):
+            a, b = ci * c, min(n, (ci + 1) * c)
+            pad = c - (b - a)
+
+            def chunk_of(tree):
+                return jax.tree_util.tree_map(
+                    lambda x: jax.device_put(_pad_rows(x[a:b], pad)), tree)
+
+            carry = EpisodeCarry(
+                env_state=chunk_of(env_states),
+                ddpg=chunk_of(ddpg_states),
+                buffer=BufferState(
+                    s=chunk_of(buf_np[0]), a=chunk_of(buf_np[1]),
+                    r=chunk_of(buf_np[2]), s2=chunk_of(buf_np[3]),
+                    next_slot=chunk_of(next_slots), size=chunk_of(sizes)),
+                learn_key=chunk_of(learn_keys),
+                state_vec=chunk_of(state_vecs),
+                objective=chunk_of(objectives))
+            xs = (chunk_of(use_warmup), chunk_of(warmup), chunk_of(noise))
+            return (chunk_of(params), chunk_of(w_vec), chunk_of(lo),
+                    chunk_of(span), carry, xs)
+
+        def drain(ci, out_pair):
+            carry, trace = out_pair
+            a, b = ci * c, min(n, (ci + 1) * c)
+            cnt = b - a
+            peak[0] = max(peak[0], live_device_bytes())
+            out.action_idx[a:b] = np.asarray(trace.action_idx)[:cnt]
+            out.metrics[a:b] = np.asarray(trace.metrics)[:cnt]
+            out.rewards[a:b] = np.asarray(trace.rewards)[:cnt]
+            out.objectives[a:b] = np.asarray(trace.objectives)[:cnt]
+            out.restarts[a:b] = decode_restarts(
+                np.asarray(trace.restarts)[:cnt])
+
+            def write_back(dst_tree, src_tree):
+                jax.tree_util.tree_map(
+                    lambda d, s: d.__setitem__(slice(a, b),
+                                               np.asarray(s)[:cnt]),
+                    dst_tree, src_tree)
+
+            write_back(env_states, carry.env_state)
+            write_back(ddpg_states, carry.ddpg)
+            write_back(buf_np[0], carry.buffer.s)
+            write_back(buf_np[1], carry.buffer.a)
+            write_back(buf_np[2], carry.buffer.r)
+            write_back(buf_np[3], carry.buffer.s2)
+            next_slots[a:b] = np.asarray(carry.buffer.next_slot)[:cnt]
+            sizes[a:b] = np.asarray(carry.buffer.size)[:cnt]
+            learn_keys[a:b] = np.asarray(carry.learn_key)[:cnt]
+
+        stream_chunks(lambda args: fn(*args), stage, drain, num_chunks,
+                      overlap=self.overlap)
+        wall = time.perf_counter() - t0
+        self.last_stats = dict(
+            sessions=n, chunk=c, num_chunks=num_chunks, steps=steps,
+            overlap=self.overlap, peak_device_bytes=peak[0],
+            executable_cache_size=fn._cache_size(),
+            session_steps_per_sec=n * steps / max(wall, 1e-9), program=fn)
+
+        # -- write per-session state + decision history back ----------------
+        per_step = wall / max(1, steps)
+
+        def row(tree, j):
+            return jax.tree_util.tree_map(lambda x: np.asarray(x[j]), tree)
+
+        for j, s in enumerate(sessions):
+            s.env.model_state = row(env_states, j)
+            s.ddpg = row(ddpg_states, j)
+            for key, arr in zip(("s", "a", "r", "s2"), buf_np):
+                s.buf[key] = np.asarray(arr[j])
+            s.buf["next"] = int(next_slots[j])
+            s.buf["size"] = int(sizes[j])
+            s.learn_key = np.asarray(learn_keys[j])
+            rep = replay_compact_trace(
+                s.env, out, j, start=len(s.history), per_step=per_step,
+                prev_config=s.cur_config, best_objective=s.best_objective,
+                restart_seconds=s.restart_seconds)
+            s.history.extend(rep["records"])
+            s.restart_seconds = rep["restart_seconds"]
+            if rep["best"] is not None:
+                s.best_objective = rep["best"]["objective"]
+                s.best_config = dict(rep["best"]["config"])
+                s.best_metrics = dict(rep["best"]["metrics"])
+            s.cur_config = rep["cur_config"]
+            if rep["cur_metrics"] is not None:
+                s.cur_metrics = rep["cur_metrics"]
+
+    # -- checkpoint / restore ------------------------------------------------
+
+    def checkpoint(self, directory: Optional[str] = None) -> str:
+        """Write the full service state through ``checkpoint/store.py``.
+
+        Call at a boundary: pending join/leave requests are part of the
+        NEXT boundary, not of durable state — raise instead of silently
+        dropping them. Completed sessions' results were already handed to
+        their callers and are not re-persisted."""
+        directory = directory or self.checkpoint_dir
+        if directory is None:
+            raise ValueError("no checkpoint directory configured")
+        if self._join_queue or self._leave_queue:
+            raise RuntimeError(
+                "pending join/leave requests; apply them first with "
+                "advance() (advance(0) is a membership-only boundary)")
+        tree, extra = {"sessions": {}}, {
+            "chunk": self.chunk, "warmup_steps": self.warmup_steps,
+            "buffer_capacity": self.buffer_capacity,
+            "eval_runs": self.eval_runs, "overlap": bool(self.overlap),
+            "keep": self.keep, "total_steps": self.total_steps,
+            "next_sid": self._next_sid,
+            "slots": [(-1 if s is None else s) for s in self._slots],
+            "cfg": {**self.cfg._asdict(),
+                    "hidden": list(self.cfg.hidden)},
+            "sessions": {}}
+        for sid, s in self._sessions.items():
+            tree["sessions"][str(sid)] = {
+                "ddpg": s.ddpg,
+                "buffer": {k: s.buf[k] for k in ("s", "a", "r", "s2")},
+                "env_params": s.env.model.params,
+                "env_state": s.env.model_state,
+                "learn_key": s.learn_key,
+                "noise_x": s.noise.state_dict()["x"],
+                "warmup_plan": s.warmup_plan,
+            }
+            nd = s.noise.state_dict()
+            extra["sessions"][str(sid)] = {
+                "label": s.label, "workload": s.workload,
+                "weights": s.weights, "seed": s.seed,
+                "steps_taken": s.steps_taken,
+                "buffer_next": s.buf["next"], "buffer_size": s.buf["size"],
+                "noise_t": nd["t"], "noise_bitgen": nd["bitgen"],
+                "default_config": s.default_config,
+                "default_metrics": s.default_metrics,
+                "cur_config": s.cur_config, "cur_metrics": s.cur_metrics,
+                "best_config": s.best_config, "best_metrics": s.best_metrics,
+                "best_objective": s.best_objective,
+                "restart_seconds": s.restart_seconds,
+                "restart_events": [[sc, sec]
+                                   for sc, sec in s.env.restart_events],
+                "last_config": s.env._last_config,
+                "history": [dataclasses.asdict(r) for r in s.history],
+            }
+        return save_checkpoint(directory, self.total_steps, tree,
+                               keep=self.keep, extra=extra)
+
+    @classmethod
+    def restore(cls, directory: str, *, env_factory=None, env_cls=None,
+                step: Optional[int] = None) -> "FleetService":
+        """Rebuild a service from a checkpoint, bit-identically.
+
+        Environments are rebuilt from ``env_factory(workload, seed)`` (they
+        must be the same definition the checkpoint was taken with — restored
+        model params are verified against the rebuilt ones and a mismatch
+        raises). Array state is CRC-verified by the store and restored
+        through ``restore_into`` against the freshly-built template, so a
+        missing leaf raises ``KeyError`` instead of reinitializing.
+        """
+        step, flat, extra = restore_checkpoint(directory, step)
+        cfg_d = dict(extra["cfg"])
+        cfg_d["hidden"] = tuple(cfg_d["hidden"])
+        svc = cls(chunk=extra["chunk"], env_factory=env_factory,
+                  env_cls=env_cls, ddpg_config=DDPGConfig(**cfg_d),
+                  buffer_capacity=extra["buffer_capacity"],
+                  warmup_steps=extra["warmup_steps"],
+                  eval_runs=extra["eval_runs"], overlap=extra["overlap"],
+                  checkpoint_dir=directory, keep=extra["keep"])
+        svc.total_steps = extra["total_steps"]
+        svc._next_sid = extra["next_sid"]
+        svc._slots = [None if s < 0 else int(s) for s in extra["slots"]]
+        for sid_s, meta in extra["sessions"].items():
+            sid = int(sid_s)
+            s = svc._new_session(sid, meta["workload"], dict(meta["weights"]),
+                                 meta["seed"], meta["label"],
+                                 evaluate_default=False)
+            template = {
+                "ddpg": s.ddpg,
+                "buffer": {k: s.buf[k] for k in ("s", "a", "r", "s2")},
+                "env_params": s.env.model.params,
+                "env_state": s.env.model_state,
+                "learn_key": s.learn_key,
+                "noise_x": s.noise.state_dict()["x"],
+                "warmup_plan": s.warmup_plan,
+            }
+            sub = {k[len(f"sessions/{sid_s}/"):]: v for k, v in flat.items()
+                   if k.startswith(f"sessions/{sid_s}/")}
+            restored = jax.tree_util.tree_map(
+                np.asarray, restore_into(template, sub))
+            if not all(np.array_equal(a, b) for a, b in zip(
+                    jax.tree_util.tree_leaves(restored["env_params"]),
+                    jax.tree_util.tree_leaves(s.env.model.params))):
+                raise ValueError(
+                    f"session {sid}: environment definition drifted — "
+                    "rebuilt model params differ from the checkpoint")
+            s.ddpg = restored["ddpg"]
+            for k in ("s", "a", "r", "s2"):
+                s.buf[k] = restored["buffer"][k]
+            s.buf["next"] = int(meta["buffer_next"])
+            s.buf["size"] = int(meta["buffer_size"])
+            s.env.model_state = restored["env_state"]
+            s.learn_key = restored["learn_key"]
+            s.noise.load_state_dict({
+                "x": restored["noise_x"], "t": meta["noise_t"],
+                "bitgen": meta["noise_bitgen"]})
+            s.warmup_plan = restored["warmup_plan"]
+            s.steps_taken = int(meta["steps_taken"])
+            s.default_config = dict(meta["default_config"])
+            s.default_metrics = dict(meta["default_metrics"])
+            s.cur_config = dict(meta["cur_config"])
+            s.cur_metrics = dict(meta["cur_metrics"])
+            s.best_config = dict(meta["best_config"])
+            s.best_metrics = dict(meta["best_metrics"])
+            s.best_objective = float(meta["best_objective"])
+            s.restart_seconds = float(meta["restart_seconds"])
+            s.env.restart_events = [
+                (sc, sec) for sc, sec in meta["restart_events"]]
+            s.env._last_config = dict(meta["last_config"])
+            s.history = [StepRecord(**r) for r in meta["history"]]
+            svc._sessions[sid] = s
+        return svc

@@ -1,0 +1,111 @@
+"""Benchmark-regression gate (benchmarks/regression_gate.py) and the
+BENCH_<n>.json output-dir plumbing (benchmarks/run.py).
+
+The gate's contract: a synthetic 30%-slower point MUST trip it (exit 1 /
+ok=False), while anything inside the measured noise band — including a
+modest improvement — MUST pass. The writer's contract: ``--output-dir``
+numbers BENCH files against the target directory, never against (or into)
+the committed repo-root trajectory.
+"""
+
+import json
+
+import pytest
+
+from benchmarks.common import ESTABLISHED_NOISE_BAND_REL
+from benchmarks.regression_gate import evaluate_gate
+from benchmarks.run import _write_bench_json
+
+
+def _current(median, noise_band=ESTABLISHED_NOISE_BAND_REL):
+    return {"median": median, "noise_band": noise_band}
+
+
+def test_synthetic_regression_trips_the_gate():
+    prev = 60.0
+    verdict = evaluate_gate(_current(prev * 0.70), prev, "BENCH_2.json")
+    assert verdict["ok"] is False
+    assert verdict["comparison"]["label"] == "regression"
+    assert verdict["comparison"]["ratio"] == pytest.approx(0.70)
+
+
+def test_within_noise_band_passes():
+    prev = 60.0
+    # both edges of the +-14% established band are noise, not regressions
+    for ratio in (1.0 - ESTABLISHED_NOISE_BAND_REL + 1e-6, 1.0,
+                  1.0 + ESTABLISHED_NOISE_BAND_REL - 1e-6):
+        verdict = evaluate_gate(_current(prev * ratio), prev, "BENCH_2.json")
+        assert verdict["ok"] is True
+        assert verdict["comparison"]["label"] == "within_noise"
+
+
+def test_improvement_passes_not_fails():
+    verdict = evaluate_gate(_current(80.0), 60.0, "BENCH_2.json")
+    assert verdict["ok"] is True
+    assert verdict["comparison"]["label"] == "improvement"
+
+
+def test_gate_uses_the_measured_noise_band():
+    # a 20% dip with a 25% measured band is noise; with the 14% floor it
+    # would have been a regression — the gate must respect the wider band
+    verdict = evaluate_gate(_current(48.0, noise_band=0.25), 60.0, "B.json")
+    assert verdict["ok"] is True
+    narrow = evaluate_gate(_current(48.0, noise_band=0.14), 60.0, "B.json")
+    assert narrow["ok"] is False
+
+
+def test_gate_cli_vacuous_pass_without_history(tmp_path, monkeypatch):
+    import benchmarks.fleet_throughput as ft
+    from benchmarks import regression_gate
+    monkeypatch.setattr(ft, "_previous_bench", lambda: None)
+    assert regression_gate.main([]) == 0
+
+
+def test_gate_cli_fails_on_regression_json(tmp_path, monkeypatch):
+    import benchmarks.fleet_throughput as ft
+    from benchmarks import regression_gate
+    monkeypatch.setattr(
+        ft, "_previous_bench",
+        lambda: {"fleet_session_steps_per_sec": 60.0, "_file": "BENCH_2.json"})
+    slow = tmp_path / "BENCH_0.json"
+    slow.write_text(json.dumps({
+        "quick": False, "fleet_session_steps_per_sec": 42.0,
+        "noise_band": 0.14, "scaling": []}))
+    assert regression_gate.main(["--bench-json", str(slow)]) == 1
+
+    ok = tmp_path / "BENCH_1.json"
+    ok.write_text(json.dumps({
+        "quick": False, "fleet_session_steps_per_sec": 58.0,
+        "noise_band": 0.14, "scaling": []}))
+    assert regression_gate.main(["--bench-json", str(ok)]) == 0
+
+    quick = tmp_path / "BENCH_2.json"
+    quick.write_text(json.dumps({
+        "quick": True, "fleet_session_steps_per_sec": 9.0}))
+    assert regression_gate.main(["--bench-json", str(quick)]) == 2
+
+
+# ---------------------------------------------------------------------------
+# BENCH_<n>.json --output-dir numbering (benchmarks/run.py)
+# ---------------------------------------------------------------------------
+
+def test_output_dir_numbering_is_local_to_the_dir(tmp_path):
+    out = tmp_path / "bench-out"
+    # numbering starts at 0 in a fresh dir (repo root already has BENCH_0..)
+    p0 = _write_bench_json({"benchmark": "x", "v": 1}, root=str(out))
+    assert p0 == str(out / "BENCH_0.json")
+    # a POPULATED output dir appends after its own highest index
+    p1 = _write_bench_json({"benchmark": "x", "v": 2}, root=str(out))
+    assert p1 == str(out / "BENCH_1.json")
+    with open(p1) as f:
+        assert json.load(f)["v"] == 2
+    # the committed trajectory was never touched
+    assert sorted(out.iterdir()) == [out / "BENCH_0.json",
+                                     out / "BENCH_1.json"]
+
+
+def test_output_dir_skips_existing_indices(tmp_path):
+    (tmp_path / "BENCH_0.json").write_text("{}")
+    (tmp_path / "BENCH_1.json").write_text("{}")
+    p = _write_bench_json({"benchmark": "x"}, root=str(tmp_path))
+    assert p == str(tmp_path / "BENCH_2.json")

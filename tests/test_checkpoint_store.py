@@ -1,0 +1,131 @@
+"""checkpoint/store.py under the FleetService state shapes.
+
+The service checkpoints a host-resident fleet pytree whose leaves span the
+full dtype mix of the streaming runtime: f32 learner/replay tensors, uint8
+compact-trace action indices, int32 fixed-point restart encodings and FIFO
+cursors, uint32 PRNG key words. These tests pin that the store round-trips
+every one of them bit-exactly, and that a damaged checkpoint RAISES —
+a partial file must never silently hand back a reinitialized session.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import (
+    restore_checkpoint,
+    restore_into,
+    save_checkpoint,
+)
+
+
+def _fleet_state_tree(rng):
+    """A miniature of FleetService.checkpoint()'s array tree."""
+    return {
+        "sessions": {
+            "0": {
+                "ddpg": {
+                    "actor": [rng.standard_normal((7, 5)).astype(np.float32),
+                              rng.standard_normal(5).astype(np.float32)],
+                    "opt_count": np.int32(42),
+                },
+                "buffer": {
+                    "s": rng.random((16, 3)).astype(np.float32),
+                    "a": rng.random((16, 2)).astype(np.float32),
+                },
+                "trace_idx": rng.integers(0, 200, (16, 2), dtype=np.uint8),
+                "restart_fp": rng.integers(
+                    0, 2**20, (16,), dtype=np.int32),
+                "learn_key": np.array([1234, 5678], np.uint32),
+            },
+            "1": {
+                "ddpg": {
+                    "actor": [rng.standard_normal((7, 5)).astype(np.float32),
+                              rng.standard_normal(5).astype(np.float32)],
+                    "opt_count": np.int32(7),
+                },
+                "buffer": {
+                    "s": rng.random((16, 3)).astype(np.float32),
+                    "a": rng.random((16, 2)).astype(np.float32),
+                },
+                "trace_idx": rng.integers(0, 200, (16, 2), dtype=np.uint8),
+                "restart_fp": rng.integers(
+                    0, 2**20, (16,), dtype=np.int32),
+                "learn_key": np.array([4321, 8765], np.uint32),
+            },
+        },
+    }
+
+
+def _leaves(tree):
+    import jax
+    return jax.tree_util.tree_leaves(tree)
+
+
+def test_mixed_dtype_fleet_tree_roundtrips_bitwise(tmp_path):
+    rng = np.random.default_rng(0)
+    tree = _fleet_state_tree(rng)
+    extra = {"slots": [0, 1], "total_steps": 9,
+             "noise_bitgen": {"state": {"state": 2**80, "inc": 3}}}
+    save_checkpoint(str(tmp_path), 9, tree, extra=extra)
+
+    step, flat, got_extra = restore_checkpoint(str(tmp_path))
+    assert step == 9
+    assert got_extra == extra  # big ints + nesting survive the JSON manifest
+    restored = restore_into(tree, flat)
+    for a, b in zip(_leaves(tree), _leaves(restored)):
+        assert np.asarray(b).dtype == np.asarray(a).dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_corrupt_array_raises_not_reinitializes(tmp_path):
+    rng = np.random.default_rng(1)
+    path = save_checkpoint(str(tmp_path), 3, _fleet_state_tree(rng))
+    npz = os.path.join(path, "arrays.npz")
+    with np.load(npz) as z:  # simulate a torn write: payload drifts from
+        flat = {k: z[k] for k in z.files}  # the CRCs the manifest recorded
+    flat["sessions/0/buffer/s"] = flat["sessions/0/buffer/s"].copy()
+    flat["sessions/0/buffer/s"][0, 0] += 1.0
+    np.savez(npz, **flat)
+    with pytest.raises(IOError, match="corruption"):
+        restore_checkpoint(str(tmp_path))
+
+
+def test_missing_leaf_raises_keyerror(tmp_path):
+    rng = np.random.default_rng(2)
+    tree = _fleet_state_tree(rng)
+    save_checkpoint(str(tmp_path), 1, tree)
+    _, flat, _ = restore_checkpoint(str(tmp_path))
+    del flat["sessions/0/learn_key"]
+    with pytest.raises(KeyError, match="learn_key"):
+        restore_into(tree, flat)
+
+
+def test_shape_drift_raises_valueerror(tmp_path):
+    rng = np.random.default_rng(3)
+    tree = _fleet_state_tree(rng)
+    save_checkpoint(str(tmp_path), 1, tree)
+    _, flat, _ = restore_checkpoint(str(tmp_path))
+    grown = _fleet_state_tree(rng)
+    grown["sessions"]["0"]["buffer"]["s"] = np.zeros((32, 3), np.float32)
+    with pytest.raises(ValueError, match="shape mismatch"):
+        restore_into(grown, flat)
+
+
+def test_tampered_manifest_crc_raises(tmp_path):
+    rng = np.random.default_rng(4)
+    path = save_checkpoint(str(tmp_path), 5, _fleet_state_tree(rng))
+    mpath = os.path.join(path, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    key = next(iter(manifest["crc"]))
+    manifest["crc"][key] ^= 0xDEADBEEF
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(IOError, match="corruption"):
+        restore_checkpoint(str(tmp_path))
+    # verify=False is the explicit escape hatch, not the default
+    step, flat, _ = restore_checkpoint(str(tmp_path), verify=False)
+    assert step == 5 and flat

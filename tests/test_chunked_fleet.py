@@ -78,6 +78,22 @@ def test_chunked_matches_monolithic_8d():
     _check_chunk_equivalence(LustreSimV2)
 
 
+def test_overlap_staging_is_bitwise_pure_scheduling():
+    """Double-buffered chunk staging (stage k+1 / drain k-1 under chunk k's
+    compute) changes WHEN transfers happen, never what is computed: same
+    chunk width -> same compiled program -> results are bitwise identical
+    with overlap off and on (maxulp=0), including across progressive runs."""
+    on, off = _fleet(LustreSimEnv, 2), _fleet(LustreSimEnv, 2)
+    off.overlap = False
+    for steps in (4, 3):
+        r_on, r_off = on.run(steps), off.run(steps)
+        assert last_fleet_run_stats()["overlap"] is False
+        for a, b in zip(r_on.results, r_off.results):
+            _assert_bitwise_equal_runs(a, b, maxulp=0)
+    on.run(2)
+    assert last_fleet_run_stats()["overlap"] is True
+
+
 def test_progressive_runs_survive_chunking():
     """Chunked fleets resume across run() calls exactly like monolithic ones
     (agent state, FIFO and noise streams stream back to host between runs)."""

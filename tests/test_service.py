@@ -1,0 +1,218 @@
+"""Persistent FleetService (core/service.py): the churn CI lane.
+
+Load-bearing properties pinned here:
+  * a service whose sessions all join before the first ``advance`` and leave
+    after the last reproduces the static ``FleetTuner`` single-run results
+    EXACTLY (maxulp=0) — the serving loop adds scheduling, not arithmetic;
+  * churn is bit-neutral: sessions joining and leaving at EVERY advance
+    boundary leave the survivors' decision trajectories bitwise identical
+    to a churn-free service on the same cadence (vmap row independence:
+    a session's trajectory derives from its own seed streams, never from
+    its row placement or chunk-mates);
+  * kill-and-resume: a service restored from a ``checkpoint/store.py``
+    snapshot continues bit-identically — same histories, same results;
+  * checkpoints refuse to drop pending membership requests, and leases
+    (chunk slots) are recycled across leave/join.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import DDPGConfig, FleetService, FleetTuner
+from repro.envs import LustreSimEnv
+
+from tests.test_episode import _assert_bitwise_equal_runs
+
+W = {"throughput": 1.0}
+
+
+def _cfg():
+    return DDPGConfig.for_env(LustreSimEnv("seq_write"), updates_per_step=4)
+
+
+def _service(chunk=2, **kw):
+    kw.setdefault("ddpg_config", _cfg())
+    kw.setdefault("warmup_steps", 3)
+    kw.setdefault("eval_runs", 1)
+    return FleetService(chunk=chunk, **kw)
+
+
+def _assert_exact_histories(a, b):
+    """Bitwise history equality (timing fields excluded — they are wall
+    clock, everything else must be exact)."""
+    assert len(a) == len(b)
+    for ra, rb in zip(a, b):
+        assert ra.step == rb.step and ra.config == rb.config
+        assert ra.metrics == rb.metrics
+        assert ra.objective == rb.objective and ra.reward == rb.reward
+        assert ra.restart_seconds == rb.restart_seconds
+
+
+# ---------------------------------------------------------------------------
+# Service == static FleetTuner (full-lifetime sessions, one advance)
+# ---------------------------------------------------------------------------
+
+def test_service_matches_static_fleet_exactly():
+    seeds, steps = [0, 1, 2, 3], 6
+    fleet = FleetTuner.from_grid(
+        ["seq_write"], [W], seeds, engine="scan", ddpg_config=_cfg(),
+        eval_runs=1, warmup_steps=3, chunk=2)
+    static = fleet.run(steps)
+
+    svc = _service(chunk=2)
+    # from_grid offsets cell seeds by 1000 per cell; mirror that here so
+    # both populations consume identical RNG streams
+    sids = [svc.request_join("seq_write", W, s + 1000 * i)
+            for i, s in enumerate(seeds)]
+    advanced = svc.advance(steps)
+    assert advanced == sids
+    stats = svc.last_stats
+    assert stats["sessions"] == 4 and stats["chunk"] == 2
+    assert stats["num_chunks"] == 2
+    for sid in sids:
+        svc.request_leave(sid)
+    assert svc.advance(0) == []  # membership-only boundary
+    assert svc.active == {}
+    for sid, res in zip(sids, static.results):
+        got = svc.result(sid)
+        _assert_bitwise_equal_runs(res, got, maxulp=0)
+        _assert_exact_histories(res.history, got.history)
+        assert got.simulated_restart_seconds == res.simulated_restart_seconds
+
+
+# ---------------------------------------------------------------------------
+# Churn: join/leave every boundary is bit-neutral for survivors
+# ---------------------------------------------------------------------------
+
+def test_churn_every_boundary_is_bitwise_neutral():
+    rounds, steps = 3, 2
+
+    quiet = _service(chunk=2)
+    survivors_q = [quiet.request_join("seq_write", W, s) for s in (0, 1)]
+    for _ in range(rounds):
+        quiet.advance(steps)
+    for sid in survivors_q:
+        quiet.request_leave(sid)
+    quiet.advance(0)
+
+    churn = _service(chunk=2)
+    survivors_c = [churn.request_join("seq_write", W, s) for s in (0, 1)]
+    transient = None
+    for r in range(rounds):
+        # a fresh tenant joins every round; the previous one departs —
+        # membership changes at EVERY boundary while the survivors run
+        if transient is not None:
+            churn.request_leave(transient)
+        transient = churn.request_join("seq_write", W, 50 + r)
+        churn.advance(steps)
+        assert transient in churn.active
+    churn.request_leave(transient)
+    for sid in survivors_c:
+        churn.request_leave(sid)
+    churn.advance(0)
+
+    for sq, sc in zip(survivors_q, survivors_c):
+        a, b = quiet.result(sq), churn.result(sc)
+        _assert_bitwise_equal_runs(a, b, maxulp=0)
+        _assert_exact_histories(a.history, b.history)
+    # the transients really ran (steps per round while leased)
+    assert len(churn.result(transient).history) == steps
+
+
+def test_fixed_lease_width_reuses_one_executable():
+    """The service always runs chunks at exactly ``chunk`` rows, so growing
+    the population adds chunks, never compiled shapes: the second advance
+    reuses the first one's program AND its compiled-shape bucket (relative
+    check — other tests may share the underlying program cache)."""
+    svc = _service(chunk=2)
+    svc.request_join("seq_write", W, 0)
+    svc.advance(2)
+    first = dict(svc.last_stats)
+    svc.request_join("seq_write", W, 1)
+    svc.request_join("seq_write", W, 2)
+    svc.advance(2)
+    second = svc.last_stats
+    assert (first["num_chunks"], second["num_chunks"]) == (1, 2)
+    assert second["program"] is first["program"]
+    assert second["executable_cache_size"] == first["executable_cache_size"]
+
+
+def test_leases_are_recycled():
+    svc = _service(chunk=2)
+    a = svc.request_join("seq_write", W, 0)
+    b = svc.request_join("seq_write", W, 1)
+    svc.advance(1)
+    assert svc.lease_table() == [a, b]
+    svc.request_leave(a)
+    c = svc.request_join("seq_write", W, 2)
+    svc.advance(1)
+    assert svc.lease_table() == [c, b]  # freed slot reused, not appended
+    assert svc.result(a).best_config  # departed session finalized
+
+
+# ---------------------------------------------------------------------------
+# Kill-and-resume: bitwise continuation from a checkpoint
+# ---------------------------------------------------------------------------
+
+def test_kill_and_resume_is_bitwise(tmp_path):
+    ckpt = str(tmp_path / "svc")
+    svc = _service(chunk=2, checkpoint_dir=ckpt)
+    sids = [svc.request_join("seq_write", W, s) for s in (0, 1, 2)]
+    svc.advance(4)
+    path = svc.checkpoint()
+    assert str(tmp_path) in path
+
+    # original keeps going...
+    svc.advance(3)
+    for sid in sids:
+        svc.request_leave(sid)
+    svc.advance(0)
+
+    # ...the restored twin continues from the snapshot
+    res = FleetService.restore(ckpt)
+    assert res.total_steps == 4 and res.lease_table() == sids
+    assert set(res.active) == set(sids)
+    res.advance(3)
+    for sid in sids:
+        res.request_leave(sid)
+    res.advance(0)
+
+    for sid in sids:
+        a, b = svc.result(sid), res.result(sid)
+        _assert_bitwise_equal_runs(a, b, maxulp=0)
+        _assert_exact_histories(a.history, b.history)
+        assert a.simulated_restart_seconds == b.simulated_restart_seconds
+        assert a.default_metrics == b.default_metrics
+
+
+def test_checkpoint_refuses_pending_requests(tmp_path):
+    svc = _service(chunk=2, checkpoint_dir=str(tmp_path / "svc"))
+    svc.request_join("seq_write", W, 0)
+    with pytest.raises(RuntimeError, match="pending"):
+        svc.checkpoint()
+    svc.advance(1)
+    svc.checkpoint()  # applied at the boundary -> checkpointable
+
+
+def test_restore_detects_environment_drift(tmp_path):
+    ckpt = str(tmp_path / "svc")
+    svc = _service(chunk=2, checkpoint_dir=ckpt)
+    svc.request_join("seq_write", W, 0)
+    svc.advance(2)
+    svc.checkpoint()
+
+    def drifted(workload, seed):
+        # a different workload calibration = different model params (the
+        # seed alone wouldn't drift them: it only seeds the state RNG)
+        return LustreSimEnv("random_rw", seed=seed).to_model_env()
+
+    with pytest.raises(ValueError, match="drifted"):
+        FleetService.restore(ckpt, env_factory=drifted)
+
+
+def test_unknown_session_raises():
+    svc = _service(chunk=2)
+    with pytest.raises(KeyError):
+        svc.request_leave(99)
+    with pytest.raises(KeyError):
+        svc.result(99)
