@@ -15,6 +15,15 @@ it does not demand monotone speedups from a noisy box.
 
 With no committed full-mode BENCH point the gate passes vacuously (a fresh
 clone has nothing to regress against).
+
+Exit-code contract (pinned by tests/test_bench_gate.py):
+    0  pass — within noise, improvement, or vacuous (nothing committed)
+    1  regression — the measured median left the committed noise band
+    2  unusable input — ``--bench-json`` file missing/unreadable, malformed
+       or empty JSON, not a JSON object, quick-mode point, or a point
+       without ``fleet_session_steps_per_sec``; diagnostics go to stderr
+       and the trajectory verdict is NOT rendered (2 never means
+       "regressed", it means "could not gate").
 """
 
 from __future__ import annotations
@@ -73,17 +82,36 @@ def main(argv=None) -> int:
         return 0
 
     if args.bench_json:
-        with open(args.bench_json) as f:
-            point = json.load(f)
+        try:
+            with open(args.bench_json) as f:
+                point = json.load(f)
+        except OSError as e:
+            print(f"regression-gate: cannot read {args.bench_json}: {e}",
+                  file=sys.stderr)
+            return 2
+        except json.JSONDecodeError as e:
+            print(f"regression-gate: {args.bench_json} is not valid JSON "
+                  f"({e})", file=sys.stderr)
+            return 2
+        if not isinstance(point, dict):
+            print(f"regression-gate: {args.bench_json} must hold a JSON "
+                  f"object, got {type(point).__name__}", file=sys.stderr)
+            return 2
         if point.get("quick"):
             print(f"regression-gate: {args.bench_json} is a quick-mode "
                   "point — not comparable to the committed trajectory",
                   file=sys.stderr)
             return 2
+        if "fleet_session_steps_per_sec" not in point:
+            print(f"regression-gate: {args.bench_json} carries no "
+                  "fleet_session_steps_per_sec — not a full-mode point",
+                  file=sys.stderr)
+            return 2
+        band = point.get("noise_band") or max(
+            (pt.get("noise_band", 0.0) for pt in point.get("scaling", [])),
+            default=0.0) or 0.14
         current = {"median": point["fleet_session_steps_per_sec"],
-                   "noise_band": point.get("noise_band") or
-                   max(pt.get("noise_band", 0.0)
-                       for pt in point.get("scaling", [{}])) or 0.14}
+                   "noise_band": band}
     else:
         current = measure_steady_state(repeats=args.repeats)
 

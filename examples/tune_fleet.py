@@ -9,6 +9,7 @@ across workloads).
     PYTHONPATH=src python examples/tune_fleet.py --sessions 64 --chunk 16
     PYTHONPATH=src python examples/tune_fleet.py --service --checkpoint /tmp/f
     PYTHONPATH=src python examples/tune_fleet.py --resume /tmp/f
+    PYTHONPATH=src python examples/tune_fleet.py --guardrails --min-gain 0.02
 
 ``--sessions N`` spreads N sessions (seeds) over the workloads and runs them
 through the streaming chunked scan engine: chunks of ``--chunk`` sessions
@@ -23,11 +24,28 @@ XLA compilation entirely).
 ``--checkpoint DIR`` is set); ``--resume DIR`` restores a checkpointed
 service and finishes its remaining rounds bit-identically to a run that
 was never interrupted.
+
+``--guardrails`` wraps every session in a shadow/canary ``DeploymentPolicy``
+(``core/guardrails.py``): proposals are shadow-scored without touching the
+live config, promoted only above ``--min-gain`` within the
+``--restart-budget`` downtime cap, and rolled back if the live objective
+regresses inside ``--rollback-window`` steps. Guarded runs print the fleet's
+promotion/rollback/budget counters; a resumed service keeps the policy it
+was checkpointed with.
 """
 
 import argparse
 
-from repro.core import FleetService, FleetTuner
+from repro.core import DeploymentPolicy, FleetService, FleetTuner
+
+
+def _policy(args):
+    """The DeploymentPolicy the --guardrails flags describe (None when off)."""
+    if not args.guardrails:
+        return None
+    return DeploymentPolicy(min_gain=args.min_gain,
+                            max_restart_seconds=args.restart_budget,
+                            rollback_window=args.rollback_window)
 
 
 def _run_service(args) -> None:
@@ -35,6 +53,8 @@ def _run_service(args) -> None:
     optional checkpoint each round; --resume continues bit-identically."""
     weights = {"throughput": 1.0}
     if args.resume:
+        # restore() rebuilds the policy from the checkpoint, so a resumed
+        # service keeps the guardrails it was running with
         svc = FleetService.restore(args.resume)
         print(f"resumed service from {args.resume}: {len(svc.active)} "
               f"sessions at step {svc.total_steps}/{args.steps}")
@@ -42,7 +62,8 @@ def _run_service(args) -> None:
         workloads = ["seq_write", "video_server", "file_server"]
         seeds = list(range(max(1, round(args.sessions / len(workloads)))))
         svc = FleetService(chunk=args.chunk or 8, eval_runs=1,
-                           checkpoint_dir=args.checkpoint)
+                           checkpoint_dir=args.checkpoint,
+                           policy=_policy(args))
         # same per-cell seed offsets as FleetTuner.from_grid, so a service
         # run is comparable session-for-session with the batch path
         cell = 0
@@ -58,6 +79,12 @@ def _run_service(args) -> None:
         print(f"round -> step {svc.total_steps}/{args.steps}: "
               f"{len(sids)} sessions, "
               f"{st['session_steps_per_sec']:.1f} session-steps/s")
+        if "guardrails" in st:
+            g = st["guardrails"]
+            print(f"  guardrails: {g['promotions']:.0f} promoted, "
+                  f"{g['rejected_min_gain']:.0f}/{g['rejected_budget']:.0f} "
+                  f"rejected (gain/budget), {g['rollbacks']:.0f} rollbacks, "
+                  f"{g['restart_seconds']:.1f}s restart downtime this round")
         if svc.checkpoint_dir:
             print(f"  checkpoint: {svc.checkpoint()}")
     labels = dict(svc.active)
@@ -74,6 +101,22 @@ def _run_service(args) -> None:
         gains.append(svc.result(sid).gain("throughput"))
     print(f"\naggregate throughput gain over {len(gains)} sessions: "
           f"mean {sum(gains)/len(gains)*100:+.1f}%")
+    _print_guardrail_summary(
+        [svc.result(sid).guardrail_stats for sid in labels])
+
+
+def _print_guardrail_summary(stats) -> None:
+    """Fleet-wide promotion/rollback/budget totals for a guarded run."""
+    stats = [s for s in stats if s]
+    if not stats:
+        return
+    print(f"guardrails ({len(stats)} guarded sessions): "
+          f"{sum(s['promotions'] for s in stats):.0f} promotions, "
+          f"{sum(s['rejected_min_gain'] for s in stats):.0f}/"
+          f"{sum(s['rejected_budget'] for s in stats):.0f} rejected "
+          f"(gain/budget), {sum(s['rollbacks'] for s in stats):.0f} "
+          f"rollbacks, {sum(s['restart_budget_spent'] for s in stats):.1f}s "
+          f"restart downtime")
 
 
 def main() -> None:
@@ -100,6 +143,21 @@ def main() -> None:
                         "finish its rounds (implies --service)")
     parser.add_argument("--round-steps", type=int, default=5,
                         help="service mode: tuning steps per advance() round")
+    parser.add_argument("--guardrails", action="store_true",
+                        help="gate every apply behind a shadow/canary "
+                        "DeploymentPolicy (forces the scan engine)")
+    parser.add_argument("--min-gain", type=float, default=0.01,
+                        help="guardrails: minimum shadow-projected relative "
+                        "gain to promote a proposal")
+    parser.add_argument("--restart-budget", type=float, default=float("inf"),
+                        metavar="SECONDS",
+                        help="guardrails: total restart downtime a session "
+                        "may spend on promotions")
+    parser.add_argument("--rollback-window", type=int, default=4,
+                        metavar="STEPS",
+                        help="guardrails: steps a fresh canary is watched "
+                        "for a live regression before it becomes the "
+                        "incumbent")
     args = parser.parse_args()
 
     if args.compile_cache is not None:
@@ -121,7 +179,8 @@ def main() -> None:
         print(f"note: running {n_sessions} sessions "
               f"({len(workloads)} workloads x {len(seeds)} seeds; "
               f"{args.sessions} requested)")
-    engine = "scan" if (args.chunk is not None or n_sessions > 9) else "host"
+    engine = ("scan" if (args.guardrails or args.chunk is not None
+                         or n_sessions > 9) else "host")
     fleet = FleetTuner.from_grid(
         workloads=workloads,
         objectives=[{"throughput": 1.0}],
@@ -129,6 +188,7 @@ def main() -> None:
         engine=engine,
         chunk=args.chunk if engine == "scan" else None,
         eval_runs=1 if n_sessions > 9 else 3,
+        policy=_policy(args),
     )
 
     if engine == "scan":
@@ -164,6 +224,7 @@ def main() -> None:
           f"range [{stats['min']*100:+.1f}%, {stats['max']*100:+.1f}%]")
     print(f"fleet wall time: {result.wall_seconds:.1f}s "
           f"for {stats['sessions']} x {args.steps}-step sessions")
+    _print_guardrail_summary([r.guardrail_stats for r in result.results])
 
 
 if __name__ == "__main__":

@@ -17,6 +17,10 @@ Public API:
                                     lax.scan program (vmapped + shard_mapped
                                     over the fleet session axis)
     FleetAgent / FleetTuner      -- N vmapped sessions as one fused program
+    DeploymentPolicy             -- shadow/canary guardrails with rollback
+                                    (core.guardrails), evaluated inside the
+                                    episode scan; default off = bitwise the
+                                    unguarded engines
     baselines.BestConfigTuner    -- the paper's baseline (plus grid/random)
 """
 
@@ -39,6 +43,11 @@ from repro.core.fleet import (
     FleetAgent, FleetResult, FleetTuner, memory_plan, replay_compact_trace,
 )
 from repro.core.service import FleetService
+from repro.core.guardrails import (
+    DeploymentPolicy, GuardState, GuardedEpisodeTrace, gate_decision,
+    guardrail_counters, guardrail_stats, init_fleet_guard_state,
+    init_guard_state, merge_counters, rollback_decision,
+)
 from repro.core.baselines import (
     BestConfigTuner, GridSearchTuner, RandomSearchTuner,
 )
@@ -55,5 +64,8 @@ __all__ = [
     "last_fleet_run_stats", "live_device_bytes", "precompile_fleet_episode",
     "FleetAgent", "FleetResult", "FleetTuner", "FleetService", "memory_plan",
     "replay_compact_trace",
+    "DeploymentPolicy", "GuardState", "GuardedEpisodeTrace", "gate_decision",
+    "rollback_decision", "init_guard_state", "init_fleet_guard_state",
+    "guardrail_counters", "guardrail_stats", "merge_counters",
     "BestConfigTuner", "GridSearchTuner", "RandomSearchTuner",
 ]

@@ -142,7 +142,8 @@ def decode_restarts(fp: np.ndarray) -> np.ndarray:
 
 
 def _build_episode(step_fn, space: ParamSpace, cfg: DDPGConfig, actor_tx,
-                   critic_tx, learn: bool, num_updates: int, kernel_mode=None):
+                   critic_tx, learn: bool, num_updates: int, kernel_mode=None,
+                   policy=None):
     """episode(params, w_vec, lo, span, carry, xs) -> (carry, EpisodeTrace).
 
     ``xs`` = (use_warmup [T] bool, warmup_actions [T, m], noise [T, m]).
@@ -152,9 +153,27 @@ def _build_episode(step_fn, space: ParamSpace, cfg: DDPGConfig, actor_tx,
     ``space`` supplies the in-graph quantization maps for the compact
     action-index trace (the same ``jax_coord_maps`` the env model decodes
     with, so trace indices and env dynamics always agree).
+
+    ``policy`` (a ``core.guardrails.DeploymentPolicy``) swaps the scan body
+    for the guarded shadow/canary step: carry becomes ``GuardedCarry`` and
+    the trace grows the decision trail (``GuardedEpisodeTrace``). With
+    ``policy=None`` this function is byte-for-byte the pre-guardrail build —
+    the off path never touches ``core.guardrails``.
     """
     # lazy: envs.base imports repro.core at its own top level
     from repro.envs.base import barriered_step, fusion_barrier
+
+    if policy is not None:
+        from repro.core.guardrails import build_guarded_step
+        guarded = build_guarded_step(step_fn, space, cfg, actor_tx,
+                                     critic_tx, learn, num_updates,
+                                     kernel_mode, policy)
+
+        def guarded_episode(params, w_vec, lo, span, carry, xs):
+            body = functools.partial(guarded, params, w_vec, lo, span)
+            return jax.lax.scan(body, carry, xs)
+
+        return guarded_episode
 
     do_updates = learn and num_updates > 0
     coord_maps = jax_coord_maps(space)
@@ -242,7 +261,8 @@ _EPISODE_CACHE: dict = {}
 
 
 def _compiled_episode(step_fn, space, cfg, actor_tx, critic_tx, learn,
-                      num_updates, fleet: bool, devices: Optional[tuple]):
+                      num_updates, fleet: bool, devices: Optional[tuple],
+                      policy=None):
     """Jitted (and optionally vmapped + shard_mapped) episode, cached so
     repeated ``run()`` calls and same-space fleets reuse one compilation.
     The learner kernel mode is part of the cache key: flipping
@@ -254,12 +274,16 @@ def _compiled_episode(step_fn, space, cfg, actor_tx, critic_tx, learn,
     from repro.kernels import ops
 
     kernel_mode = ops.ddpg_kernel_mode()
+    # policy joins the key: a DeploymentPolicy is hashable and baked into the
+    # guarded build; policy=None keys (and builds) the exact unguarded
+    # program, so guardrails-off tuners share one executable with pre-PR code
     key = (step_fn, space, cfg, actor_tx, critic_tx, learn, num_updates,
-           fleet, devices, kernel_mode)
+           fleet, devices, kernel_mode, policy)
     if key in _EPISODE_CACHE:
         return _EPISODE_CACHE[key]
     episode = _build_episode(step_fn, space, cfg, actor_tx, critic_tx, learn,
-                             num_updates, kernel_mode=kernel_mode)
+                             num_updates, kernel_mode=kernel_mode,
+                             policy=policy)
     if fleet:
         # session axis: params/w_vec/lo/span/carry stacked; xs — including
         # the warmup mask — are per-session so sessions of DIFFERENT ages
@@ -323,13 +347,19 @@ def _decode_trace(trace) -> EpisodeTrace:
 
 
 def run_episode_scan(env, agent, scalarizer, cur_metrics: dict, steps: int,
-                 learn: bool = True) -> EpisodeTrace:
+                 learn: bool = True, policy=None, guard=None):
     """Run ``steps`` fused tuning iterations for one session.
 
     ``env`` must be a ``ModelEnv``. Mutates ``env`` (model state, last
     config) and ``agent`` (learner state, buffer, noise stream, steps_taken)
     exactly as the host loop would; returns the per-step trace as numpy
     (action indices + decoded restart seconds — see ``EpisodeTrace``).
+
+    ``policy`` (``core.guardrails.DeploymentPolicy``) runs the guarded
+    shadow/canary body instead; ``guard`` must then be the session's
+    ``GuardState`` (``init_guard_state`` for a fresh session) and the return
+    value becomes ``(GuardedEpisodeTrace, GuardState)`` — the updated guard
+    carries to the next progressive run.
     """
     model = env.model
     lo, span = metric_bounds(env.metric_specs, env.state_metrics)
@@ -348,14 +378,26 @@ def run_episode_scan(env, agent, scalarizer, cur_metrics: dict, steps: int,
     carry = EpisodeCarry(env.model_state, agent.state, buffer,
                          agent._learn_key, jnp.asarray(state_vec),
                          jnp.asarray(objective))
+    if policy is not None:
+        from repro.core.guardrails import GuardedCarry
+        if guard is None:
+            raise ValueError(
+                "guarded runs need a GuardState (core.guardrails."
+                "init_guard_state seeded from the live config)")
+        carry = GuardedCarry(
+            base=carry, guard=jax.tree_util.tree_map(jnp.asarray, guard))
 
     fn = _compiled_episode(model.step_fn, env.param_space, agent.cfg,
                            agent._actor_tx, agent._critic_tx, learn,
                            agent.cfg.updates_per_step,
-                           fleet=False, devices=None)
+                           fleet=False, devices=None, policy=policy)
     carry, trace = fn(model.params, jnp.asarray(w_vec), jnp.asarray(lo),
                       jnp.asarray(span), carry, xs)
 
+    guard_out = None
+    if policy is not None:
+        guard_out = jax.tree_util.tree_map(np.asarray, carry.guard)
+        carry = carry.base
     env.model_state = carry.env_state
     agent.state = carry.ddpg
     agent._learn_key = carry.learn_key
@@ -364,6 +406,8 @@ def run_episode_scan(env, agent, scalarizer, cur_metrics: dict, steps: int,
             np.asarray(carry.buffer.s), np.asarray(carry.buffer.a),
             np.asarray(carry.buffer.r), np.asarray(carry.buffer.s2),
             int(carry.buffer.next_slot), int(carry.buffer.size))
+    if policy is not None:
+        return _decode_trace(trace), guard_out
     return _decode_trace(trace)
 
 
@@ -468,7 +512,7 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
                        cur_metrics: Sequence, steps: int, learn: bool = True,
                        devices: Optional[Sequence] = None,
                        chunk: Optional[int] = None,
-                       overlap: bool = True) -> EpisodeTrace:
+                       overlap: bool = True, policy=None, guard=None):
     """Fleet variant: N sessions' episodes streamed through one compiled
     chunk program. Trace leaves are [N, T, ...] host numpy arrays.
 
@@ -488,6 +532,11 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
     trace is decoded on the host (``stream_chunks``). Pure scheduling — the
     compiled program and its inputs are unchanged, so results are bitwise
     the serial schedule's; peak device residency is at most two chunks.
+
+    ``policy``/``guard`` run the guarded shadow/canary body: ``guard`` is a
+    stacked [N, ...] ``GuardState`` (``init_fleet_guard_state``); the guard
+    rides the chunk carry like all fleet state and the return value becomes
+    ``(GuardedEpisodeTrace, GuardState)``.
     """
     models = [e.model for e in envs]
     step_fns = {m.step_fn for m in models}
@@ -547,17 +596,31 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
     agent.steps_taken += steps
 
     # -- preallocated host trace buffers (the stream targets) ---------------
-    out = EpisodeTrace(
+    base_fields = dict(
         action_idx=np.zeros((n, steps, space.dim), space.index_dtype()),
         metrics=np.zeros((n, steps, k), np.float32),
         rewards=np.zeros((n, steps), np.float32),
         objectives=np.zeros((n, steps), np.float32),
         restarts=np.zeros((n, steps), np.float32))
+    if policy is not None:
+        from repro.core.guardrails import GuardedCarry, GuardedEpisodeTrace
+        if guard is None:
+            raise ValueError(
+                "guarded fleet runs need a stacked GuardState "
+                "(core.guardrails.init_fleet_guard_state)")
+        # fresh host arrays: the caller's guard is never mutated in place
+        guard = jax.tree_util.tree_map(np.array, guard)
+        out = GuardedEpisodeTrace(
+            **base_fields,
+            guard_events=np.zeros((n, steps), np.uint8),
+            shadow_objectives=np.zeros((n, steps), np.float32))
+    else:
+        out = EpisodeTrace(**base_fields)
 
     fn = _compiled_episode(models[0].step_fn, space, agent.cfg,
                            agent._actor_tx, agent._critic_tx, learn,
                            agent.cfg.updates_per_step,
-                           fleet=True, devices=devices)
+                           fleet=True, devices=devices, policy=policy)
 
     peak = [live_device_bytes()]
 
@@ -580,6 +643,8 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
             state_vec=chunk_of(state_vecs),
             objective=chunk_of(objectives))
         xs = (chunk_of(use_warmup), chunk_of(warmup), chunk_of(noise))
+        if policy is not None:
+            carry = GuardedCarry(base=carry, guard=chunk_of(guard))
         return (chunk_of(params), chunk_of(w_vec), chunk_of(lo),
                 chunk_of(span), carry, xs)
 
@@ -603,6 +668,10 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
         out.rewards[a:b] = np.asarray(trace.rewards)[:cnt]
         out.objectives[a:b] = np.asarray(trace.objectives)[:cnt]
         out.restarts[a:b] = decode_restarts(np.asarray(trace.restarts)[:cnt])
+        if policy is not None:
+            out.guard_events[a:b] = np.asarray(trace.guard_events)[:cnt]
+            out.shadow_objectives[a:b] = np.asarray(
+                trace.shadow_objectives)[:cnt]
 
         # write the chunk's carry back into the fleet's host state
         def write_back(dst_tree, src_tree):
@@ -610,6 +679,9 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
                 lambda d, s: d.__setitem__(slice(a, b), np.asarray(s)[:cnt]),
                 dst_tree, src_tree)
 
+        if policy is not None:
+            write_back(guard, carry.guard)
+            carry = carry.base
         write_back(env_states, carry.env_state)
         write_back(ddpg_states, carry.ddpg)
         write_back(buf_np[0], carry.buffer.s)
@@ -634,13 +706,15 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
     agent._learn_keys = jnp.asarray(learn_keys)
     if learn:
         agent.buffer.set_storage(*buf_np, int(next_slots[0]), int(sizes[0]))
+    if policy is not None:
+        return out, guard
     return out
 
 
 def precompile_fleet_episode(env, agent, steps: int, sessions: int,
                              chunk: Optional[int] = None,
                              devices: Optional[Sequence] = None,
-                             learn: bool = True):
+                             learn: bool = True, policy=None):
     """Warm the chunked fleet episode executable ahead of ``run()``.
 
     Executes ONE dummy chunk episode (zero exploration, throwaway copies of
@@ -680,12 +754,22 @@ def precompile_fleet_episode(env, agent, steps: int, sessions: int,
                      np.asarray(agent._learn_keys).dtype)),
         state_vec=jnp.zeros((c, k), jnp.float32),
         objective=jnp.zeros((c,), jnp.float32))
+    if policy is not None:
+        from repro.core.guardrails import GuardedCarry, GuardState
+        carry = GuardedCarry(base=carry, guard=GuardState(
+            live_action=jnp.zeros((c, m), jnp.float32),
+            fallback_action=jnp.zeros((c, m), jnp.float32),
+            fallback_obj=jnp.zeros((c,), jnp.float32),
+            budget_spent=jnp.zeros((c,), jnp.float32),
+            watch_left=jnp.zeros((c,), jnp.int32),
+            promotions=jnp.zeros((c,), jnp.int32),
+            rollbacks=jnp.zeros((c,), jnp.int32)))
     xs = (jnp.zeros((c, steps), bool), jnp.zeros((c, steps, m), jnp.float32),
           jnp.zeros((c, steps, m), jnp.float32))
 
     fn = _compiled_episode(model.step_fn, space, cfg, agent._actor_tx,
                            agent._critic_tx, learn, cfg.updates_per_step,
-                           fleet=True, devices=devices)
+                           fleet=True, devices=devices, policy=policy)
     outs = fn(jax.tree_util.tree_map(tile, model.params),
               tile(np.zeros(k, np.float32)), tile(lo), tile(span), carry, xs)
     jax.block_until_ready(outs)

@@ -249,11 +249,16 @@ class FleetTuner:
                  agent: FleetAgent, eval_runs: int = 3, labels=None,
                  vectorized: Optional[bool] = None, engine: str = "host",
                  devices: Optional[Sequence] = None,
-                 chunk: Optional[int] = None, overlap: bool = True):
+                 chunk: Optional[int] = None, overlap: bool = True,
+                 policy=None):
         if not (len(envs) == len(scalarizers) == agent.num_sessions):
             raise ValueError("envs, scalarizers and agent sessions must align")
         if engine not in ("host", "scan"):
             raise ValueError(f"unknown engine {engine!r}; use 'host' or 'scan'")
+        if policy is not None and engine != "scan":
+            raise ValueError(
+                "DeploymentPolicy guardrails run inside the episode scan; "
+                "use engine='scan' (the host loop has no shadow/canary body)")
         if engine == "scan" and any(getattr(e, "model", None) is None
                                     for e in envs):
             raise ValueError(
@@ -270,6 +275,11 @@ class FleetTuner:
         self.devices = list(devices) if devices else None
         self.chunk = chunk
         self.overlap = overlap  # double-buffered chunk schedule (scan engine)
+        self.policy = policy
+        self._guard = None  # stacked GuardState, persists across run() calls
+        self.guard_events = np.zeros((len(envs), 0), np.uint8)
+        self.shadow_objectives = np.zeros((len(envs), 0), np.float32)
+        self._guard_counters: Optional[list] = None  # one dict per session
         self.envs = list(envs)
         self.scalarizers = list(scalarizers)
         self.agent = agent
@@ -306,7 +316,7 @@ class FleetTuner:
                   engine: str = "host",
                   devices: Optional[Sequence] = None,
                   chunk: Optional[int] = None, overlap: bool = True,
-                  replay_dtype=jnp.float32) -> "FleetTuner":
+                  replay_dtype=jnp.float32, policy=None) -> "FleetTuner":
         """Build a fleet for the full seeds x workloads x objectives grid.
 
         ``env_factory(workload, seed)`` defaults to ``env_cls(workload,
@@ -334,6 +344,10 @@ class FleetTuner:
         ``BatchedReplayBuffer``). ``overlap`` (default on) double-buffers
         the chunk stream — staging and trace decode hide under device
         compute; bitwise the serial schedule (pure scheduling).
+
+        ``policy`` (``core.guardrails.DeploymentPolicy``) turns on the
+        shadow/canary guardrails for every session (scan engine only;
+        default off — bitwise the unguarded fleet).
         """
         if env_factory is not None and env_cls is not None:
             raise ValueError(
@@ -390,7 +404,8 @@ class FleetTuner:
                            init_chunk=chunk)
         return cls(envs, scals, agent, eval_runs=eval_runs, labels=labels,
                    engine=engine, devices=devices if engine == "scan" else None,
-                   chunk=chunk if engine == "scan" else None, overlap=overlap)
+                   chunk=chunk if engine == "scan" else None, overlap=overlap,
+                   policy=policy)
 
     # ------------------------------------------------------------------
 
@@ -486,10 +501,35 @@ class FleetTuner:
         n_sessions = len(self.envs)
         start = len(self.histories[0])
         t0 = time.perf_counter()
-        trace = run_fleet_episode_scan(
-            self.envs, self.agent, self.scalarizers, self._cur_metrics,
-            steps, learn=True, devices=self.devices, chunk=self.chunk,
-            overlap=self.overlap)
+        if self.policy is not None:
+            from repro.core.guardrails import (
+                empty_counters, guardrail_counters, init_fleet_guard_state,
+                merge_counters)
+            if self._guard is None:
+                self._guard = init_fleet_guard_state(
+                    self.envs[0].param_space, self._cur_configs,
+                    [sc.objective(m) for sc, m in
+                     zip(self.scalarizers, self._cur_metrics)])
+            trace, self._guard = run_fleet_episode_scan(
+                self.envs, self.agent, self.scalarizers, self._cur_metrics,
+                steps, learn=True, devices=self.devices, chunk=self.chunk,
+                overlap=self.overlap, policy=self.policy, guard=self._guard)
+            self.guard_events = np.concatenate(
+                [self.guard_events, trace.guard_events], axis=1)
+            self.shadow_objectives = np.concatenate(
+                [self.shadow_objectives, trace.shadow_objectives], axis=1)
+            if self._guard_counters is None:
+                self._guard_counters = [empty_counters()
+                                        for _ in range(n_sessions)]
+            self._guard_counters = [
+                merge_counters(c, guardrail_counters(trace.guard_events[i],
+                                                     trace.restarts[i]))
+                for i, c in enumerate(self._guard_counters)]
+        else:
+            trace = run_fleet_episode_scan(
+                self.envs, self.agent, self.scalarizers, self._cur_metrics,
+                steps, learn=True, devices=self.devices, chunk=self.chunk,
+                overlap=self.overlap)
         per_step = (time.perf_counter() - t0) / max(1, steps)
 
         for i in range(n_sessions):
@@ -556,6 +596,18 @@ class FleetTuner:
             self._cur_configs = configs
             self._cur_metrics = metrics
 
+    def guardrail_stats(self, i: int) -> Optional[dict]:
+        """Session ``i``'s exported guardrail record (None when off)."""
+        if self.policy is None:
+            return None
+        from repro.core.guardrails import empty_counters, guardrail_stats
+        guard_i = (jax.tree_util.tree_map(lambda x: x[i], self._guard)
+                   if self._guard is not None else None)
+        counters = (self._guard_counters[i] if self._guard_counters
+                    else empty_counters())
+        return guardrail_stats(self.policy, guard_i, counters,
+                               space=self.envs[i].param_space)
+
     def _finish(self, t_wall: float) -> FleetResult:
         # Final recommendation per session (the same §III-E rule as Tuner.run,
         # via the shared recommend_final helper).
@@ -586,6 +638,7 @@ class FleetTuner:
                 simulated_restart_seconds=float(
                     self.simulated_restart_seconds[i]),
                 wall_seconds=wall,
+                guardrail_stats=self.guardrail_stats(i),
             ))
         return FleetResult(results=results, labels=list(self.labels),
                            wall_seconds=wall)

@@ -1,0 +1,397 @@
+"""Safe rollout: shadow/canary deployment guardrails with rollback.
+
+The paper's whole premise — static parameters, every apply costs a restart —
+is exactly why a raw RL tuner cannot be pointed at a production file system.
+This module adds the deployment layer that makes the tuner's recommendations
+*adoptable*: a ``DeploymentPolicy`` evaluated INSIDE the fused episode scan
+(``core.episode``), so every proposal is scored in shadow before the live
+configuration moves.
+
+Per guarded step:
+
+  shadow    the actor's proposal is scored with an ``eval_run=True`` probe on
+            the current env state — the ``evaluate_config`` semantics (lower
+            measurement variance), and the probed state is DISCARDED, so the
+            live system never runs the proposal. The learner trains on this
+            shadow transition, so the policy keeps improving even while the
+            gate holds the live config still.
+  gate      promotion needs (a) shadow gain >= ``min_gain`` relative to the
+            live objective and (b) the proposal's restart cost to fit the
+            remaining ``max_restart_seconds`` budget (``gate_decision``).
+  canary    if the gate passes, the proposal is committed to the live system
+            and the displaced incumbent becomes the rollback fallback; the
+            regression watch (``rollback_window`` steps) arms.
+  rollback  while the watch is armed, a live objective more than
+            ``rollback_threshold`` below the pre-promotion anchor restores
+            the fallback configuration immediately (``rollback_decision``).
+            Rollbacks are always allowed — the budget gates promotions, never
+            the path back to a known-good config; the fallback re-apply's
+            restart is charged to the budget at the next committed step.
+
+All of it is branch-free ``jnp.where`` selection over three env-step islands
+(shadow probe, canary branch, keep branch), so the guarded body stays
+scan/vmap/shard_map-safe and rides the same chunked fleet runtime. The three
+islands split the SAME env key (the committed branch's advanced key carries
+forward), so shadow and live draws are correlated within a step — by design:
+the shadow score measures the config, not a fresh noise draw.
+
+Guardrails default OFF. ``policy=None`` never touches this module: the
+episode builder compiles the exact pre-guardrail program (same cache key,
+same program object), pinned bitwise by tests/test_guardrails.py.
+
+Decision trail: every step emits a uint8 event bitmask and the shadow
+objective into the compact trace (``GuardedEpisodeTrace``), from which
+``guardrail_counters`` derives the per-session OTEL-ish counters surfaced by
+``Tuner``/``FleetTuner``/``FleetService.advance()`` stats.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.action_mapping import ParamSpace, jax_coord_maps
+from repro.core.ddpg import DDPGConfig, actor_apply, _learn_scan
+
+# guard_events bitmask (uint8): one trace byte records the whole decision
+EVENT_PROMOTED = 1        # proposal passed the gate and was committed
+EVENT_REJECTED_GAIN = 2   # shadow gain below min_gain
+EVENT_REJECTED_BUDGET = 4  # restart budget could not absorb the apply
+EVENT_ROLLBACK = 8        # live regression -> incumbent restored
+
+
+class DeploymentPolicy(NamedTuple):
+    """Static promotion/rollback policy, baked into the compiled episode.
+
+    Hashable on purpose: the policy joins the episode program's cache key,
+    so two tuners sharing a policy share one executable and ``policy=None``
+    compiles the exact unguarded program.
+
+    ``min_gain``            minimum relative shadow gain vs the live
+                            objective for a proposal to be promoted.
+    ``max_restart_seconds`` total committed restart downtime the guarded
+                            session may spend; a promotion whose restart
+                            would exceed the remainder is rejected.
+    ``rollback_window``     steps after a promotion during which a live
+                            regression restores the incumbent (0 disables
+                            rollback).
+    ``rollback_threshold``  relative drop vs the pre-promotion anchor that
+                            counts as a regression.
+    """
+
+    min_gain: float = 0.0
+    max_restart_seconds: float = float("inf")
+    rollback_window: int = 0
+    rollback_threshold: float = 0.05
+
+
+class GuardState(NamedTuple):
+    """Per-session guard carry (numpy between chunks, like all fleet state).
+
+    ``live_action`` is the unit action of the configuration the live system
+    currently runs; ``fallback_action``/``fallback_obj`` anchor the rollback
+    target (the incumbent displaced by the last promotion and its objective
+    at promotion time). ``budget_spent`` accumulates every committed restart
+    second; ``watch_left`` counts the remaining regression-watch steps."""
+
+    live_action: Any       # [m] f32 unit action
+    fallback_action: Any   # [m] f32 unit action
+    fallback_obj: Any      # f32 scalar
+    budget_spent: Any      # f32 scalar
+    watch_left: Any        # i32 scalar
+    promotions: Any        # i32 scalar, lifetime count
+    rollbacks: Any         # i32 scalar, lifetime count
+
+
+class GuardedCarry(NamedTuple):
+    base: Any    # core.episode.EpisodeCarry
+    guard: GuardState
+
+
+class GuardedEpisodeTrace(NamedTuple):
+    """``EpisodeTrace`` plus the shadow-vs-live decision trail.
+
+    Field names (not positions) are the contract: the first five fields
+    mirror ``EpisodeTrace`` exactly, so every trace consumer
+    (``replay_compact_trace``, the tuner history reconstruction) reads a
+    guarded trace unchanged. ``guard_events`` is the uint8 bitmask above;
+    ``shadow_objectives`` the f32 shadow score of each step's proposal."""
+
+    action_idx: Any
+    metrics: Any
+    rewards: Any
+    objectives: Any
+    restarts: Any
+    guard_events: Any       # [T] uint8
+    shadow_objectives: Any  # [T] f32
+
+
+# ---------------------------------------------------------------------------
+# Pure decision functions (numpy AND jnp operands — the property tests run
+# them on host scalars; the scan body runs them on traced arrays)
+# ---------------------------------------------------------------------------
+
+def gate_decision(shadow_gain, restart_cost, budget_spent,
+                  policy: DeploymentPolicy):
+    """Canary promotion gate. Returns ``(promote, gain_ok, budget_ok)``.
+
+    Monotone in both thresholds: lowering ``min_gain`` or raising
+    ``max_restart_seconds`` can only turn rejections into promotions on the
+    same inputs, never the reverse (pinned by the hypothesis suite)."""
+    gain_ok = shadow_gain >= policy.min_gain
+    budget_ok = (budget_spent + restart_cost) <= policy.max_restart_seconds
+    return gain_ok & budget_ok, gain_ok, budget_ok
+
+
+def rollback_decision(live_obj, anchor_obj, watch_left,
+                      policy: DeploymentPolicy):
+    """Regression check against the pre-promotion anchor objective.
+
+    Fires only while the watch is armed (``watch_left > 0``) and the live
+    objective sits more than ``rollback_threshold`` (relative) below the
+    anchor. Monotone in the threshold: raising it can only suppress
+    rollbacks."""
+    rel_drop = (live_obj - anchor_obj) / jnp.maximum(
+        anchor_obj, jnp.float32(1e-6))
+    return (watch_left > 0) & (rel_drop < -jnp.float32(
+        policy.rollback_threshold))
+
+
+# ---------------------------------------------------------------------------
+# Guard-state construction
+# ---------------------------------------------------------------------------
+
+def init_guard_state(space: ParamSpace, live_config: dict,
+                     live_objective: float) -> GuardState:
+    """Guard state for a session whose live system runs ``live_config``."""
+    a = np.asarray(space.to_action(live_config), np.float32)
+    return GuardState(
+        live_action=a, fallback_action=a.copy(),
+        fallback_obj=np.float32(live_objective),
+        budget_spent=np.float32(0.0), watch_left=np.int32(0),
+        promotions=np.int32(0), rollbacks=np.int32(0))
+
+
+def init_fleet_guard_state(space: ParamSpace, live_configs, live_objectives
+                           ) -> GuardState:
+    """Stacked [N, ...] guard state for a fleet (host numpy leaves)."""
+    singles = [init_guard_state(space, c, o)
+               for c, o in zip(live_configs, live_objectives)]
+    return jax.tree_util.tree_map(lambda *xs: np.stack(xs), *singles)
+
+
+# ---------------------------------------------------------------------------
+# The guarded episode step (the scan body `core.episode` builds when a
+# policy is set)
+# ---------------------------------------------------------------------------
+
+def build_guarded_step(step_fn, space: ParamSpace, cfg: DDPGConfig, actor_tx,
+                       critic_tx, learn: bool, num_updates: int, kernel_mode,
+                       policy: DeploymentPolicy):
+    """one_step(params, w_vec, lo, span, GuardedCarry, x) ->
+    (GuardedCarry, GuardedEpisodeTrace-row).
+
+    Mirrors ``core.episode._build_episode``'s body (same fusion islands,
+    same f32 fixed-order arithmetic) with the shadow/gate/canary/rollback
+    layer threaded around the env transition. The replay buffer stores the
+    SHADOW transition (proposal, shadow reward/next-state): learning follows
+    what the tuner explored; the trace follows what the live system ran."""
+    from repro.core.episode import (  # lazy: episode imports us lazily too
+        BufferState, EpisodeCarry, _encode_restart)
+    from repro.envs.base import barriered_step, fusion_barrier
+
+    do_updates = learn and num_updates > 0
+    coord_maps = jax_coord_maps(space)
+    idx_dtype = space.index_dtype()
+
+    def norm_obj(metrics_vec, w_vec, lo, span):
+        # normalization + serial f32 fold, bit-aligned with the unguarded
+        # body and Scalarizer.objective (zero-weight terms are exact no-ops)
+        norm = jnp.where(span > 0,
+                         jnp.clip((metrics_vec - lo) / span, 0.0, 1.0), 0.0)
+        obj = jnp.float32(0.0)
+        for j in range(norm.shape[0]):
+            obj = obj + w_vec[j] * norm[j]
+        return norm, obj
+
+    def one_step(params, w_vec, lo, span, carry, x):
+        base, guard = carry.base, carry.guard
+        use_warmup, warmup_a, noise = x
+
+        # propose: identical act to the unguarded body
+        actor, state_vec = fusion_barrier(
+            (base.ddpg.actor, base.state_vec))
+        policy_a = fusion_barrier(actor_apply(actor, state_vec))
+        explored = jnp.clip(policy_a + noise, 0.0, 1.0)
+        proposal = jnp.where(use_warmup, jnp.clip(warmup_a, 0.0, 1.0),
+                             explored)
+
+        # shadow: evaluate_config semantics in-graph — an eval_run probe on
+        # the CURRENT state; the probed state is discarded (live system
+        # untouched)
+        _, shadow_metrics, _ = barriered_step(
+            step_fn, params, base.env_state, proposal, True)
+        shadow_norm, shadow_obj = norm_obj(shadow_metrics, w_vec, lo, span)
+        shadow_gain = (shadow_obj - base.objective) / jnp.maximum(
+            base.objective, jnp.float32(1e-6))
+
+        # canary and keep branches both execute (branch-free vmap-safe
+        # select); both split the same env key, the committed branch's
+        # advanced state carries forward
+        p_state, p_metrics, p_restart = barriered_step(
+            step_fn, params, base.env_state, proposal, False)
+        k_state, k_metrics, k_restart = barriered_step(
+            step_fn, params, base.env_state, guard.live_action, False)
+
+        promote, gain_ok, budget_ok = gate_decision(
+            shadow_gain, p_restart, guard.budget_spent, policy)
+
+        def sel(p, k):
+            return jnp.where(promote, p, k)
+
+        env_state = jax.tree_util.tree_map(sel, p_state, k_state)
+        committed = sel(proposal, guard.live_action)
+        metrics_vec = sel(p_metrics, k_metrics)
+        restart = sel(p_restart, k_restart)
+        norm, obj = norm_obj(metrics_vec, w_vec, lo, span)
+        reward = (obj - base.objective) / jnp.maximum(
+            base.objective, jnp.float32(1e-6))
+
+        # promotion bookkeeping: the displaced incumbent becomes the
+        # rollback anchor; every committed restart draws on the budget
+        # (the keep branch's restart is 0 unless it re-applies a rolled-back
+        # fallback — that re-apply is charged here, one step after the
+        # rollback decision)
+        fallback_action = sel(guard.live_action, guard.fallback_action)
+        fallback_obj = sel(base.objective, guard.fallback_obj)
+        watch = jnp.where(promote, jnp.int32(policy.rollback_window),
+                          jnp.maximum(guard.watch_left - 1, 0))
+        budget = guard.budget_spent + restart
+
+        rollback = rollback_decision(obj, fallback_obj, watch, policy)
+        live_action = jnp.where(rollback, fallback_action, committed)
+        watch = jnp.where(rollback, jnp.int32(0), watch)
+
+        event = (promote.astype(jnp.uint8) * EVENT_PROMOTED
+                 + jnp.logical_not(gain_ok).astype(jnp.uint8)
+                 * EVENT_REJECTED_GAIN
+                 + jnp.logical_not(budget_ok).astype(jnp.uint8)
+                 * EVENT_REJECTED_BUDGET
+                 + rollback.astype(jnp.uint8) * EVENT_ROLLBACK)
+        guard = GuardState(
+            live_action=live_action, fallback_action=fallback_action,
+            fallback_obj=fallback_obj, budget_spent=budget,
+            watch_left=watch,
+            promotions=guard.promotions + promote.astype(jnp.int32),
+            rollbacks=guard.rollbacks + rollback.astype(jnp.int32))
+
+        # compact trace: the knob indices of the COMMITTED config (what the
+        # live system ran; decode-aligned with the env dynamics)
+        action_idx = jnp.stack(
+            [coord_maps[j](committed[j])["idx"] for j in range(space.dim)]
+        ).astype(idx_dtype)
+
+        if learn:  # shadow transition: the proposal and its shadow outcome
+            buf = base.buffer
+            capacity = buf.s.shape[0]
+            i = buf.next_slot
+            buf = BufferState(
+                s=buf.s.at[i].set(base.state_vec.astype(buf.s.dtype)),
+                a=buf.a.at[i].set(proposal.astype(buf.a.dtype)),
+                r=buf.r.at[i].set(shadow_gain.astype(buf.r.dtype)),
+                s2=buf.s2.at[i].set(shadow_norm.astype(buf.s2.dtype)),
+                next_slot=(i + 1) % capacity,
+                size=jnp.minimum(buf.size + 1, capacity))
+        else:
+            buf = base.buffer
+        if do_updates:
+            learn_key, k = jax.random.split(base.learn_key)
+            learn_in = fusion_barrier((base.ddpg, buf, k))
+            ddpg, _ = fusion_barrier(_learn_scan(
+                learn_in[0],
+                (learn_in[1].s, learn_in[1].a, learn_in[1].r,
+                 learn_in[1].s2),
+                learn_in[1].size, learn_in[2],
+                cfg, actor_tx, critic_tx, num_updates,
+                kernel_mode=kernel_mode))
+        else:
+            learn_key, ddpg = base.learn_key, base.ddpg
+
+        carry = GuardedCarry(
+            base=EpisodeCarry(env_state, ddpg, buf, learn_key, norm, obj),
+            guard=guard)
+        return carry, GuardedEpisodeTrace(
+            action_idx, metrics_vec, reward, obj, _encode_restart(restart),
+            event, shadow_obj)
+
+    return one_step
+
+
+# ---------------------------------------------------------------------------
+# Host-side counter export (OTEL-ish, derived from the compact trace)
+# ---------------------------------------------------------------------------
+
+COUNTER_KEYS = ("proposals", "promotions", "rejected_min_gain",
+                "rejected_budget", "rollbacks", "restart_seconds")
+
+
+def guardrail_counters(events: np.ndarray,
+                       restarts: np.ndarray = None) -> dict:
+    """Structured counters from a session's event trace ([T] uint8).
+
+    ``restarts`` (decoded f32 seconds, same length) adds the committed
+    guarded downtime. Pure accounting — safe to accumulate across runs by
+    summing dicts (``merge_counters``)."""
+    ev = np.asarray(events)
+    d = {
+        "proposals": int(ev.size),
+        "promotions": int(((ev & EVENT_PROMOTED) != 0).sum()),
+        "rejected_min_gain": int(((ev & EVENT_REJECTED_GAIN) != 0).sum()),
+        "rejected_budget": int(((ev & EVENT_REJECTED_BUDGET) != 0).sum()),
+        "rollbacks": int(((ev & EVENT_ROLLBACK) != 0).sum()),
+        "restart_seconds": 0.0,
+    }
+    if restarts is not None:
+        d["restart_seconds"] = float(np.asarray(restarts,
+                                                np.float64).sum())
+    return d
+
+
+def merge_counters(a: dict, b: dict) -> dict:
+    """Sum two counter dicts (missing keys count as zero)."""
+    return {k: a.get(k, 0) + b.get(k, 0)
+            for k in dict.fromkeys((*a, *b))}
+
+
+def guardrail_stats(policy: DeploymentPolicy, guard: GuardState,
+                    counters: dict, space: ParamSpace = None) -> dict:
+    """One session's exported guardrail record: policy + cumulative counters
+    + the authoritative guard-state totals (in-graph f32/i32 accumulators,
+    cross-checked against the trace-derived counters by the tests)."""
+    spent = float(np.float32(guard.budget_spent)) if guard is not None else 0.0
+    d = dict(counters)
+    d.update(
+        policy=dict(policy._asdict()),
+        restart_budget_spent=spent,
+        budget_remaining=max(0.0, float(policy.max_restart_seconds) - spent),
+        watch_left=int(guard.watch_left) if guard is not None else 0,
+        promotions_total=int(guard.promotions) if guard is not None else 0,
+        rollbacks_total=int(guard.rollbacks) if guard is not None else 0)
+    if space is not None and guard is not None:
+        d["live_config"] = space.to_config(
+            np.asarray(guard.live_action, np.float32))
+    return d
+
+
+@functools.lru_cache(maxsize=None)
+def _empty_counters() -> tuple:
+    return tuple((k, 0 if k != "restart_seconds" else 0.0)
+                 for k in COUNTER_KEYS)
+
+
+def empty_counters() -> dict:
+    return dict(_empty_counters())

@@ -101,6 +101,9 @@ class _Session:
     history: list
     restart_seconds: float
     joined_at: float
+    # guardrails (service-wide policy; None when guardrails are off)
+    guard: object = None        # core.guardrails.GuardState, numpy leaves
+    guard_counters: Optional[dict] = None
 
 
 class FleetService:
@@ -123,7 +126,8 @@ class FleetService:
                  ddpg_config: Optional[DDPGConfig] = None,
                  buffer_capacity: int = 64, warmup_steps: int = 8,
                  eval_runs: int = 3, overlap: bool = True,
-                 checkpoint_dir: Optional[str] = None, keep: int = 3):
+                 checkpoint_dir: Optional[str] = None, keep: int = 3,
+                 policy=None):
         if chunk <= 0:
             raise ValueError(f"chunk must be positive, got {chunk}")
         if env_factory is not None and env_cls is not None:
@@ -143,6 +147,9 @@ class FleetService:
         self.overlap = overlap
         self.checkpoint_dir = checkpoint_dir
         self.keep = keep
+        # service-wide DeploymentPolicy (core.guardrails); None = off,
+        # bitwise the unguarded service
+        self.policy = policy
         self.total_steps = 0
         self._slots: list = []          # slot index -> sid or None (leases)
         self._sessions: dict = {}       # sid -> _Session (leased only)
@@ -223,6 +230,12 @@ class FleetService:
                                               self.eval_runs)
         else:
             default_metrics = {}  # restore path fills from the checkpoint
+        guard = None
+        if self.policy is not None:
+            from repro.core.guardrails import init_guard_state
+            guard = init_guard_state(
+                env.param_space, default_config,
+                scal.objective(default_metrics) if default_metrics else 0.0)
         return _Session(
             sid=sid, label=label, workload=workload, weights=weights,
             seed=seed, env=env, scalarizer=scal, ddpg=ddpg, buf=buf,
@@ -239,7 +252,8 @@ class FleetService:
             best_metrics=dict(default_metrics),
             best_objective=(scal.objective(default_metrics)
                             if default_metrics else float("-inf")),
-            history=[], restart_seconds=0.0, joined_at=time.perf_counter())
+            history=[], restart_seconds=0.0, joined_at=time.perf_counter(),
+            guard=guard)
 
     # -- boundary: apply the request queue -----------------------------------
 
@@ -267,6 +281,20 @@ class FleetService:
             self._lease(sess)
         self._join_queue = []
 
+    def _session_guardrail_stats(self, sess: _Session) -> Optional[dict]:
+        if self.policy is None:
+            return None
+        from repro.core.guardrails import empty_counters, guardrail_stats
+        return guardrail_stats(self.policy, sess.guard,
+                               sess.guard_counters or empty_counters(),
+                               space=sess.env.param_space)
+
+    def guardrail_stats(self, sid: int) -> Optional[dict]:
+        """An ACTIVE session's exported guardrail record (None when off)."""
+        if sid not in self._sessions:
+            raise KeyError(f"session {sid} is not active")
+        return self._session_guardrail_stats(self._sessions[sid])
+
     def _finalize(self, sess: _Session) -> None:
         """§III-E final recommendation for one departing session."""
         state_vec = normalize_state(sess.cur_metrics, sess.env.metric_specs,
@@ -289,7 +317,8 @@ class FleetService:
             default_metrics=dict(sess.default_metrics),
             history=list(sess.history),
             simulated_restart_seconds=float(sess.restart_seconds),
-            wall_seconds=time.perf_counter() - sess.joined_at)
+            wall_seconds=time.perf_counter() - sess.joined_at,
+            guardrail_stats=self._session_guardrail_stats(sess))
 
     # -- the serving loop ----------------------------------------------------
 
@@ -364,16 +393,28 @@ class FleetService:
                     noise[j, t] = s.noise()
             s.steps_taken += steps
 
-        out = EpisodeTrace(
+        base_fields = dict(
             action_idx=np.zeros((n, steps, space.dim), space.index_dtype()),
             metrics=np.zeros((n, steps, k), np.float32),
             rewards=np.zeros((n, steps), np.float32),
             objectives=np.zeros((n, steps), np.float32),
             restarts=np.zeros((n, steps), np.float32))
+        guarded = self.policy is not None
+        if guarded:
+            from repro.core.guardrails import (
+                GuardedCarry, GuardedEpisodeTrace)
+            guard = stack_np([s.guard for s in sessions])
+            out = GuardedEpisodeTrace(
+                **base_fields,
+                guard_events=np.zeros((n, steps), np.uint8),
+                shadow_objectives=np.zeros((n, steps), np.float32))
+        else:
+            out = EpisodeTrace(**base_fields)
 
         fn = _compiled_episode(env0.model.step_fn, space, cfg,
                                self._actor_tx, self._critic_tx, True,
-                               cfg.updates_per_step, fleet=True, devices=None)
+                               cfg.updates_per_step, fleet=True, devices=None,
+                               policy=self.policy)
         peak = [live_device_bytes()]
         t0 = time.perf_counter()
 
@@ -395,6 +436,8 @@ class FleetService:
                 learn_key=chunk_of(learn_keys),
                 state_vec=chunk_of(state_vecs),
                 objective=chunk_of(objectives))
+            if guarded:
+                carry = GuardedCarry(base=carry, guard=chunk_of(guard))
             xs = (chunk_of(use_warmup), chunk_of(warmup), chunk_of(noise))
             return (chunk_of(params), chunk_of(w_vec), chunk_of(lo),
                     chunk_of(span), carry, xs)
@@ -404,12 +447,6 @@ class FleetService:
             a, b = ci * c, min(n, (ci + 1) * c)
             cnt = b - a
             peak[0] = max(peak[0], live_device_bytes())
-            out.action_idx[a:b] = np.asarray(trace.action_idx)[:cnt]
-            out.metrics[a:b] = np.asarray(trace.metrics)[:cnt]
-            out.rewards[a:b] = np.asarray(trace.rewards)[:cnt]
-            out.objectives[a:b] = np.asarray(trace.objectives)[:cnt]
-            out.restarts[a:b] = decode_restarts(
-                np.asarray(trace.restarts)[:cnt])
 
             def write_back(dst_tree, src_tree):
                 jax.tree_util.tree_map(
@@ -417,6 +454,18 @@ class FleetService:
                                                np.asarray(s)[:cnt]),
                     dst_tree, src_tree)
 
+            if guarded:
+                out.guard_events[a:b] = np.asarray(trace.guard_events)[:cnt]
+                out.shadow_objectives[a:b] = np.asarray(
+                    trace.shadow_objectives)[:cnt]
+                write_back(guard, carry.guard)
+                carry = carry.base
+            out.action_idx[a:b] = np.asarray(trace.action_idx)[:cnt]
+            out.metrics[a:b] = np.asarray(trace.metrics)[:cnt]
+            out.rewards[a:b] = np.asarray(trace.rewards)[:cnt]
+            out.objectives[a:b] = np.asarray(trace.objectives)[:cnt]
+            out.restarts[a:b] = decode_restarts(
+                np.asarray(trace.restarts)[:cnt])
             write_back(env_states, carry.env_state)
             write_back(ddpg_states, carry.ddpg)
             write_back(buf_np[0], carry.buffer.s)
@@ -442,7 +491,18 @@ class FleetService:
         def row(tree, j):
             return jax.tree_util.tree_map(lambda x: np.asarray(x[j]), tree)
 
+        if guarded:
+            from repro.core.guardrails import (
+                empty_counters, guardrail_counters, merge_counters)
+            round_counters = empty_counters()
         for j, s in enumerate(sessions):
+            if guarded:
+                s.guard = row(guard, j)
+                delta = guardrail_counters(out.guard_events[j],
+                                           out.restarts[j])
+                s.guard_counters = merge_counters(
+                    s.guard_counters or empty_counters(), delta)
+                round_counters = merge_counters(round_counters, delta)
             s.env.model_state = row(env_states, j)
             s.ddpg = row(ddpg_states, j)
             for key, arr in zip(("s", "a", "r", "s2"), buf_np):
@@ -463,6 +523,8 @@ class FleetService:
             s.cur_config = rep["cur_config"]
             if rep["cur_metrics"] is not None:
                 s.cur_metrics = rep["cur_metrics"]
+        if guarded:  # this round's fleet-aggregate guardrail counters
+            self.last_stats["guardrails"] = round_counters
 
     # -- checkpoint / restore ------------------------------------------------
 
@@ -489,6 +551,9 @@ class FleetService:
             "slots": [(-1 if s is None else s) for s in self._slots],
             "cfg": {**self.cfg._asdict(),
                     "hidden": list(self.cfg.hidden)},
+            # json round-trips Infinity for an unbounded restart budget
+            "policy": (dict(self.policy._asdict())
+                       if self.policy is not None else None),
             "sessions": {}}
         for sid, s in self._sessions.items():
             tree["sessions"][str(sid)] = {
@@ -500,6 +565,11 @@ class FleetService:
                 "noise_x": s.noise.state_dict()["x"],
                 "warmup_plan": s.warmup_plan,
             }
+            if s.guard is not None:
+                tree["sessions"][str(sid)]["guard_live_action"] = \
+                    np.asarray(s.guard.live_action, np.float32)
+                tree["sessions"][str(sid)]["guard_fallback_action"] = \
+                    np.asarray(s.guard.fallback_action, np.float32)
             nd = s.noise.state_dict()
             extra["sessions"][str(sid)] = {
                 "label": s.label, "workload": s.workload,
@@ -518,6 +588,15 @@ class FleetService:
                 "last_config": s.env._last_config,
                 "history": [dataclasses.asdict(r) for r in s.history],
             }
+            if s.guard is not None:
+                extra["sessions"][str(sid)]["guard"] = {
+                    "fallback_obj": float(s.guard.fallback_obj),
+                    "budget_spent": float(s.guard.budget_spent),
+                    "watch_left": int(s.guard.watch_left),
+                    "promotions": int(s.guard.promotions),
+                    "rollbacks": int(s.guard.rollbacks),
+                    "counters": dict(s.guard_counters or {}),
+                }
         return save_checkpoint(directory, self.total_steps, tree,
                                keep=self.keep, extra=extra)
 
@@ -536,12 +615,17 @@ class FleetService:
         step, flat, extra = restore_checkpoint(directory, step)
         cfg_d = dict(extra["cfg"])
         cfg_d["hidden"] = tuple(cfg_d["hidden"])
+        policy = None
+        if extra.get("policy") is not None:
+            from repro.core.guardrails import DeploymentPolicy
+            policy = DeploymentPolicy(**extra["policy"])
         svc = cls(chunk=extra["chunk"], env_factory=env_factory,
                   env_cls=env_cls, ddpg_config=DDPGConfig(**cfg_d),
                   buffer_capacity=extra["buffer_capacity"],
                   warmup_steps=extra["warmup_steps"],
                   eval_runs=extra["eval_runs"], overlap=extra["overlap"],
-                  checkpoint_dir=directory, keep=extra["keep"])
+                  checkpoint_dir=directory, keep=extra["keep"],
+                  policy=policy)
         svc.total_steps = extra["total_steps"]
         svc._next_sid = extra["next_sid"]
         svc._slots = [None if s < 0 else int(s) for s in extra["slots"]]
@@ -559,6 +643,11 @@ class FleetService:
                 "noise_x": s.noise.state_dict()["x"],
                 "warmup_plan": s.warmup_plan,
             }
+            if policy is not None:
+                template["guard_live_action"] = np.asarray(
+                    s.guard.live_action, np.float32)
+                template["guard_fallback_action"] = np.asarray(
+                    s.guard.fallback_action, np.float32)
             sub = {k[len(f"sessions/{sid_s}/"):]: v for k, v in flat.items()
                    if k.startswith(f"sessions/{sid_s}/")}
             restored = jax.tree_util.tree_map(
@@ -593,5 +682,17 @@ class FleetService:
                 (sc, sec) for sc, sec in meta["restart_events"]]
             s.env._last_config = dict(meta["last_config"])
             s.history = [StepRecord(**r) for r in meta["history"]]
+            if policy is not None:
+                from repro.core.guardrails import GuardState
+                gm = meta["guard"]
+                s.guard = GuardState(
+                    live_action=restored["guard_live_action"],
+                    fallback_action=restored["guard_fallback_action"],
+                    fallback_obj=np.float32(gm["fallback_obj"]),
+                    budget_spent=np.float32(gm["budget_spent"]),
+                    watch_left=np.int32(gm["watch_left"]),
+                    promotions=np.int32(gm["promotions"]),
+                    rollbacks=np.int32(gm["rollbacks"]))
+                s.guard_counters = dict(gm["counters"])
             svc._sessions[sid] = s
         return svc

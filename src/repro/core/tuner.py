@@ -98,6 +98,10 @@ class TuningResult:
     history: list
     simulated_restart_seconds: float
     wall_seconds: float
+    #: guarded sessions only (core.guardrails): policy + per-session
+    #: promotion/rollback counters + restart-budget accounting; None when
+    #: guardrails are off
+    guardrail_stats: Optional[dict] = None
 
     def gain(self, metric: str) -> float:
         """Proportional raw-metric gain of best vs default (paper's reported %)."""
@@ -108,22 +112,39 @@ class TuningResult:
 class Tuner:
     def __init__(self, env, scalarizer: Scalarizer,
                  agent: Optional[MagpieAgent] = None,
-                 eval_runs: int = 3, seed: int = 0, engine: str = "host"):
+                 eval_runs: int = 3, seed: int = 0, engine: str = "host",
+                 policy=None):
         """``agent=None`` sizes a default DDPG agent from the environment's
         ``ParamSpace`` (``DDPGConfig.for_env``) — the network's action head and
         the search box both follow the space, whether it is the paper's 2-D
         stripe space or an 8-D mixed-type space.
 
         ``engine``: "host" (dict loop, any environment) or "scan" (fused
-        whole-episode ``lax.scan``; needs a ``ModelEnv``)."""
+        whole-episode ``lax.scan``; needs a ``ModelEnv``).
+
+        ``policy`` (``core.guardrails.DeploymentPolicy``) turns on the
+        shadow/canary deployment guardrails: proposals are scored in shadow
+        inside the scan, promoted only past the min-gain/restart-budget gate
+        and rolled back on regression. Scan engine only — the guarded body
+        is an in-graph construct. ``policy=None`` (default) is bitwise the
+        unguarded tuner."""
         if engine not in ("host", "scan"):
             raise ValueError(f"unknown engine {engine!r}; use 'host' or 'scan'")
         if engine == "scan" and getattr(env, "model", None) is None:
             raise ValueError(
                 "engine='scan' needs a pure-model environment (ModelEnv); "
                 "real-DFS/external environments must use engine='host'")
+        if policy is not None and engine != "scan":
+            raise ValueError(
+                "DeploymentPolicy guardrails run inside the episode scan; "
+                "use engine='scan' (the host loop has no shadow/canary body)")
         self.env = env
         self.engine = engine
+        self.policy = policy
+        self._guard = None  # GuardState, persists across progressive runs
+        self.guard_events = np.zeros((0,), np.uint8)
+        self.shadow_objectives = np.zeros((0,), np.float32)
+        self._guard_counters: Optional[dict] = None
         self.scalarizer = scalarizer
         self.agent = agent or MagpieAgent(DDPGConfig.for_env(env), seed=seed)
         self.eval_runs = eval_runs
@@ -204,8 +225,27 @@ class Tuner:
         from repro.core.episode import run_episode_scan
         start = len(self.history)
         t0 = time.perf_counter()
-        trace = run_episode_scan(self.env, self.agent, self.scalarizer,
-                             self._cur_metrics, steps, learn=learn)
+        if self.policy is not None:
+            from repro.core.guardrails import (
+                empty_counters, guardrail_counters, init_guard_state,
+                merge_counters)
+            if self._guard is None:
+                self._guard = init_guard_state(
+                    self.env.param_space, self._cur_config,
+                    self.scalarizer.objective(self._cur_metrics))
+            trace, self._guard = run_episode_scan(
+                self.env, self.agent, self.scalarizer, self._cur_metrics,
+                steps, learn=learn, policy=self.policy, guard=self._guard)
+            self.guard_events = np.concatenate(
+                [self.guard_events, trace.guard_events])
+            self.shadow_objectives = np.concatenate(
+                [self.shadow_objectives, trace.shadow_objectives])
+            self._guard_counters = merge_counters(
+                self._guard_counters or empty_counters(),
+                guardrail_counters(trace.guard_events, trace.restarts))
+        else:
+            trace = run_episode_scan(self.env, self.agent, self.scalarizer,
+                                 self._cur_metrics, steps, learn=learn)
         per_step = (time.perf_counter() - t0) / max(1, steps)
 
         configs = self.env.param_space.configs_from_indices(trace.action_idx)
@@ -231,6 +271,17 @@ class Tuner:
             self._cur_metrics = metrics
         self.env._last_config = dict(self._cur_config)
 
+    def guardrail_stats(self) -> Optional[dict]:
+        """Exported guardrail record (None when guardrails are off): the
+        policy, cumulative promotion/rollback/rejection counters, restart
+        budget spent/remaining and the current live config."""
+        if self.policy is None:
+            return None
+        from repro.core.guardrails import empty_counters, guardrail_stats
+        return guardrail_stats(self.policy, self._guard,
+                               self._guard_counters or empty_counters(),
+                               space=self.env.param_space)
+
     def _finish(self, t_wall: float) -> TuningResult:
         """§III-E final recommendation + result assembly (shared by engines)."""
         policy_action = self.agent.act(self._state(self._cur_metrics), explore=False)
@@ -251,4 +302,5 @@ class Tuner:
             history=list(self.history),
             simulated_restart_seconds=self.simulated_restart_seconds,
             wall_seconds=time.perf_counter() - t_wall,
+            guardrail_stats=self.guardrail_stats(),
         )

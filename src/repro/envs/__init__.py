@@ -16,6 +16,13 @@ from repro.envs.lustre_sim import (
 )
 from repro.envs.lustre_model import LustreParams, LustreSimModel
 from repro.envs.synthetic import SyntheticSurfaceModel
+from repro.envs.faults import (
+    FaultInjectedModel,
+    FaultSpec,
+    latency_spike,
+    metric_dropout,
+    throughput_collapse,
+)
 
 __all__ = [
     "TuningEnvironment", "EnvModel", "ModelEnv",
@@ -25,6 +32,8 @@ __all__ = [
     "LustreSimEnv", "LustreSimV2", "batch_mean_performance",
     "LustreSimModel", "LustreParams", "SyntheticSurfaceModel",
     "paper_param_space", "extended_param_space", "magpie8_param_space",
+    "FaultSpec", "FaultInjectedModel",
+    "throughput_collapse", "latency_spike", "metric_dropout",
 ]
 
 # NB: envs.sharding_env is imported lazily (it pulls in launch/roofline);

@@ -1,0 +1,146 @@
+"""Deterministic fault injection for guardrail testing.
+
+``FaultInjectedModel`` wraps any pure ``EnvModel`` and corrupts named
+metrics over a step-indexed schedule — a throughput collapse at step k, an
+iowait spike, a metric dropout — without touching the wrapped dynamics,
+restart accounting or RNG stream. The wrapper is itself a pure ``EnvModel``
+(scan/vmap/shard_map-safe, all branch-free ``jnp.where``), so faulted
+environments ride the fused episode engine and the chunked fleet runtime
+unchanged: ``tests/test_guardrails.py`` injects a degradation mid-episode
+and pins that the ``DeploymentPolicy`` rolls the live config back within
+its window.
+
+Schedule semantics: the fault clock counts TUNING transitions only
+(``eval_run=True`` probes — shadow scoring, ``evaluate_config`` — observe
+the current clock but never advance it), so "collapse at step k" means the
+k-th committed tuning step regardless of how many shadow probes ran. A
+fault row is active for ``start <= t < start + duration``; shadow and live
+draws within one guarded step see the SAME clock, so a shadow probe scores
+a proposal under the same fault regime the live system would run it in.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence
+
+from repro.envs.base import EnvModel
+
+FAULT_MODES = ("scale", "dropout")
+
+
+class FaultSpec(NamedTuple):
+    """One step-indexed metric corruption.
+
+    ``metric``    name from the wrapped model's ``state_metrics``.
+    ``start``     first tuning step (0-based) the fault is active.
+    ``duration``  number of tuning steps the fault stays active.
+    ``mode``      "scale" multiplies the metric by ``scale``; "dropout"
+                  zeroes it (a collector blackout).
+    ``scale``     multiplier for mode="scale" (ignored for dropout).
+    """
+
+    metric: str
+    start: int
+    duration: int
+    mode: str = "scale"
+    scale: float = 0.2
+
+
+class FaultyEnvState(NamedTuple):
+    base: object   # the wrapped model's EnvState
+    step: object   # i32 tuning-step clock (eval probes do not advance it)
+
+
+@functools.lru_cache(maxsize=None)
+def _build_fault_fns(base_init, base_step, rows: tuple):
+    """Pure init/step closures; cached on (wrapped fns, schedule) so every
+    session of a fleet sharing one schedule shares ONE step_fn identity
+    (the episode-program cache keys on it)."""
+    import jax.numpy as jnp
+
+    def init_fn(params, key):
+        return FaultyEnvState(base=base_init(params, key),
+                              step=jnp.int32(0))
+
+    def step_fn(params, state, unit_action, eval_run):
+        base, vec, cost = base_step(params, state.base, unit_action,
+                                    eval_run)
+        t = state.step
+        for mi, start, duration, mode, scale in rows:
+            active = (t >= start) & (t < start + duration)
+            v = vec[mi]
+            faulted = (jnp.float32(0.0) if mode == "dropout"
+                       else v * jnp.float32(scale))
+            vec = vec.at[mi].set(jnp.where(active, faulted, v))
+        # eval_run is a static bool: probes replay the same clock
+        step = t if eval_run else t + jnp.int32(1)
+        return FaultyEnvState(base=base, step=step), vec, cost
+
+    return init_fn, step_fn
+
+
+class FaultInjectedModel(EnvModel):
+    """An ``EnvModel`` whose observed metrics follow a fault schedule.
+
+    Delegates space, specs, params and restart scope to the wrapped model;
+    only the emitted metric vector is corrupted while a fault row is
+    active. Determinism is the wrapped model's: same key, same schedule,
+    same trajectory."""
+
+    def __init__(self, base: EnvModel, faults: Sequence[FaultSpec]):
+        names = list(base.state_metrics)
+        rows = []
+        for f in faults:
+            if f.metric not in names:
+                raise ValueError(
+                    f"unknown metric {f.metric!r}; the wrapped model "
+                    f"exposes {names}")
+            if f.mode not in FAULT_MODES:
+                raise ValueError(
+                    f"unknown fault mode {f.mode!r}; use one of "
+                    f"{FAULT_MODES}")
+            if f.start < 0 or f.duration <= 0:
+                raise ValueError(
+                    f"fault needs start >= 0 and duration > 0, got {f}")
+            rows.append((names.index(f.metric), int(f.start),
+                         int(f.duration), f.mode, float(f.scale)))
+        self.base = base
+        self.faults = tuple(faults)
+        self.param_space = base.param_space
+        self.metric_specs = base.metric_specs
+        self.state_metrics = names
+        self.params = base.params
+        self.dfs_scope = base.dfs_scope
+        self._init_fn, self._step_fn = _build_fault_fns(
+            base.init_fn, base.step_fn, tuple(rows))
+
+    @property
+    def init_fn(self):
+        return self._init_fn
+
+    @property
+    def step_fn(self):
+        return self._step_fn
+
+
+# ---------------------------------------------------------------------------
+# Canonical fault shapes (the ones the guardrail suite pins)
+# ---------------------------------------------------------------------------
+
+def throughput_collapse(start: int, duration: int = 8,
+                        to_fraction: float = 0.2) -> FaultSpec:
+    """Throughput drops to ``to_fraction`` of its true value at ``start``."""
+    return FaultSpec("throughput", start, duration, "scale", to_fraction)
+
+
+def latency_spike(start: int, duration: int = 8, factor: float = 4.0,
+                  metric: str = "cpu_usage_iowait") -> FaultSpec:
+    """Latency pressure: the model exposes no latency metric directly, so a
+    spike surfaces as io-wait inflation (``cpu_usage_iowait`` by default)."""
+    return FaultSpec(metric, start, duration, "scale", factor)
+
+
+def metric_dropout(metric: str, start: int, duration: int = 8) -> FaultSpec:
+    """Collector blackout: ``metric`` reads zero while active."""
+    return FaultSpec(metric, start, duration, "dropout")

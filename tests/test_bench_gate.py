@@ -85,6 +85,54 @@ def test_gate_cli_fails_on_regression_json(tmp_path, monkeypatch):
     assert regression_gate.main(["--bench-json", str(quick)]) == 2
 
 
+def test_gate_cli_exit2_on_unusable_bench_json(tmp_path, monkeypatch,
+                                               capsys):
+    """Every unusable --bench-json shape exits 2 with a stderr diagnostic —
+    never 1 (exit 2 means 'could not gate', not 'regressed') and never a
+    silent 0."""
+    import benchmarks.fleet_throughput as ft
+    from benchmarks import regression_gate
+    monkeypatch.setattr(
+        ft, "_previous_bench",
+        lambda: {"fleet_session_steps_per_sec": 60.0, "_file": "BENCH_2.json"})
+
+    cases = {
+        "missing.json": None,                       # unreadable: never written
+        "malformed.json": "{not json",              # JSONDecodeError
+        "empty.json": "",                           # empty file is not JSON
+        "list.json": json.dumps([1, 2, 3]),         # not an object
+        "no_field.json": json.dumps(                # missing the metric
+            {"quick": False, "noise_band": 0.14}),
+    }
+    for name, content in cases.items():
+        path = tmp_path / name
+        if content is not None:
+            path.write_text(content)
+        assert regression_gate.main(["--bench-json", str(path)]) == 2, name
+        captured = capsys.readouterr()
+        assert "regression-gate:" in captured.err, name
+
+
+def test_gate_cli_band_fallback_on_empty_scaling(tmp_path, monkeypatch):
+    """A full-mode point with no top-level band and an EMPTY scaling list
+    falls back to the default band instead of raising (regression: bare
+    max() over an empty generator)."""
+    import benchmarks.fleet_throughput as ft
+    from benchmarks import regression_gate
+    monkeypatch.setattr(
+        ft, "_previous_bench",
+        lambda: {"fleet_session_steps_per_sec": 60.0, "_file": "BENCH_2.json"})
+    p = tmp_path / "BENCH_0.json"
+    p.write_text(json.dumps({
+        "quick": False, "fleet_session_steps_per_sec": 58.0, "scaling": []}))
+    assert regression_gate.main(["--bench-json", str(p)]) == 0
+    # and a scaling-derived band is still honored when present
+    p.write_text(json.dumps({
+        "quick": False, "fleet_session_steps_per_sec": 48.0,
+        "scaling": [{"noise_band": 0.25}]}))
+    assert regression_gate.main(["--bench-json", str(p)]) == 0
+
+
 # ---------------------------------------------------------------------------
 # BENCH_<n>.json --output-dir numbering (benchmarks/run.py)
 # ---------------------------------------------------------------------------

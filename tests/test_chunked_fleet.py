@@ -94,6 +94,27 @@ def test_overlap_staging_is_bitwise_pure_scheduling():
     assert last_fleet_run_stats()["overlap"] is True
 
 
+def test_policy_none_is_bitwise_the_default_chunked_fleet():
+    """PR 7 threaded DeploymentPolicy through the chunked runtime;
+    ``policy=None`` (explicit or implied) must stay maxulp=0 the
+    pre-guardrail engine — same compiled program, same results."""
+    env = LustreSimEnv("seq_write")
+    cfg = DDPGConfig.for_env(env, updates_per_step=4)
+
+    def grid(**kw):
+        return FleetTuner.from_grid(
+            ["seq_write"], [{"throughput": 1.0}], [0, 1, 2],
+            env_cls=LustreSimEnv, engine="scan", ddpg_config=cfg,
+            eval_runs=1, warmup_steps=3, chunk=2, **kw)
+
+    default, explicit = grid(), grid(policy=None)
+    for steps in (4, 2):
+        for a, b in zip(default.run(steps).results,
+                        explicit.run(steps).results):
+            _assert_bitwise_equal_runs(a, b, maxulp=0)
+            assert a.guardrail_stats is None and b.guardrail_stats is None
+
+
 def test_progressive_runs_survive_chunking():
     """Chunked fleets resume across run() calls exactly like monolithic ones
     (agent state, FIFO and noise streams stream back to host between runs)."""
