@@ -16,9 +16,15 @@ it does not demand monotone speedups from a noisy box.
 With no committed full-mode BENCH point the gate passes vacuously (a fresh
 clone has nothing to regress against).
 
+When the gated ``--bench-json`` point carries a ``shared_experience``
+entry (benchmarks/shared_experience.py), its recorded acceptance — the
+steps-to-gain ratio and the replay bytes/session cut — is honored too:
+a point whose acceptance failed exits 1.
+
 Exit-code contract (pinned by tests/test_bench_gate.py):
     0  pass — within noise, improvement, or vacuous (nothing committed)
-    1  regression — the measured median left the committed noise band
+    1  regression — the measured median left the committed noise band,
+       or the point's shared-experience acceptance failed
     2  unusable input — ``--bench-json`` file missing/unreadable, malformed
        or empty JSON, not a JSON object, quick-mode point, or a point
        without ``fleet_session_steps_per_sec``; diagnostics go to stderr
@@ -112,6 +118,15 @@ def main(argv=None) -> int:
             default=0.0) or 0.14
         current = {"median": point["fleet_session_steps_per_sec"],
                    "noise_band": band}
+        se = point.get("shared_experience")
+        if se is not None and not se.get("acceptance", {}).get("pass", True):
+            acc = se["acceptance"]
+            print(f"regression-gate: FAIL — shared-experience point misses "
+                  f"its acceptance: steps-to-gain ratio "
+                  f"{acc.get('steps_ratio')} (max {acc.get('steps_ratio_max')}"
+                  f"), replay bytes/session ratio {acc.get('bytes_ratio')} "
+                  f"(min {acc.get('bytes_ratio_min')})", file=sys.stderr)
+            return 1
     else:
         current = measure_steady_state(repeats=args.repeats)
 

@@ -70,7 +70,7 @@ def main() -> None:
     p.add_argument("--quick", action="store_true", help="reduced seeds/steps")
     p.add_argument("--only", default="",
                    help="fig4|fig5|fig6|fig7|table3|fleet|scaling|highdim|"
-                        "dryrun")
+                        "shared-experience|dryrun")
     p.add_argument("--repeats", type=int, default=0,
                    help="timed repetitions per measurement (0 = benchmark "
                    "defaults); medians + noise bands are recorded either way")
@@ -88,7 +88,7 @@ def main() -> None:
 
     from benchmarks import (fig4_single_objective, fig5_multi_objective,
                             fig6_steps, fig7_progressive, fleet_throughput,
-                            highdim_gap, table3_timing)
+                            highdim_gap, shared_experience, table3_timing)
 
     benches = {
         "fig4": ("Fig. 4 — single-objective throughput tuning (30 steps)",
@@ -112,6 +112,9 @@ def main() -> None:
                     "O(chunk) device memory",
                     lambda: fleet_throughput.run_scaling(
                         quick=args.quick, repeats=repeats)),
+        "shared-experience": (
+            "Shared-experience fleet — steps-to-gain + replay bytes/session",
+            lambda: shared_experience.run(quick=args.quick)),
         "highdim": ("High-dim gap — Magpie vs BestConfig, 2-D vs 8-knob",
                     lambda: highdim_gap.run(
                         seeds=seeds, steps=steps,
@@ -163,6 +166,18 @@ def main() -> None:
               f"(fleet {summary['fleet_size']}: "
               f"{summary['fleet_session_steps_per_sec']:.1f} session-steps/s, "
               f"{summary['speedup_vs_host_loop']:.1f}x host loop) "
+              f"in {time.time()-t0:.1f}s", flush=True)
+    elif args.only == "shared-experience":
+        t0 = time.time()
+        print("\n=== bench-json: shared-experience trajectory point ===",
+              flush=True)
+        summary = shared_experience.summary(quick=args.quick)
+        path = _write_bench_json(summary, root=args.output_dir)
+        se = summary["shared_experience"]
+        print(f"wrote {path} "
+              f"(cell {se['cell_size']}: shared steps-to-gain "
+              f"{se['acceptance']['steps_ratio']:.2f}x, replay bytes/session "
+              f"{se['acceptance']['bytes_ratio']:.1f}x cut) "
               f"in {time.time()-t0:.1f}s", flush=True)
 
 

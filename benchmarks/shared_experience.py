@@ -1,0 +1,260 @@
+"""Shared-experience fleet benchmark: steps-to-gain and replay bytes/session.
+
+Three fleets of DDPG tuning sessions run on a correlated ``LustreSimV2``
+cell (one ``from_grid`` workload x objective cell: same surface, different
+seeds), and the benchmark measures how many env steps each needs to reach
+the gain — the paper's real cost metric, since every tuning step is
+production time spent running an untuned config:
+
+  independent  per-session replay windows, warmup W     (the PR-5 runtime)
+  shared       merged cell FIFO, warmup ceil(W/k)       (``shared_replay``)
+  shared+avg   merged FIFO + cell parameter averaging   (``avg_every``)
+
+The per-learner seed-data budget is held constant across arms: an
+independent learner enters policy mode with W of its own transitions; a
+shared learner enters with k*ceil(W/k) >= W merged transitions. The merged
+window gathers the same evidence k times sooner — that amortization is the
+steps-to-gain claim, not a luckier random search (the warmup plans are the
+same per-session plans either way).
+
+Metric: the trailing-``WINDOW`` cell mean of the NOISE-FREE surface score
+(``LustreSimV2._score_batch``) of the configs each session actually ran.
+Scoring the trajectory on the noise-free surface removes the env's
+lognormal measurement noise so "reached the gain" is not a coin flip;
+using the trailing mean of *ran* configs (not one-off maxima) makes the
+metric reward sustained tuning quality rather than random-probe breadth.
+The target is ``TARGET_FRACTION`` of the independent arm's end-of-run
+plateau; steps-to-gain is the first step the trailing mean holds the
+target; the headline is the median ratio over seed replications, labeled
+against the established noise band.
+
+Replay bytes/session: the shared arms provision the merged cell window at
+``k*capacity/2`` slots — half the fleet-total slots of the independent
+arm — so replay bytes/session drop exactly 2x while the cell still keeps
+a k/2-session-step deeper *shared* history than any single independent
+window. The numbers are taken from ``memory_plan`` and pinned against the
+live buffer allocations (``matches_live``).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import ESTABLISHED_NOISE_BAND_REL, csv_row
+
+WORKLOAD = "file_server"
+WEIGHTS = {"throughput": 1.0}
+WINDOW = 4                # trailing-mean window (env steps)
+UPDATES = 24              # gradient updates per env step
+BASE_CAPACITY = 64        # per-session replay slots (independent arm)
+INDEPENDENT_WARMUP = 8    # warmup steps, independent arm
+AVG_EVERY = 4             # cadence of the parameter-averaging arm
+TARGET_FRACTION = 0.9     # of the independent arm's plateau
+ACCEPT_STEPS_RATIO = 0.7  # acceptance: shared reaches the gain in <=0.7x
+ACCEPT_BYTES_RATIO = 2.0  # acceptance: replay bytes/session cut at cs=4
+
+_LAST: dict = {}
+
+
+def _sharing_cfgs():
+    from repro.core.sharing import SharingConfig
+
+    return {
+        "shared_replay": SharingConfig(shared_replay=True),
+        "shared_replay_avg": SharingConfig(
+            shared_replay=True, avg_every=AVG_EVERY, avg_opt_state=True),
+    }
+
+
+def _fleet(seeds, sharing, warmup: int, capacity: int):
+    from repro.core import DDPGConfig
+    from repro.core.fleet import FleetTuner
+    from repro.envs.lustre_sim import LustreSimV2
+
+    cfg = DDPGConfig.for_env(LustreSimV2(WORKLOAD), updates_per_step=UPDATES)
+    return FleetTuner.from_grid(
+        [WORKLOAD], [WEIGHTS], list(seeds), env_cls=LustreSimV2,
+        engine="scan", ddpg_config=cfg, eval_runs=1, warmup_steps=warmup,
+        buffer_capacity=capacity, sharing=sharing)
+
+
+def _trail_curve(fleet, steps: int) -> np.ndarray:
+    """Trailing-``WINDOW`` cell mean of noise-free surface scores of the
+    configs the sessions ran; index ``i`` is env step ``i + WINDOW``."""
+    from repro.envs.lustre_sim import LustreSimV2
+
+    fleet.run(steps)
+    scorer = LustreSimV2(WORKLOAD)
+    per = np.stack([scorer._score_batch([r.config for r in h], WEIGHTS)
+                    for h in fleet.histories])
+    return np.convolve(per.mean(axis=0), np.ones(WINDOW) / WINDOW,
+                       mode="valid")
+
+
+def _steps_to(curve: np.ndarray, target: float, miss: int) -> int:
+    hit = np.nonzero(curve >= target)[0]
+    return int(hit[0] + WINDOW) if hit.size else miss
+
+
+def _ratio_stats(samples) -> dict:
+    med = float(np.median(samples))
+    spread = (max(samples) - min(samples)) / med if med else 0.0
+    band = max(float(spread), ESTABLISHED_NOISE_BAND_REL)
+    if med <= 1.0 - ESTABLISHED_NOISE_BAND_REL:
+        label = "improvement"          # fewer steps to the gain
+    elif med >= 1.0 + ESTABLISHED_NOISE_BAND_REL:
+        label = "regression"
+    else:
+        label = "within_noise"
+    return {"median": med, "min": float(min(samples)),
+            "max": float(max(samples)),
+            "samples": [float(s) for s in samples],
+            "noise_band": band, "label": label}
+
+
+def measure(quick: bool = False) -> dict:
+    """Run the three arms over seed replications; cached per mode so
+    ``run`` and ``summary`` share one measurement."""
+    key = "quick" if quick else "full"
+    if key in _LAST:
+        return _LAST[key]
+
+    cell = 4 if quick else 8
+    steps = 24 if quick else 40
+    bases = (0, 25) if quick else (0, 25, 50, 75, 100, 125)
+    shared_warmup = -(-INDEPENDENT_WARMUP // cell)       # ceil(W/k)
+    shared_capacity = cell * BASE_CAPACITY // 2          # 2x bytes cut
+    plateau_tail = max(WINDOW, steps // 5)
+
+    arms = {"independent": (None, INDEPENDENT_WARMUP, BASE_CAPACITY)}
+    for name, sh in _sharing_cfgs().items():
+        arms[name] = (sh, shared_warmup, shared_capacity)
+
+    reps = []
+    for base in bases:
+        seeds = [base + i for i in range(cell)]
+        curves = {name: _trail_curve(_fleet(seeds, sh, warm, cap), steps)
+                  for name, (sh, warm, cap) in arms.items()}
+        plateau = float(np.mean(curves["independent"][-plateau_tail:]))
+        target = TARGET_FRACTION * plateau
+        reps.append({
+            "base_seed": base,
+            "independent_plateau": plateau,
+            "target": target,
+            "steps_to_gain": {name: _steps_to(curves[name], target,
+                                              miss=steps + 1)
+                              for name in arms},
+        })
+
+    ratios = {}
+    for name in arms:
+        if name == "independent":
+            continue
+        ratios[name] = _ratio_stats(
+            [r["steps_to_gain"][name] / r["steps_to_gain"]["independent"]
+             for r in reps])
+
+    out = {
+        "workload": WORKLOAD,
+        "weights": WEIGHTS,
+        "cell_size": cell,
+        "steps": steps,
+        "updates_per_step": UPDATES,
+        "window": WINDOW,
+        "target_fraction": TARGET_FRACTION,
+        "independent_warmup": INDEPENDENT_WARMUP,
+        "shared_warmup": shared_warmup,
+        "independent_capacity": BASE_CAPACITY,
+        "shared_merged_capacity": shared_capacity,
+        "replications": reps,
+        "steps_to_gain_ratio": ratios,
+        "replay": replay_bytes_per_session(cell_size=4),
+    }
+    out["acceptance"] = {
+        "steps_ratio_max": ACCEPT_STEPS_RATIO,
+        "bytes_ratio_min": ACCEPT_BYTES_RATIO,
+        "steps_ratio": ratios["shared_replay"]["median"],
+        "bytes_ratio": out["replay"]["bytes_per_session_ratio"],
+        "pass": (ratios["shared_replay"]["median"] <= ACCEPT_STEPS_RATIO
+                 and (out["replay"]["bytes_per_session_ratio"]
+                      >= ACCEPT_BYTES_RATIO)
+                 and out["replay"]["matches_live"]),
+    }
+    _LAST[key] = out
+    return out
+
+
+def replay_bytes_per_session(cell_size: int = 4) -> dict:
+    """Replay bytes/session, independent vs merged, from ``memory_plan`` —
+    which ``FleetTuner.memory_plan`` pins against the live allocations."""
+    from repro.core.sharing import SharingConfig
+
+    ind = _fleet(range(cell_size), None, INDEPENDENT_WARMUP, BASE_CAPACITY)
+    shr = _fleet(range(cell_size), SharingConfig(shared_replay=True),
+                 -(-INDEPENDENT_WARMUP // cell_size),
+                 cell_size * BASE_CAPACITY // 2)
+    pi, ps = ind.memory_plan(steps=8), shr.memory_plan(steps=8)
+    bi = pi["per_session"]["replay_bytes"]
+    bs = ps["per_session"]["replay_bytes"]
+    return {
+        "cell_size": cell_size,
+        "independent_bytes_per_session": int(bi),
+        "shared_bytes_per_session": int(bs),
+        "bytes_per_session_ratio": float(bi / bs),
+        "matches_live": bool(pi["matches_live"] and ps["matches_live"]),
+    }
+
+
+def run(quick: bool = False) -> list:
+    m = measure(quick)
+    rows = [csv_row("base_seed", "independent_plateau", "target",
+                    "stt_independent", "stt_shared", "stt_shared_avg")]
+    for r in m["replications"]:
+        stt = r["steps_to_gain"]
+        rows.append(csv_row(
+            r["base_seed"], f"{r['independent_plateau']:.3f}",
+            f"{r['target']:.3f}", stt["independent"], stt["shared_replay"],
+            stt["shared_replay_avg"]))
+    for name, st in m["steps_to_gain_ratio"].items():
+        rows.append(f"{name}: median steps-to-gain ratio "
+                    f"{st['median']:.2f}x (min {st['min']:.2f} / max "
+                    f"{st['max']:.2f}, band {st['noise_band']:.0%}, "
+                    f"{st['label']})")
+    rep = m["replay"]
+    rows.append(f"replay bytes/session at cell {rep['cell_size']}: "
+                f"{rep['independent_bytes_per_session']} independent vs "
+                f"{rep['shared_bytes_per_session']} merged "
+                f"({rep['bytes_per_session_ratio']:.1f}x cut, "
+                f"matches_live={rep['matches_live']})")
+    acc = m["acceptance"]
+    rows.append(f"acceptance: steps ratio {acc['steps_ratio']:.2f} <= "
+                f"{acc['steps_ratio_max']} and bytes ratio "
+                f"{acc['bytes_ratio']:.1f} >= {acc['bytes_ratio_min']}: "
+                f"{'PASS' if acc['pass'] else 'FAIL'}")
+    return rows
+
+
+def summary(quick: bool = False) -> dict:
+    """The BENCH_<n>.json payload: the shared-experience point plus, in
+    full mode, a re-measured canonical throughput number so the
+    benchmark-regression gate can keep walking the trajectory."""
+    payload = {
+        "bench": "shared_experience",
+        "quick": bool(quick),
+        "shared_experience": measure(quick),
+    }
+    if not quick:
+        from benchmarks.fleet_throughput import _previous_bench
+        from benchmarks.regression_gate import measure_steady_state
+
+        sps = measure_steady_state(repeats=3)
+        payload["throughput"] = sps
+        payload["fleet_session_steps_per_sec"] = sps["median"]
+        payload["noise_band"] = sps["noise_band"]
+        prev = _previous_bench()
+        if prev is not None:
+            from benchmarks.common import vs_previous
+
+            payload["vs_previous"] = vs_previous(
+                sps, prev["fleet_session_steps_per_sec"], prev["_file"])
+    return payload

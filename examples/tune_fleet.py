@@ -32,11 +32,22 @@ live config, promoted only above ``--min-gain`` within the
 regresses inside ``--rollback-window`` steps. Guarded runs print the fleet's
 promotion/rollback/budget counters; a resumed service keeps the policy it
 was checkpointed with.
+
+``--share`` turns on cross-session experience sharing (``core/sharing.py``)
+within each workload cell — the sessions tuning the same workload under
+different seeds. ``--share replay`` merges each cell's replay into one
+shared FIFO window (replay bytes per session drop by the cell size);
+``--share replay+avg`` additionally averages the cell's learner parameters
+every ``--avg-every`` env steps. Sharing forces the scan engine; the run
+prints the ``memory_plan()`` replay delta and, per cell, how many steps the
+cell took to reach 90% of its final objective. A service checkpoint keeps
+the sharing config — ``--resume`` continues with the cells (and their
+merged windows) it was checkpointed with.
 """
 
 import argparse
 
-from repro.core import DeploymentPolicy, FleetService, FleetTuner
+from repro.core import DeploymentPolicy, FleetService, FleetTuner, SharingConfig
 
 
 def _policy(args):
@@ -46,6 +57,37 @@ def _policy(args):
     return DeploymentPolicy(min_gain=args.min_gain,
                             max_restart_seconds=args.restart_budget,
                             rollback_window=args.rollback_window)
+
+
+def _sharing(args):
+    """The SharingConfig the --share flag describes (None when off)."""
+    if args.share == "off":
+        return None
+    if args.share == "replay":
+        return SharingConfig(shared_replay=True)
+    return SharingConfig(shared_replay=True, avg_every=args.avg_every,
+                         avg_opt_state=True)
+
+
+def _steps_to_target(histories, fraction=0.9, window=4):
+    """First step at which the cell's trailing-``window`` mean objective
+    holds ``fraction`` of its end-of-run value (None = never)."""
+    import numpy as np
+    per = np.stack([[h.objective for h in hist] for hist in histories])
+    mean = per.mean(axis=0)
+    trail = np.convolve(mean, np.ones(window) / window, mode="valid")
+    target = fraction * trail[-1]
+    hit = np.nonzero(trail >= target)[0]
+    return int(hit[0] + window) if hit.size else None
+
+
+def _print_cell_targets(labels, results, cell_size) -> None:
+    for c0 in range(0, len(results), cell_size):
+        cell = results[c0:c0 + cell_size]
+        label = labels[c0].rsplit("|", 1)[0]  # strip the |seedN suffix
+        steps = _steps_to_target([r.history for r in cell])
+        print(f"  cell {label:30s} steps to 90% of final objective: "
+              f"{steps if steps is not None else 'never'}")
 
 
 def _run_service(args) -> None:
@@ -58,12 +100,22 @@ def _run_service(args) -> None:
         svc = FleetService.restore(args.resume)
         print(f"resumed service from {args.resume}: {len(svc.active)} "
               f"sessions at step {svc.total_steps}/{args.steps}")
+        if svc.sharing is not None:
+            # restore() rebuilt the cells (and their merged replay windows)
+            # from the checkpoint — the sharing config is durable state
+            print(f"  sharing (from checkpoint): {svc.sharing} "
+                  f"cell_size={svc.cell_size}")
     else:
         workloads = ["seq_write", "video_server", "file_server"]
         seeds = list(range(max(1, round(args.sessions / len(workloads)))))
-        svc = FleetService(chunk=args.chunk or 8, eval_runs=1,
+        sharing = _sharing(args)
+        cs = len(seeds) if sharing is not None else 1
+        # the lease width must hold whole cells
+        chunk = args.chunk or max(8 // cs, 1) * cs
+        svc = FleetService(chunk=chunk, eval_runs=1,
                            checkpoint_dir=args.checkpoint,
-                           policy=_policy(args))
+                           policy=_policy(args), sharing=sharing,
+                           cell_size=cs)
         # same per-cell seed offsets as FleetTuner.from_grid, so a service
         # run is comparable session-for-session with the batch path
         cell = 0
@@ -101,6 +153,11 @@ def _run_service(args) -> None:
         gains.append(svc.result(sid).gain("throughput"))
     print(f"\naggregate throughput gain over {len(gains)} sessions: "
           f"mean {sum(gains)/len(gains)*100:+.1f}%")
+    if svc.sharing is not None and svc.cell_size > 1:
+        sids = list(labels)
+        _print_cell_targets([labels[sid] for sid in sids],
+                            [svc.result(sid) for sid in sids],
+                            svc.cell_size)
     _print_guardrail_summary(
         [svc.result(sid).guardrail_stats for sid in labels])
 
@@ -158,6 +215,14 @@ def main() -> None:
                         help="guardrails: steps a fresh canary is watched "
                         "for a live regression before it becomes the "
                         "incumbent")
+    parser.add_argument("--share", choices=["off", "replay", "replay+avg"],
+                        default="off",
+                        help="cross-session experience sharing per workload "
+                        "cell: merged replay window, optionally + periodic "
+                        "parameter averaging (forces the scan engine)")
+    parser.add_argument("--avg-every", type=int, default=4, metavar="STEPS",
+                        help="share=replay+avg: env steps between cell "
+                        "parameter averages")
     args = parser.parse_args()
 
     if args.compile_cache is not None:
@@ -179,8 +244,10 @@ def main() -> None:
         print(f"note: running {n_sessions} sessions "
               f"({len(workloads)} workloads x {len(seeds)} seeds; "
               f"{args.sessions} requested)")
+    sharing = _sharing(args)
     engine = ("scan" if (args.guardrails or args.chunk is not None
-                         or n_sessions > 9) else "host")
+                         or sharing is not None or n_sessions > 9)
+              else "host")
     fleet = FleetTuner.from_grid(
         workloads=workloads,
         objectives=[{"throughput": 1.0}],
@@ -189,6 +256,7 @@ def main() -> None:
         chunk=args.chunk if engine == "scan" else None,
         eval_runs=1 if n_sessions > 9 else 3,
         policy=_policy(args),
+        sharing=sharing,
     )
 
     if engine == "scan":
@@ -196,9 +264,14 @@ def main() -> None:
         per = plan["per_session"]
         print(f"memory plan ({plan['sessions']} sessions, chunk "
               f"{plan['chunk']}, {plan['steps']} steps):")
+        replay_note = ""
+        if plan["cell_size"] > 1:
+            # the merged cell window amortizes one buffer over the cell
+            replay_note = (f" = 1/{plan['cell_size']} of the independent "
+                           f"{per['replay_bytes'] * plan['cell_size']:,} B")
         print(f"  per session: learner {per['learner_bytes']:,} B, replay "
-              f"{per['replay_bytes']:,} B ({plan['replay_dtype']}), trace "
-              f"{per['trace_bytes_per_step']} B/step")
+              f"{per['replay_bytes']:,} B ({plan['replay_dtype']})"
+              f"{replay_note}, trace {per['trace_bytes_per_step']} B/step")
         print(f"  device (one chunk resident): "
               f"{plan['chunk_device_bytes']:,} B")
         print(f"  host (whole fleet): {plan['fleet_host_bytes']:,} B "
@@ -224,6 +297,9 @@ def main() -> None:
           f"range [{stats['min']*100:+.1f}%, {stats['max']*100:+.1f}%]")
     print(f"fleet wall time: {result.wall_seconds:.1f}s "
           f"for {stats['sessions']} x {args.steps}-step sessions")
+    if sharing is not None and fleet.cell_size > 1:
+        print(f"sharing: {args.share} over cells of {fleet.cell_size}")
+        _print_cell_targets(result.labels, result.results, fleet.cell_size)
     _print_guardrail_summary([r.guardrail_stats for r in result.results])
 
 

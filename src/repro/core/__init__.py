@@ -21,6 +21,12 @@ Public API:
                                     (core.guardrails), evaluated inside the
                                     episode scan; default off = bitwise the
                                     unguarded engines
+    SharingConfig                -- cross-session experience sharing
+                                    (core.sharing): cell-merged replay,
+                                    periodic parameter averaging, DIAL-style
+                                    scoped observation; default off = bitwise
+                                    (and by executable identity) the
+                                    independent fleet
     baselines.BestConfigTuner    -- the paper's baseline (plus grid/random)
 """
 
@@ -43,6 +49,7 @@ from repro.core.fleet import (
     FleetAgent, FleetResult, FleetTuner, memory_plan, replay_compact_trace,
 )
 from repro.core.service import FleetService
+from repro.core.sharing import SharingConfig, normalize_sharing, resolve_obs_mask
 from repro.core.guardrails import (
     DeploymentPolicy, GuardState, GuardedEpisodeTrace, gate_decision,
     guardrail_counters, guardrail_stats, init_fleet_guard_state,
@@ -64,6 +71,7 @@ __all__ = [
     "last_fleet_run_stats", "live_device_bytes", "precompile_fleet_episode",
     "FleetAgent", "FleetResult", "FleetTuner", "FleetService", "memory_plan",
     "replay_compact_trace",
+    "SharingConfig", "normalize_sharing", "resolve_obs_mask",
     "DeploymentPolicy", "GuardState", "GuardedEpisodeTrace", "gate_decision",
     "rollback_decision", "init_guard_state", "init_fleet_guard_state",
     "guardrail_counters", "guardrail_stats", "merge_counters",

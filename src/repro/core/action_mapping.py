@@ -224,14 +224,26 @@ class ParamSpace:
         The compact episode trace (``core.episode``) stores per-step actions
         as these indices instead of float32 unit coordinates — knobs are
         quantized by construction, so an index round-trips exactly where a
-        float action would cost 4 bytes per coordinate."""
+        float action would cost 4 bytes per coordinate.
+
+        Indices are *computed* in float32 inside the episode graph
+        (``jax_coord_maps``), where integers are exact only up to 2**24 —
+        beyond that the rounded index itself is lossy and the compact trace
+        would silently decode to a *neighbouring* level. No real DFS knob
+        has 16M levels, so that domain boundary is an error, not a wider
+        dtype."""
         if not self.is_quantized:
             raise ValueError("continuous spaces have no index trace encoding")
         top = max(s.cardinality - 1 for s in self.specs)
-        for dt in (np.uint8, np.uint16, np.uint32):
+        if top > 2 ** 24:
+            raise ValueError(
+                f"knob cardinality {top + 1} exceeds the exact-integer range "
+                f"of the float32 index computation (2**24); the compact "
+                f"index trace cannot represent this space losslessly")
+        for dt in (np.uint8, np.uint16):
             if top <= np.iinfo(dt).max:
                 return np.dtype(dt)
-        return np.dtype(np.int64)
+        return np.dtype(np.uint32)  # top <= 2**24, so uint32 always fits
 
     def configs_from_indices(self, idx: np.ndarray) -> list:
         """Vectorized index decode: [N, m] quantization indices -> N configs.

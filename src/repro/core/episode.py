@@ -143,7 +143,7 @@ def decode_restarts(fp: np.ndarray) -> np.ndarray:
 
 def _build_episode(step_fn, space: ParamSpace, cfg: DDPGConfig, actor_tx,
                    critic_tx, learn: bool, num_updates: int, kernel_mode=None,
-                   policy=None):
+                   policy=None, obs_mask=None):
     """episode(params, w_vec, lo, span, carry, xs) -> (carry, EpisodeTrace).
 
     ``xs`` = (use_warmup [T] bool, warmup_actions [T, m], noise [T, m]).
@@ -159,11 +159,22 @@ def _build_episode(step_fn, space: ParamSpace, cfg: DDPGConfig, actor_tx,
     the trace grows the decision trail (``GuardedEpisodeTrace``). With
     ``policy=None`` this function is byte-for-byte the pre-guardrail build —
     the off path never touches ``core.guardrails``.
+
+    ``obs_mask`` (a tuple of 0/1 floats over the k state metrics — see
+    ``envs.metrics.scope_mask``) is the DIAL-style local-observation mode:
+    the LEARNER's view of the state (actor input and the s/s2 rows stored in
+    replay) is masked to the visible metrics, while the env dynamics,
+    objective, reward and trace all keep the full state. ``obs_mask=None``
+    leaves every line of the build untouched.
     """
     # lazy: envs.base imports repro.core at its own top level
     from repro.envs.base import barriered_step, fusion_barrier
 
     if policy is not None:
+        if obs_mask is not None:
+            raise ValueError(
+                "observation masking does not compose with DeploymentPolicy "
+                "guardrails (the guarded step owns its own observe path)")
         from repro.core.guardrails import build_guarded_step
         guarded = build_guarded_step(step_fn, space, cfg, actor_tx,
                                      critic_tx, learn, num_updates,
@@ -178,6 +189,7 @@ def _build_episode(step_fn, space: ParamSpace, cfg: DDPGConfig, actor_tx,
     do_updates = learn and num_updates > 0
     coord_maps = jax_coord_maps(space)
     idx_dtype = space.index_dtype()
+    mask = None if obs_mask is None else jnp.asarray(obs_mask, jnp.float32)
 
     def one_step(params, w_vec, lo, span, carry, x):
         use_warmup, warmup_a, noise = x
@@ -189,7 +201,8 @@ def _build_episode(step_fn, space: ParamSpace, cfg: DDPGConfig, actor_tx,
         # codegen aligned with the host loop's standalone dispatches.
         actor, state_vec = fusion_barrier(
             (carry.ddpg.actor, carry.state_vec))
-        policy = fusion_barrier(actor_apply(actor, state_vec))
+        obs = state_vec if mask is None else state_vec * mask
+        policy = fusion_barrier(actor_apply(actor, obs))
         explored = jnp.clip(policy + noise, 0.0, 1.0)
         action = jnp.where(use_warmup, jnp.clip(warmup_a, 0.0, 1.0), explored)
 
@@ -221,11 +234,17 @@ def _build_episode(step_fn, space: ParamSpace, cfg: DDPGConfig, actor_tx,
             buf = carry.buffer
             capacity = buf.s.shape[0]
             i = buf.next_slot
+            # the stored s/s2 rows are what the LEARNER observed: under a
+            # local-observation mask the invisible metrics are zeroed, so
+            # replayed minibatches match the masked actor inputs
+            s_row = (carry.state_vec if mask is None
+                     else carry.state_vec * mask)
+            s2_row = norm if mask is None else norm * mask
             buf = BufferState(
-                s=buf.s.at[i].set(carry.state_vec.astype(buf.s.dtype)),
+                s=buf.s.at[i].set(s_row.astype(buf.s.dtype)),
                 a=buf.a.at[i].set(action.astype(buf.a.dtype)),
                 r=buf.r.at[i].set(reward.astype(buf.r.dtype)),
-                s2=buf.s2.at[i].set(norm.astype(buf.s2.dtype)),
+                s2=buf.s2.at[i].set(s2_row.astype(buf.s2.dtype)),
                 next_slot=(i + 1) % capacity,
                 size=jnp.minimum(buf.size + 1, capacity))
         else:
@@ -257,12 +276,253 @@ def _build_episode(step_fn, space: ParamSpace, cfg: DDPGConfig, actor_tx,
     return episode
 
 
+def _build_cell_episode(step_fn, space: ParamSpace, cfg: DDPGConfig,
+                        actor_tx, critic_tx, learn: bool, num_updates: int,
+                        kernel_mode, sharing, cell_size: int, obs_mask):
+    """One CELL's episode: ``cell_size`` member sessions stepping in lockstep
+    with shared experience (``core.sharing.SharingConfig``).
+
+    Carry leaves are session-stacked [cs, ...] — except, under shared
+    replay, the buffer, which is the cell's single merged FIFO window
+    ([capacity, ...] with scalar cursors). ``xs`` grows two inputs over the
+    off-path build: ``avg_now`` [T, cs] (host-computed averaging cadence —
+    the whole cell agrees, the body reads lane 0) and ``active`` [T, cs]
+    (False lanes are padding: their transitions never enter the shared
+    window and they carry zero weight in the cell mean).
+
+    Step for step this is the vmapped per-session body of
+    ``_build_episode`` — same phase order, same fusion islands, same
+    float32 arithmetic per lane — with three cell-level splices: the merged
+    FIFO scatter-write, minibatch sampling over the merged window (every
+    learner sees cs× transitions per env step), and the post-learn masked
+    cell mean of the actor/critic pytrees when ``avg_now`` fires. At
+    ``cell_size=1`` every splice is an exact identity (one-element cumsum,
+    one-element mean), which is what the sharing-off property tests pin.
+    """
+    from repro.envs.base import barriered_step, fusion_barrier
+
+    do_updates = learn and num_updates > 0
+    coord_maps = jax_coord_maps(space)
+    idx_dtype = space.index_dtype()
+    cs = int(cell_size)
+    mask = None if obs_mask is None else jnp.asarray(obs_mask, jnp.float32)
+    shared = bool(sharing.shared_replay)
+    averaging = sharing.avg_every is not None
+
+    def idx_of(action):  # [m] -> compact per-knob quantization indices
+        return jnp.stack([coord_maps[j](action[j])["idx"]
+                          for j in range(space.dim)]).astype(idx_dtype)
+
+    def one_step(params, w_vec, lo, span, carry, x):
+        use_warmup, warmup_a, noise, avg_now, active = x
+
+        # act (per session, vmapped over the cell)
+        actor, state_vec = fusion_barrier(
+            (carry.ddpg.actor, carry.state_vec))
+        obs = state_vec if mask is None else state_vec * mask
+        policy = fusion_barrier(jax.vmap(actor_apply)(actor, obs))
+        explored = jnp.clip(policy + noise, 0.0, 1.0)
+        action = jnp.where(use_warmup[:, None],
+                           jnp.clip(warmup_a, 0.0, 1.0), explored)
+        action_idx = jax.vmap(idx_of)(action)
+
+        # env transition + normalization (per session)
+        env_state, metrics_vec, restart = jax.vmap(
+            lambda p, es, a: barriered_step(step_fn, p, es, a, False)
+        )(params, carry.env_state, action)
+        norm = jnp.where(span > 0,
+                         jnp.clip((metrics_vec - lo) / span, 0.0, 1.0), 0.0)
+
+        # objective: same serial float32 fold per lane as the off path
+        obj = jnp.float32(0.0)
+        for j in range(norm.shape[1]):
+            obj = obj + w_vec[:, j] * norm[:, j]
+        reward = (obj - carry.objective) / jnp.maximum(
+            carry.objective, jnp.float32(1e-6))
+
+        s_row = (carry.state_vec if mask is None
+                 else carry.state_vec * mask)
+        s2_row = norm if mask is None else norm * mask
+        buf = carry.buffer
+        if learn and shared:
+            # merged cell FIFO: every ACTIVE member appends, in session
+            # order, to the one shared window (exactly
+            # BatchedReplayBuffer(groups=...).add); inactive (padding)
+            # lanes scatter out of bounds and are dropped
+            capacity = buf.s.shape[0]
+            n_act = active.astype(jnp.int32)
+            offs = jnp.cumsum(n_act) - 1
+            wrote = jnp.sum(n_act)
+            pos = jnp.where(active, (buf.next_slot + offs) % capacity,
+                            capacity)
+            buf = BufferState(
+                s=buf.s.at[pos].set(s_row.astype(buf.s.dtype), mode="drop"),
+                a=buf.a.at[pos].set(action.astype(buf.a.dtype),
+                                    mode="drop"),
+                r=buf.r.at[pos].set(reward.astype(buf.r.dtype),
+                                    mode="drop"),
+                s2=buf.s2.at[pos].set(s2_row.astype(buf.s2.dtype),
+                                      mode="drop"),
+                next_slot=(buf.next_slot + wrote) % capacity,
+                size=jnp.minimum(buf.size + wrote, capacity))
+        elif learn:
+            # independent per-session FIFOs (averaging-only mode), exactly
+            # the off path's write vmapped over the cell
+            capacity = buf.s.shape[1]
+            lane = jnp.arange(cs)
+            i = buf.next_slot
+            buf = BufferState(
+                s=buf.s.at[lane, i].set(s_row.astype(buf.s.dtype)),
+                a=buf.a.at[lane, i].set(action.astype(buf.a.dtype)),
+                r=buf.r.at[lane, i].set(reward.astype(buf.r.dtype)),
+                s2=buf.s2.at[lane, i].set(s2_row.astype(buf.s2.dtype)),
+                next_slot=(i + 1) % capacity,
+                size=jnp.minimum(buf.size + 1, capacity))
+
+        if do_updates:
+            ks = jax.vmap(jax.random.split)(carry.learn_key)
+            learn_key, k = ks[:, 0], ks[:, 1]
+            learn_in = fusion_barrier((carry.ddpg, buf, k))
+            dbuf = learn_in[1]
+            if shared:
+                # every member learner samples its own minibatches from the
+                # MERGED window: data broadcast, state/key batched
+                data = (dbuf.s, dbuf.a, dbuf.r, dbuf.s2)
+                ddpg, _ = fusion_barrier(jax.vmap(
+                    lambda st, kk: _learn_scan(
+                        st, data, dbuf.size, kk, cfg, actor_tx, critic_tx,
+                        num_updates, kernel_mode=kernel_mode)
+                )(learn_in[0], learn_in[2]))
+            else:
+                ddpg, _ = fusion_barrier(jax.vmap(
+                    lambda st, d, sz, kk: _learn_scan(
+                        st, d, sz, kk, cfg, actor_tx, critic_tx,
+                        num_updates, kernel_mode=kernel_mode)
+                )(learn_in[0], (dbuf.s, dbuf.a, dbuf.r, dbuf.s2),
+                  dbuf.size, learn_in[2]))
+        else:
+            learn_key, ddpg = carry.learn_key, carry.ddpg
+
+        if averaging:
+            # masked cell mean, applied when the host-computed cadence
+            # fires; active-weighted so padding lanes contribute nothing
+            w = active.astype(jnp.float32)
+            denom = jnp.maximum(jnp.sum(w), jnp.float32(1.0))
+            do_avg = avg_now[0]
+
+            def cell_mean(leaf):
+                if not jnp.issubdtype(leaf.dtype, jnp.floating):
+                    return leaf  # Adam step counts etc. stay per-session
+                wf = w.reshape((cs,) + (1,) * (leaf.ndim - 1))
+                m = jnp.sum(leaf * wf, axis=0) / denom
+                return jnp.where(do_avg, jnp.broadcast_to(m, leaf.shape),
+                                 leaf)
+
+            def avg_tree(tree):
+                return jax.tree_util.tree_map(cell_mean, tree)
+
+            ddpg = ddpg._replace(
+                actor=avg_tree(ddpg.actor), critic=avg_tree(ddpg.critic),
+                actor_targ=avg_tree(ddpg.actor_targ),
+                critic_targ=avg_tree(ddpg.critic_targ))
+            if sharing.avg_opt_state:
+                ddpg = ddpg._replace(actor_opt=avg_tree(ddpg.actor_opt),
+                                     critic_opt=avg_tree(ddpg.critic_opt))
+
+        carry = EpisodeCarry(env_state, ddpg, buf, learn_key, norm, obj)
+        return carry, EpisodeTrace(action_idx, metrics_vec, reward, obj,
+                                   _encode_restart(restart))
+
+    def cell_episode(params, w_vec, lo, span, carry, xs):
+        body = functools.partial(one_step, params, w_vec, lo, span)
+        return jax.lax.scan(body, carry, xs)
+
+    return cell_episode
+
+
+def _build_cell_fleet_episode(step_fn, space, cfg, actor_tx, critic_tx,
+                              learn, num_updates, kernel_mode, sharing,
+                              cell_size: int, obs_mask, devices):
+    """The sharing fleet program: cells vmapped over the group axis, wrapped
+    so callers keep the session-leading calling convention.
+
+    The wrapper takes the SAME operand layout as the off-path fleet program
+    — every leaf session-leading [C, ...] — except the replay buffer, which
+    under shared replay is cell-granular ([C/cs, capacity, ...] with [C/cs]
+    cursors). Sharding (when requested) partitions the GROUP axis, so a
+    cell never spans devices and the cell mean needs no cross-device
+    collective."""
+    cs = int(cell_size)
+    shared = bool(sharing.shared_replay)
+    cell = _build_cell_episode(step_fn, space, cfg, actor_tx, critic_tx,
+                               learn, num_updates, kernel_mode, sharing,
+                               cs, obs_mask)
+    gmapped = jax.vmap(cell, in_axes=(0, 0, 0, 0, 0, (0, 0, 0, 0, 0)))
+    if devices is not None and len(devices) > 1:
+        from jax.sharding import Mesh, PartitionSpec as P
+        try:
+            from jax.experimental.shard_map import shard_map
+        except ImportError:  # newer jax
+            from jax import shard_map
+        mesh = Mesh(np.array(devices), ("session",))
+        gmapped = shard_map(
+            gmapped, mesh=mesh,
+            in_specs=(P("session"), P("session"), P("session"),
+                      P("session"), P("session"),
+                      (P("session"), P("session"), P("session"),
+                       P("session"), P("session"))),
+            out_specs=P("session"), check_rep=False)
+
+    def episode(params, w_vec, lo, span, carry, xs):
+        n = carry.state_vec.shape[0]
+        assert n % cs == 0, (n, cs)
+        g = n // cs
+        gt = jax.tree_util.tree_map
+
+        def group(x):  # [n, ...] -> [g, cs, ...]
+            return x.reshape((g, cs) + x.shape[1:])
+
+        def group_xs(x):  # [n, T, ...] -> [g, T, cs, ...]
+            return jnp.swapaxes(group(x), 1, 2)
+
+        def ungroup(x):
+            return x.reshape((n,) + x.shape[2:])
+
+        buf = carry.buffer if shared else gt(group, carry.buffer)
+        gcarry = EpisodeCarry(
+            env_state=gt(group, carry.env_state),
+            ddpg=gt(group, carry.ddpg), buffer=buf,
+            learn_key=group(carry.learn_key),
+            state_vec=group(carry.state_vec),
+            objective=group(carry.objective))
+        out_carry, trace = gmapped(gt(group, params), group(w_vec),
+                                   group(lo), group(span), gcarry,
+                                   gt(group_xs, xs))
+        obuf = (out_carry.buffer if shared
+                else gt(ungroup, out_carry.buffer))
+        out_carry = EpisodeCarry(
+            env_state=gt(ungroup, out_carry.env_state),
+            ddpg=gt(ungroup, out_carry.ddpg), buffer=obuf,
+            learn_key=ungroup(out_carry.learn_key),
+            state_vec=ungroup(out_carry.state_vec),
+            objective=ungroup(out_carry.objective))
+
+        def ungroup_trace(x):  # [g, T, cs, ...] -> [n, T, ...]
+            y = jnp.swapaxes(x, 1, 2)
+            return y.reshape((n,) + y.shape[2:])
+
+        return out_carry, gt(ungroup_trace, trace)
+
+    return episode
+
+
 _EPISODE_CACHE: dict = {}
 
 
 def _compiled_episode(step_fn, space, cfg, actor_tx, critic_tx, learn,
                       num_updates, fleet: bool, devices: Optional[tuple],
-                      policy=None):
+                      policy=None, sharing=None, cell_size: int = 1,
+                      obs_mask=None):
     """Jitted (and optionally vmapped + shard_mapped) episode, cached so
     repeated ``run()`` calls and same-space fleets reuse one compilation.
     The learner kernel mode is part of the cache key: flipping
@@ -271,19 +531,44 @@ def _compiled_episode(step_fn, space, cfg, actor_tx, critic_tx, learn,
     shape: the chunked fleet runner always calls it at the fixed chunk shape
     ``[C, ...]``, so the underlying jit cache holds a single executable per
     (chunk, steps) bucket — ``fn._cache_size()`` counts them."""
+    from repro.core.sharing import normalize_sharing
     from repro.kernels import ops
 
     kernel_mode = ops.ddpg_kernel_mode()
+    sharing = normalize_sharing(sharing)
+    cell = sharing is not None and (sharing.shared_replay
+                                    or sharing.averaging)
+    if not cell:
+        cell_size = 1
+    obs_mask = None if obs_mask is None else tuple(
+        float(v) for v in obs_mask)
     # policy joins the key: a DeploymentPolicy is hashable and baked into the
     # guarded build; policy=None keys (and builds) the exact unguarded
-    # program, so guardrails-off tuners share one executable with pre-PR code
+    # program, so guardrails-off tuners share one executable with pre-PR
+    # code. sharing/cell_size/obs_mask normalize to (None, 1, None) when
+    # every sharing mode is off, so sharing-off keys — and IS, by executable
+    # identity — the exact same cached program.
     key = (step_fn, space, cfg, actor_tx, critic_tx, learn, num_updates,
-           fleet, devices, kernel_mode, policy)
+           fleet, devices, kernel_mode, policy, sharing, cell_size, obs_mask)
     if key in _EPISODE_CACHE:
         return _EPISODE_CACHE[key]
+    if policy is not None and sharing is not None:
+        raise ValueError(
+            "experience sharing does not compose with DeploymentPolicy "
+            "guardrails (the guarded step owns its own observe/learn path); "
+            "run guarded fleets with sharing off")
+    if cell and not fleet:
+        raise ValueError("cell experience sharing requires the fleet engine")
+    if cell:
+        episode = _build_cell_fleet_episode(
+            step_fn, space, cfg, actor_tx, critic_tx, learn, num_updates,
+            kernel_mode, sharing, cell_size, obs_mask, devices)
+        fn = jax.jit(episode, donate_argnums=(4,))
+        _EPISODE_CACHE[key] = fn
+        return fn
     episode = _build_episode(step_fn, space, cfg, actor_tx, critic_tx, learn,
                              num_updates, kernel_mode=kernel_mode,
-                             policy=policy)
+                             policy=policy, obs_mask=obs_mask)
     if fleet:
         # session axis: params/w_vec/lo/span/carry stacked; xs — including
         # the warmup mask — are per-session so sessions of DIFFERENT ages
@@ -347,7 +632,7 @@ def _decode_trace(trace) -> EpisodeTrace:
 
 
 def run_episode_scan(env, agent, scalarizer, cur_metrics: dict, steps: int,
-                 learn: bool = True, policy=None, guard=None):
+                 learn: bool = True, policy=None, guard=None, obs_mask=None):
     """Run ``steps`` fused tuning iterations for one session.
 
     ``env`` must be a ``ModelEnv``. Mutates ``env`` (model state, last
@@ -390,7 +675,8 @@ def run_episode_scan(env, agent, scalarizer, cur_metrics: dict, steps: int,
     fn = _compiled_episode(model.step_fn, env.param_space, agent.cfg,
                            agent._actor_tx, agent._critic_tx, learn,
                            agent.cfg.updates_per_step,
-                           fleet=False, devices=None, policy=policy)
+                           fleet=False, devices=None, policy=policy,
+                           obs_mask=obs_mask)
     carry, trace = fn(model.params, jnp.asarray(w_vec), jnp.asarray(lo),
                       jnp.asarray(span), carry, xs)
 
@@ -512,7 +798,8 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
                        cur_metrics: Sequence, steps: int, learn: bool = True,
                        devices: Optional[Sequence] = None,
                        chunk: Optional[int] = None,
-                       overlap: bool = True, policy=None, guard=None):
+                       overlap: bool = True, policy=None, guard=None,
+                       sharing=None, cell_size: int = 1, obs_mask=None):
     """Fleet variant: N sessions' episodes streamed through one compiled
     chunk program. Trace leaves are [N, T, ...] host numpy arrays.
 
@@ -537,7 +824,22 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
     stacked [N, ...] ``GuardState`` (``init_fleet_guard_state``); the guard
     rides the chunk carry like all fleet state and the return value becomes
     ``(GuardedEpisodeTrace, GuardState)``.
+
+    ``sharing``/``cell_size``/``obs_mask`` enable cross-session experience
+    sharing (``core.sharing``): sessions [i*cs, (i+1)*cs) form cell i.
+    Cells never span chunks — the chunk size is rounded up to a cell
+    multiple — so the cell program's state is self-contained per chunk and
+    chunking stays pure scheduling. With shared replay the agent's buffer
+    must be grouped (``BatchedReplayBuffer(groups=...)``); its cell-level
+    storage is staged and drained at group granularity.
     """
+    from repro.core.sharing import normalize_sharing
+
+    sharing = normalize_sharing(sharing)
+    cell = sharing is not None and (sharing.shared_replay
+                                    or sharing.averaging)
+    cs = int(cell_size) if cell else 1
+    shared_replay = cell and sharing.shared_replay
     models = [e.model for e in envs]
     step_fns = {m.step_fn for m in models}
     if len(step_fns) != 1:
@@ -549,6 +851,16 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
     devices = tuple(devices) if devices else None
     ndev = len(devices) if devices else 1
     c = resolve_chunk(n, chunk, ndev)
+    if cell:
+        if n % cs != 0:
+            raise ValueError(
+                f"experience sharing needs whole cells: {n} sessions is not "
+                f"a multiple of cell_size={cs}")
+        # cells never span chunks: round the chunk up to a cell multiple
+        # (and keep the device-count multiple resolve_chunk established)
+        step_mult = cs * ndev if ndev > 1 else cs
+        c = int(math.ceil(c / step_mult) * step_mult)
+        c = min(c, int(math.ceil(n / step_mult) * step_mult))
     num_chunks = -(-n // c)
     pad_total = num_chunks * c - n
     # no padded session's work exceeds one chunk: padding exists only to
@@ -576,10 +888,22 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
                            for sc, mtr in zip(scalarizers, cur_metrics)],
                           np.float32)
 
-    (bs, ba, br, bs2), sizes = agent.buffer.storage()
-    buf_np = tuple(np.array(x) for x in (bs, ba, br, bs2))
-    next_slots = np.full((n,), agent.buffer._next, np.int32)
-    sizes = np.array(sizes, np.int32)
+    if shared_replay:
+        # cell-level storage: [G, capacity, ...] arrays + per-group cursors,
+        # staged/drained at group granularity (cells never span chunks)
+        if agent.buffer.groups is None:
+            raise ValueError(
+                "shared replay needs a grouped BatchedReplayBuffer "
+                "(FleetAgent(..., replay_groups=...))")
+        (bs, ba, br, bs2), next_slots, sizes = agent.buffer.grouped_storage()
+        buf_np = tuple(np.array(x) for x in (bs, ba, br, bs2))
+        next_slots = np.asarray(next_slots, np.int32)
+        sizes = np.asarray(sizes, np.int32)
+    else:
+        (bs, ba, br, bs2), sizes = agent.buffer.storage()
+        buf_np = tuple(np.array(x) for x in (bs, ba, br, bs2))
+        next_slots = np.full((n,), agent.buffer._next, np.int32)
+        sizes = np.array(sizes, np.int32)
     learn_keys = np.array(agent._learn_keys)
 
     s0 = agent.steps_taken
@@ -594,6 +918,17 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
         else:
             noise[:, t] = np.stack([nz() for nz in agent.noises])
     agent.steps_taken += steps
+
+    if cell:
+        # host-computed sharing inputs: the averaging cadence fires on the
+        # fleet's shared step clock (so it survives chunking and progressive
+        # runs), and every real session is active (padding lanes replicate
+        # whole cells and are sliced off before anything reads them)
+        avg_now = np.zeros((n, steps), bool)
+        if sharing.averaging:
+            for t in range(steps):
+                avg_now[:, t] = ((s0 + t + 1) % sharing.avg_every) == 0
+        active = np.ones((n, steps), bool)
 
     # -- preallocated host trace buffers (the stream targets) ---------------
     base_fields = dict(
@@ -620,7 +955,8 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
     fn = _compiled_episode(models[0].step_fn, space, agent.cfg,
                            agent._actor_tx, agent._critic_tx, learn,
                            agent.cfg.updates_per_step,
-                           fleet=True, devices=devices, policy=policy)
+                           fleet=True, devices=devices, policy=policy,
+                           sharing=sharing, cell_size=cs, obs_mask=obs_mask)
 
     peak = [live_device_bytes()]
 
@@ -632,17 +968,29 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
             return jax.tree_util.tree_map(
                 lambda x: jax.device_put(_pad_rows(x[a:b], pad)), tree)
 
+        def group_chunk_of(tree):
+            # cell-granular slice: chunk ci covers whole groups
+            ga, gb = a // cs, b // cs
+            gpad = pad // cs
+            return jax.tree_util.tree_map(
+                lambda x: jax.device_put(_pad_rows(x[ga:gb], gpad)), tree)
+
+        buf_of = group_chunk_of if shared_replay else chunk_of
         carry = EpisodeCarry(
             env_state=chunk_of(env_states),
             ddpg=chunk_of(ddpg_states),
             buffer=BufferState(
-                s=chunk_of(buf_np[0]), a=chunk_of(buf_np[1]),
-                r=chunk_of(buf_np[2]), s2=chunk_of(buf_np[3]),
-                next_slot=chunk_of(next_slots), size=chunk_of(sizes)),
+                s=buf_of(buf_np[0]), a=buf_of(buf_np[1]),
+                r=buf_of(buf_np[2]), s2=buf_of(buf_np[3]),
+                next_slot=buf_of(next_slots), size=buf_of(sizes)),
             learn_key=chunk_of(learn_keys),
             state_vec=chunk_of(state_vecs),
             objective=chunk_of(objectives))
-        xs = (chunk_of(use_warmup), chunk_of(warmup), chunk_of(noise))
+        if cell:
+            xs = (chunk_of(use_warmup), chunk_of(warmup), chunk_of(noise),
+                  chunk_of(avg_now), chunk_of(active))
+        else:
+            xs = (chunk_of(use_warmup), chunk_of(warmup), chunk_of(noise))
         if policy is not None:
             carry = GuardedCarry(base=carry, guard=chunk_of(guard))
         return (chunk_of(params), chunk_of(w_vec), chunk_of(lo),
@@ -684,12 +1032,22 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
             carry = carry.base
         write_back(env_states, carry.env_state)
         write_back(ddpg_states, carry.ddpg)
-        write_back(buf_np[0], carry.buffer.s)
-        write_back(buf_np[1], carry.buffer.a)
-        write_back(buf_np[2], carry.buffer.r)
-        write_back(buf_np[3], carry.buffer.s2)
-        next_slots[a:b] = np.asarray(carry.buffer.next_slot)[:cnt]
-        sizes[a:b] = np.asarray(carry.buffer.size)[:cnt]
+        if shared_replay:
+            # cell-granular write-back: the chunk carried whole groups
+            ga, gb = a // cs, b // cs
+            gcnt = gb - ga
+            for dst, src in zip(buf_np, (carry.buffer.s, carry.buffer.a,
+                                         carry.buffer.r, carry.buffer.s2)):
+                dst[ga:gb] = np.asarray(src)[:gcnt]
+            next_slots[ga:gb] = np.asarray(carry.buffer.next_slot)[:gcnt]
+            sizes[ga:gb] = np.asarray(carry.buffer.size)[:gcnt]
+        else:
+            write_back(buf_np[0], carry.buffer.s)
+            write_back(buf_np[1], carry.buffer.a)
+            write_back(buf_np[2], carry.buffer.r)
+            write_back(buf_np[3], carry.buffer.s2)
+            next_slots[a:b] = np.asarray(carry.buffer.next_slot)[:cnt]
+            sizes[a:b] = np.asarray(carry.buffer.size)[:cnt]
         learn_keys[a:b] = np.asarray(carry.learn_key)[:cnt]
 
     stream_chunks(call, stage, drain, num_chunks, overlap=overlap)
@@ -698,13 +1056,16 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
     _LAST_FLEET_STATS.update(
         sessions=n, chunk=c, num_chunks=num_chunks, overlap=overlap,
         padded_sessions=pad_total, peak_device_bytes=peak[0],
-        executable_cache_size=fn._cache_size(), program=fn)
+        executable_cache_size=fn._cache_size(), program=fn,
+        cell_size=cs, sharing=sharing)
 
     for e, st in zip(envs, _unstack(env_states, n)):
         e.model_state = st
     agent.states = ddpg_states
     agent._learn_keys = jnp.asarray(learn_keys)
-    if learn:
+    if learn and shared_replay:
+        agent.buffer.set_storage(*buf_np, next_slots, sizes)
+    elif learn:
         agent.buffer.set_storage(*buf_np, int(next_slots[0]), int(sizes[0]))
     if policy is not None:
         return out, guard

@@ -70,7 +70,7 @@ class FleetAgent:
     def __init__(self, cfg: DDPGConfig, seeds: Sequence[int],
                  buffer_capacity: int = 64, warmup_steps: int = 8,
                  store: str = "device", replay_dtype=jnp.float32,
-                 init_chunk: Optional[int] = None):
+                 init_chunk: Optional[int] = None, replay_groups=None):
         if not seeds:
             raise ValueError("need at least one session seed")
         if store not in ("device", "host"):
@@ -95,10 +95,14 @@ class FleetAgent:
         else:
             self.states, (self._actor_tx, self._critic_tx) = fleet_init(
                 jnp.stack(keys), cfg)
+        # replay_groups (one cell id per session) merges each cell's replay
+        # into a single shared FIFO window — see core.sharing / the grouped
+        # BatchedReplayBuffer. None keeps N independent buffers (default).
         self.buffer = BatchedReplayBuffer(
             self.num_sessions, buffer_capacity, cfg.state_dim, cfg.action_dim,
             storage_dtype=replay_dtype,
-            storage_backend="host" if store == "host" else "device")
+            storage_backend="host" if store == "host" else "device",
+            groups=replay_groups)
         self.noises = [OUNoise(cfg.action_dim, seed=s + 1) for s in self.seeds]
         self._learn_keys = jnp.stack(
             [jax.random.PRNGKey(s + 3) for s in self.seeds])
@@ -250,7 +254,8 @@ class FleetTuner:
                  vectorized: Optional[bool] = None, engine: str = "host",
                  devices: Optional[Sequence] = None,
                  chunk: Optional[int] = None, overlap: bool = True,
-                 policy=None):
+                 policy=None, sharing=None, cell_size: int = 1):
+        from repro.core.sharing import normalize_sharing
         if not (len(envs) == len(scalarizers) == agent.num_sessions):
             raise ValueError("envs, scalarizers and agent sessions must align")
         if engine not in ("host", "scan"):
@@ -259,6 +264,29 @@ class FleetTuner:
             raise ValueError(
                 "DeploymentPolicy guardrails run inside the episode scan; "
                 "use engine='scan' (the host loop has no shadow/canary body)")
+        sharing = normalize_sharing(sharing)
+        if sharing is not None and engine != "scan":
+            raise ValueError(
+                "experience sharing runs inside the episode scan; use "
+                "engine='scan' (the host loop keeps sessions independent)")
+        if sharing is not None and policy is not None:
+            raise ValueError(
+                "experience sharing does not compose with DeploymentPolicy "
+                "guardrails; run guarded fleets with sharing off")
+        cell_modes = sharing is not None and (sharing.shared_replay
+                                              or sharing.averaging)
+        self.cell_size = int(cell_size) if cell_modes else 1
+        if cell_modes and len(envs) % self.cell_size != 0:
+            raise ValueError(
+                f"experience sharing needs whole cells: {len(envs)} sessions "
+                f"is not a multiple of cell_size={self.cell_size}")
+        if (sharing is not None and sharing.shared_replay
+                and agent.buffer.groups is None):
+            raise ValueError(
+                "shared replay needs a grouped replay buffer — build the "
+                "fleet with from_grid(sharing=...) or pass "
+                "FleetAgent(..., replay_groups=...)")
+        self.sharing = sharing
         if engine == "scan" and any(getattr(e, "model", None) is None
                                     for e in envs):
             raise ValueError(
@@ -283,6 +311,10 @@ class FleetTuner:
         self.envs = list(envs)
         self.scalarizers = list(scalarizers)
         self.agent = agent
+        from repro.core.sharing import resolve_obs_mask
+        self._obs_mask = resolve_obs_mask(
+            self.sharing, self.envs[0].metric_specs,
+            self.envs[0].state_metrics)
         self.eval_runs = eval_runs
         self.labels = list(labels) if labels else [
             f"session{i}" for i in range(len(self.envs))]
@@ -316,7 +348,8 @@ class FleetTuner:
                   engine: str = "host",
                   devices: Optional[Sequence] = None,
                   chunk: Optional[int] = None, overlap: bool = True,
-                  replay_dtype=jnp.float32, policy=None) -> "FleetTuner":
+                  replay_dtype=jnp.float32, policy=None,
+                  sharing=None) -> "FleetTuner":
         """Build a fleet for the full seeds x workloads x objectives grid.
 
         ``env_factory(workload, seed)`` defaults to ``env_cls(workload,
@@ -348,7 +381,19 @@ class FleetTuner:
         ``policy`` (``core.guardrails.DeploymentPolicy``) turns on the
         shadow/canary guardrails for every session (scan engine only;
         default off — bitwise the unguarded fleet).
+
+        ``sharing`` (``core.sharing.SharingConfig``) turns on cross-session
+        experience sharing within each workload×objective CELL — the
+        ``len(seeds)`` contiguous sessions that tune the same surface under
+        different seeds (scan engine only; default off — bitwise the
+        independent fleet, same compiled program). ``shared_replay`` merges
+        each cell's replay into one window (the agent's buffer is built
+        grouped), ``avg_every`` averages the cell's learner parameters
+        periodically, ``observation_scopes`` masks the learners'
+        observations to the named metric scopes.
         """
+        from repro.core.sharing import normalize_sharing
+        sharing = normalize_sharing(sharing)
         if env_factory is not None and env_cls is not None:
             raise ValueError(
                 "pass env_factory OR env_cls, not both — env_cls would be "
@@ -397,15 +442,24 @@ class FleetTuner:
             raise ValueError(
                 "empty grid: need at least one workload, objective and seed")
         cfg = ddpg_config or DDPGConfig.for_env(envs[0])
+        # seeds iterate innermost, so a workload×objective cell is exactly
+        # len(seeds) contiguous sessions — the sharing cell topology
+        cell_size = len(list(seeds))
+        cell_modes = sharing is not None and (sharing.shared_replay
+                                              or sharing.averaging)
+        replay_groups = None
+        if sharing is not None and sharing.shared_replay:
+            replay_groups = [i // cell_size for i in range(len(envs))]
         agent = FleetAgent(cfg, cell_seeds, buffer_capacity=buffer_capacity,
                            warmup_steps=warmup_steps,
                            store="host" if engine == "scan" else "device",
                            replay_dtype=replay_dtype,
-                           init_chunk=chunk)
+                           init_chunk=chunk, replay_groups=replay_groups)
         return cls(envs, scals, agent, eval_runs=eval_runs, labels=labels,
                    engine=engine, devices=devices if engine == "scan" else None,
                    chunk=chunk if engine == "scan" else None, overlap=overlap,
-                   policy=policy)
+                   policy=policy, sharing=sharing,
+                   cell_size=cell_size if cell_modes else 1)
 
     # ------------------------------------------------------------------
 
@@ -422,13 +476,16 @@ class FleetTuner:
             env_state_bytes = sum(
                 int(np.asarray(leaf).nbytes) for leaf in
                 jax.tree_util.tree_leaves(self.envs[0].model_state))
+        shared_cell = (self.cell_size
+                       if self.agent.buffer.groups is not None else 1)
         plan = memory_plan(
             self.agent.cfg, self.envs[0].param_space, sessions=n,
             steps=steps, chunk=self.chunk,
             capacity=self.agent.buffer.capacity,
             replay_dtype=self.agent.buffer.storage_dtype,
             num_devices=len(self.devices) if self.devices else 1,
-            env_state_bytes_per_session=env_state_bytes)
+            env_state_bytes_per_session=env_state_bytes,
+            cell_size=shared_cell)
         live_learner = sum(
             int(np.asarray(leaf).nbytes) for leaf in
             jax.tree_util.tree_leaves(self.agent.states)) // n
@@ -529,7 +586,8 @@ class FleetTuner:
             trace = run_fleet_episode_scan(
                 self.envs, self.agent, self.scalarizers, self._cur_metrics,
                 steps, learn=True, devices=self.devices, chunk=self.chunk,
-                overlap=self.overlap)
+                overlap=self.overlap, sharing=self.sharing,
+                cell_size=self.cell_size, obs_mask=self._obs_mask)
         per_step = (time.perf_counter() - t0) / max(1, steps)
 
         for i in range(n_sessions):
@@ -647,7 +705,8 @@ class FleetTuner:
 def memory_plan(cfg: DDPGConfig, space, *, sessions: int, steps: int,
                 chunk: Optional[int] = None, capacity: int = 64,
                 replay_dtype=np.float32, num_devices: int = 1,
-                env_state_bytes_per_session: int = 0) -> dict:
+                env_state_bytes_per_session: int = 0,
+                cell_size: int = 1) -> dict:
     """Bytes-per-session capacity accounting for the chunked fleet runtime.
 
     Everything is derived from the shapes the runtime actually allocates:
@@ -657,6 +716,9 @@ def memory_plan(cfg: DDPGConfig, space, *, sessions: int, steps: int,
         actor + critic parameter floats, plus the step/Adam counters;
       * ``replay_bytes`` — ``capacity × (2·state_dim + action_dim + 1)``
         entries at the replay storage dtype (f32 default, bf16 opt-in);
+        ``cell_size > 1`` models MERGED cell buffers (shared replay — see
+        ``core.sharing``): a cell of k sessions keeps one window, so bytes
+        per session divide by k, multiplying the bf16 win;
       * ``trace_bytes_per_step`` — the compact trace: per-knob index ints
         (``ParamSpace.index_dtype``), the float32 metric vector,
         reward/objective floats and the int32 fixed-point restart;
@@ -685,7 +747,13 @@ def memory_plan(cfg: DDPGConfig, space, *, sessions: int, steps: int,
     # plus the learner step counter and one Adam count per optimizer (i32)
     learner_bytes = 4 * (actor + critic) * 4 + 3 * 4
     itemsize = np.dtype(replay_dtype).itemsize
-    replay_bytes = capacity * (2 * k + m + 1) * itemsize
+    if cell_size > 1 and sessions % cell_size != 0:
+        raise ValueError(
+            f"merged cell buffers need whole cells: {sessions} sessions is "
+            f"not a multiple of cell_size={cell_size}")
+    # a cell's single merged window, amortized over its members; floor
+    # division matches the live accounting (buffer.nbytes // sessions)
+    replay_bytes = capacity * (2 * k + m + 1) * itemsize // cell_size
     idx_size = space.index_dtype().itemsize
     trace_bytes_per_step = m * idx_size + k * 4 + 4 + 4 + 4
     exploration_bytes_per_step = 2 * m * 4  # warmup + noise rows, f32
@@ -704,6 +772,7 @@ def memory_plan(cfg: DDPGConfig, space, *, sessions: int, steps: int,
         "chunk": c,
         "steps": steps,
         "capacity": capacity,
+        "cell_size": cell_size,
         "replay_dtype": str(np.dtype(replay_dtype)),
         "per_session": {
             "learner_bytes": learner_bytes,

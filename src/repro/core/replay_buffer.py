@@ -121,11 +121,22 @@ class BatchedReplayBuffer:
     post-gather cast), never accumulated in bf16. Opt-in because storage
     rounding changes learning trajectories: fleet-of-1 parity with the single
     ``Tuner`` holds only at the f32 default.
+
+    ``groups`` (optional, one group id per session, group-contiguous and
+    numbered 0..G-1) merges the member sessions of each group into ONE shared
+    FIFO window: storage shrinks from [N, capacity, ...] to [G, capacity,
+    ...], each ``add`` appends every member's transition (in session order)
+    to its group's window, and each session samples uniformly from the whole
+    merged window — a cell of k sessions keeps 1 buffer instead of k and
+    every learner sees k× the transitions per env step. Cursors become
+    per-group arrays; sampling stays one fused gather per storage array over
+    the flattened [G*capacity, ...] view. ``groups=None`` (the default) is
+    byte-for-byte the independent-buffer path above.
     """
 
     def __init__(self, num_sessions: int, capacity: int, state_dim: int,
                  action_dim: int, storage_dtype=jnp.float32,
-                 storage_backend: str = "device"):
+                 storage_backend: str = "device", groups=None):
         if capacity <= 0:
             raise ValueError("capacity must be positive")
         if num_sessions <= 0:
@@ -136,16 +147,44 @@ class BatchedReplayBuffer:
         self.capacity = capacity
         self.storage_dtype = np.dtype(storage_dtype)
         self.storage_backend = storage_backend
+        self.groups = None if groups is None else tuple(
+            int(g) for g in groups)
+        if self.groups is None:
+            rows = num_sessions
+        else:
+            if len(self.groups) != num_sessions:
+                raise ValueError("groups must name one group per session")
+            gids = np.asarray(self.groups, np.int32)
+            num_groups = int(gids.max()) + 1 if num_sessions else 0
+            if sorted(set(self.groups)) != list(range(num_groups)):
+                raise ValueError("group ids must be consecutive from 0")
+            if np.any(np.diff(gids) < 0):
+                # the chunked scan engine slices cell-aligned session ranges
+                # out of storage; sessions of a group must sit together
+                raise ValueError("groups must be contiguous session runs")
+            self.num_groups = num_groups
+            self._gids = gids
+            # rank of each session within its group = its append order
+            self._grank = np.concatenate(
+                [np.arange(c) for c in np.bincount(gids)]).astype(np.int32)
+            self._gcounts = np.bincount(gids).astype(np.int32)
+            rows = num_groups
         zeros = np.zeros if storage_backend == "host" else jnp.zeros
         dt = self.storage_dtype
-        self._s = zeros((num_sessions, capacity, state_dim), dt)
-        self._a = zeros((num_sessions, capacity, action_dim), dt)
-        self._r = zeros((num_sessions, capacity), dt)
-        self._s2 = zeros((num_sessions, capacity, state_dim), dt)
-        self._next = 0
-        self._size = 0
+        self._s = zeros((rows, capacity, state_dim), dt)
+        self._a = zeros((rows, capacity, action_dim), dt)
+        self._r = zeros((rows, capacity), dt)
+        self._s2 = zeros((rows, capacity, state_dim), dt)
+        if self.groups is None:
+            self._next = 0
+            self._size = 0
+        else:
+            self._next = np.zeros((rows,), np.int32)
+            self._size = np.zeros((rows,), np.int32)
 
     def __len__(self) -> int:
+        if self.groups is not None:
+            return int(self._size.max()) if self.num_groups else 0
         return self._size
 
     @property
@@ -156,8 +195,30 @@ class BatchedReplayBuffer:
 
     def add(self, state, action, reward, next_state) -> None:
         """Add one transition per session; each argument is [N, ...]."""
-        i = self._next
         dt = self.storage_dtype
+        if self.groups is not None:
+            # each member appends to its group's merged window, in session
+            # order: session with rank j lands at slot (next[g] + j) % cap
+            slots = (self._next[self._gids] + self._grank) % self.capacity
+            vals = tuple(
+                np.asarray(x, jnp.float32).astype(dt)
+                if self.storage_backend == "host"
+                else jnp.asarray(x, jnp.float32).astype(dt)
+                for x in (state, action, reward, next_state))
+            if self.storage_backend == "host":
+                for buf, v in zip((self._s, self._a, self._r, self._s2),
+                                  vals):
+                    buf[self._gids, slots] = v
+            else:
+                self._s = self._s.at[self._gids, slots].set(vals[0])
+                self._a = self._a.at[self._gids, slots].set(vals[1])
+                self._r = self._r.at[self._gids, slots].set(vals[2])
+                self._s2 = self._s2.at[self._gids, slots].set(vals[3])
+            self._next = (self._next + self._gcounts) % self.capacity
+            self._size = np.minimum(self._size + self._gcounts,
+                                    self.capacity).astype(np.int32)
+            return
+        i = self._next
         if self.storage_backend == "host":
             self._s[:, i] = np.asarray(state, jnp.float32).astype(dt)
             self._a[:, i] = np.asarray(action, jnp.float32).astype(dt)
@@ -182,22 +243,51 @@ class BatchedReplayBuffer:
 
         Arrays come back in the storage dtype and backend (bf16 stays bf16;
         host mode returns numpy views) — the fused learner casts minibatches
-        to f32 after gathering them."""
+        to f32 after gathering them. Grouped buffers hand each session a view
+        of its group's MERGED window (the per-session expansion ``x[gids]``),
+        so the vmapped learner transparently samples shared experience."""
+        if self.groups is not None:
+            gids = self._gids
+            arrays = tuple(x[gids] for x in (self._s, self._a, self._r,
+                                             self._s2))
+            if self.storage_backend == "host":
+                sizes = self._size[gids].copy()
+            else:
+                sizes = jnp.asarray(self._size[gids], jnp.int32)
+            return arrays, sizes
         full = np.full if self.storage_backend == "host" else jnp.full
         sizes = full((self.num_sessions,), self._size, jnp.int32)
         return (self._s, self._a, self._r, self._s2), sizes
 
-    def set_storage(self, s, a, r, s2, next_slot: int, size: int) -> None:
+    def grouped_storage(self):
+        """((s, a, r, s2) [G, capacity, ...] arrays, next [G], size [G]).
+
+        The un-expanded cell-level view the chunked scan engine stages from
+        and drains back to (cells never span chunks, so a chunk's slice is a
+        whole number of groups). Only valid on grouped buffers."""
+        if self.groups is None:
+            raise ValueError("grouped_storage() requires groups=")
+        return ((self._s, self._a, self._r, self._s2),
+                self._next.copy(), self._size.copy())
+
+    def set_storage(self, s, a, r, s2, next_slot, size) -> None:
         """Write back storage mutated off-host (fused fleet episodes advance
-        the lockstep FIFO on-device and sync the shared cursor here)."""
+        the lockstep FIFO on-device and sync the shared cursor here).
+        Grouped buffers take [G, ...] storage and per-group cursor arrays."""
         conv = np.asarray if self.storage_backend == "host" else jnp.asarray
         dt = self.storage_dtype
         self._s = conv(s, dt)
         self._a = conv(a, dt)
         self._r = conv(r, dt)
         self._s2 = conv(s2, dt)
-        self._next = int(next_slot)
-        self._size = int(size)
+        if self.groups is not None:
+            self._next = np.asarray(next_slot, np.int32).reshape(
+                (self.num_groups,))
+            self._size = np.asarray(size, np.int32).reshape(
+                (self.num_groups,))
+        else:
+            self._next = int(next_slot)
+            self._size = int(size)
 
     def sample(self, keys: jax.Array, batch_size: int):
         """Per-session uniform minibatches: keys [N, key] -> each [N, B, ...].
@@ -207,8 +297,26 @@ class BatchedReplayBuffer:
         draws, bitwise-identical batches. Minibatches are returned float32
         regardless of the storage dtype (f32 compute at gather).
         """
-        if self._size == 0:
+        if len(self) == 0:
             raise ValueError("cannot sample from an empty buffer")
+        if self.groups is not None:
+            sizes = jnp.asarray(self._size[self._gids], jnp.int32)
+            idx = jax.vmap(
+                lambda k, sz: jax.random.randint(k, (batch_size,), 0, sz)
+            )(keys, sizes)
+            # one fused gather over the flattened [G*capacity, ...] window:
+            # session n reads rows gids[n]*capacity + idx[n] of its group
+            flat_idx = (jnp.asarray(self._gids)[:, None] * self.capacity
+                        + idx)
+
+            def gather(x):
+                x = jnp.asarray(x)
+                flat = x.reshape((self.num_groups * self.capacity,)
+                                 + x.shape[2:])
+                return jnp.take(flat, flat_idx, axis=0).astype(jnp.float32)
+
+            return (gather(self._s), gather(self._a),
+                    gather(self._r), gather(self._s2))
         idx = jax.vmap(
             lambda k: jax.random.randint(k, (batch_size,), 0, self._size)
         )(keys)
@@ -224,12 +332,18 @@ class BatchedReplayBuffer:
                 gather(self._r), gather(self._s2))
 
     def as_arrays(self):
-        """Valid rows only, as float32 numpy: each [N, size, ...]."""
-        n = self._size
+        """Valid rows only, as float32 numpy: each [N or G, size, ...]."""
+        n = int(self._size.max()) if self.groups is not None else self._size
         return tuple(np.asarray(x[:, :n]).astype(np.float32)
                      for x in (self._s, self._a, self._r, self._s2))
 
     def state_dict(self) -> dict:
+        if self.groups is not None:
+            return {
+                "s": np.asarray(self._s), "a": np.asarray(self._a),
+                "r": np.asarray(self._r), "s2": np.asarray(self._s2),
+                "next": self._next.copy(), "size": self._size.copy(),
+            }
         return {
             "s": np.asarray(self._s), "a": np.asarray(self._a),
             "r": np.asarray(self._r), "s2": np.asarray(self._s2),
@@ -243,5 +357,11 @@ class BatchedReplayBuffer:
         self._a = conv(d["a"], dt)
         self._r = conv(d["r"], dt)
         self._s2 = conv(d["s2"], dt)
-        self._next = int(d["next"])
-        self._size = int(d["size"])
+        if self.groups is not None:
+            self._next = np.asarray(d["next"], np.int32).reshape(
+                (self.num_groups,))
+            self._size = np.asarray(d["size"], np.int32).reshape(
+                (self.num_groups,))
+        else:
+            self._next = int(d["next"])
+            self._size = int(d["size"])

@@ -127,9 +127,25 @@ class FleetService:
                  buffer_capacity: int = 64, warmup_steps: int = 8,
                  eval_runs: int = 3, overlap: bool = True,
                  checkpoint_dir: Optional[str] = None, keep: int = 3,
-                 policy=None):
+                 policy=None, sharing=None, cell_size: int = 1):
+        from repro.core.sharing import normalize_sharing
         if chunk <= 0:
             raise ValueError(f"chunk must be positive, got {chunk}")
+        sharing = normalize_sharing(sharing)
+        if sharing is not None and policy is not None:
+            raise ValueError(
+                "experience sharing does not compose with DeploymentPolicy "
+                "guardrails; run guarded services with sharing off")
+        cell_modes = sharing is not None and (sharing.shared_replay
+                                              or sharing.averaging)
+        cell_size = int(cell_size) if cell_modes else 1
+        if cell_modes:
+            if cell_size < 1:
+                raise ValueError(f"cell_size must be >= 1, got {cell_size}")
+            if chunk % cell_size != 0:
+                raise ValueError(
+                    f"chunk ({chunk}) must be a multiple of cell_size "
+                    f"({cell_size}) so cells never span chunk programs")
         if env_factory is not None and env_cls is not None:
             raise ValueError("pass env_factory OR env_cls, not both")
         if env_factory is None:
@@ -150,6 +166,18 @@ class FleetService:
         # service-wide DeploymentPolicy (core.guardrails); None = off,
         # bitwise the unguarded service
         self.policy = policy
+        # service-wide SharingConfig (core.sharing); None = off, bitwise
+        # (and by executable identity) the non-sharing service. Sessions
+        # with the same workload x objective bind into cells of up to
+        # ``cell_size`` seats at advance() boundaries; a cell's merged
+        # replay window and averaging clock live in ``_cells`` and die with
+        # its last member.
+        self.sharing = sharing
+        self.cell_size = cell_size
+        self._cell_modes = cell_modes
+        self._cells: dict = {}      # cell id -> {key, seats, steps, buf}
+        self._next_cell = 0
+        self._obs_mask = None       # resolved lazily from the first env
         self.total_steps = 0
         self._slots: list = []          # slot index -> sid or None (leases)
         self._sessions: dict = {}       # sid -> _Session (leased only)
@@ -280,6 +308,59 @@ class FleetService:
         for sess in self._join_queue:
             self._lease(sess)
         self._join_queue = []
+        if self._cell_modes:
+            self._bind_cells()
+
+    # -- cell topology (experience sharing) ----------------------------------
+
+    @staticmethod
+    def _cell_key(sess: _Session) -> tuple:
+        return (sess.workload, tuple(sorted(sess.weights.items())))
+
+    def _new_cell_buf(self) -> dict:
+        cap, k, m = self.buffer_capacity, self.cfg.state_dim, \
+            self.cfg.action_dim
+        return {"s": np.zeros((cap, k), np.float32),
+                "a": np.zeros((cap, m), np.float32),
+                "r": np.zeros((cap,), np.float32),
+                "s2": np.zeros((cap, k), np.float32),
+                "next": 0, "size": 0}
+
+    def _bind_cells(self) -> None:
+        """Re-bind cell membership at a boundary (sharing only).
+
+        A cell is ``cell_size`` seats keyed by (workload, objective):
+        departing sessions free their seat, joining sessions take the lowest
+        free seat of the lowest matching cell (or found a new cell). Seats —
+        not slots — fix a member's lane inside the cell program, so
+        surviving members keep their lane across churn. A cell whose last
+        member leaves is dropped WITH its merged replay window: experience
+        belongs to the tenants that generated it."""
+        for cid in sorted(self._cells):
+            rec = self._cells[cid]
+            rec["seats"] = [sid if sid in self._sessions else None
+                            for sid in rec["seats"]]
+            if all(sid is None for sid in rec["seats"]):
+                del self._cells[cid]
+        seated = {sid for rec in self._cells.values()
+                  for sid in rec["seats"] if sid is not None}
+        for sid in sorted(self._sessions):  # sid order: deterministic
+            if sid in seated:
+                continue
+            key = self._cell_key(self._sessions[sid])
+            for cid in sorted(self._cells):
+                rec = self._cells[cid]
+                if rec["key"] == key and None in rec["seats"]:
+                    rec["seats"][rec["seats"].index(None)] = sid
+                    break
+            else:
+                buf = (self._new_cell_buf()
+                       if self.sharing.shared_replay else None)
+                self._cells[self._next_cell] = {
+                    "key": key,
+                    "seats": [sid] + [None] * (self.cell_size - 1),
+                    "steps": 0, "buf": buf}
+                self._next_cell += 1
 
     def _session_guardrail_stats(self, sess: _Session) -> Optional[dict]:
         if self.policy is None:
@@ -334,64 +415,139 @@ class FleetService:
         self.total_steps += steps
         return order
 
+    def _resolve_obs_mask(self, env):
+        if self.sharing is None or self.sharing.observation_scopes is None:
+            return None
+        if self._obs_mask is None:
+            from repro.core.sharing import resolve_obs_mask
+            self._obs_mask = resolve_obs_mask(
+                self.sharing, env.metric_specs, env.state_metrics)
+        return self._obs_mask
+
     def _advance_sessions(self, sessions: Sequence[_Session],
                           steps: int) -> None:
         """Run one ``steps``-long episode segment for ``sessions`` through
         the chunked (double-buffered) episode program — the service-side
         mirror of ``core.episode.run_fleet_episode_scan``, with per-session
-        ages, FIFO cursors and exploration streams first-class."""
+        ages, FIFO cursors and exploration streams first-class.
+
+        With experience sharing on, program rows are CELL-ordered (seat
+        order within each cell) instead of slot-ordered: vacant seats ride
+        as inactive replicas of the cell's first live member — they compute
+        but never write to the merged window, carry zero averaging weight,
+        and their results are discarded — so a ragged cell runs the same
+        fixed-shape cell program as a full one."""
         step_fns = {s.env.model.step_fn for s in sessions}
         if len(step_fns) != 1:
             raise ValueError("all service sessions must share one env model "
                              "structure (same space / model class)")
-        n = len(sessions)
-        c = self.chunk  # fixed lease width: ONE compiled width, always
-        num_chunks = -(-n // c)
-        space = sessions[0].env.param_space
-        env0 = sessions[0].env
+        cell_modes = self._cell_modes
+        cs = self.cell_size
+        shared_replay = cell_modes and self.sharing.shared_replay
+        obs_mask = self._resolve_obs_mask(sessions[0].env)
+        uindex = {s.sid: j for j, s in enumerate(sessions)}
+
+        # -- per-session exploration, consumed ONCE per unique session -------
+        # (each session consumes ITS OWN streams at ITS OWN age — mixed-age
+        # chunks and, under sharing, mixed-age cells stay exact)
+        u = len(sessions)
         cfg = self.cfg
         k_dim, m_dim = cfg.state_dim, cfg.action_dim
+        use_warmup_u = np.zeros((u, steps), bool)
+        warmup_u = np.zeros((u, steps, m_dim), np.float32)
+        noise_u = np.zeros((u, steps, m_dim), np.float32)
+        for j, s in enumerate(sessions):
+            s0 = s.steps_taken
+            for t in range(steps):
+                if s0 + t < self.warmup_steps:
+                    use_warmup_u[j, t] = True
+                    warmup_u[j, t] = s.warmup_plan[s0 + t]
+                else:
+                    noise_u[j, t] = s.noise()
+            s.steps_taken += steps
+
+        if cell_modes:
+            # cell-ordered rows; vacant seats replicate the first live
+            # member (inactive, non-primary: results + state discarded)
+            rows, ridx, active_rows, primary_rows, row_cells = \
+                [], [], [], [], []
+            for cid in sorted(self._cells):
+                rec = self._cells[cid]
+                live = [sid for sid in rec["seats"] if sid is not None]
+                rep = self._sessions[live[0]]
+                for sid in rec["seats"]:
+                    s = self._sessions[sid] if sid is not None else rep
+                    rows.append(s)
+                    ridx.append(uindex[s.sid])
+                    active_rows.append(sid is not None)
+                    primary_rows.append(sid is not None)
+                    row_cells.append(cid)
+            ridx = np.asarray(ridx, np.int64)
+            active_rows = np.asarray(active_rows, bool)
+            primary_rows = np.asarray(primary_rows, bool)
+        else:
+            rows = list(sessions)
+            ridx = np.arange(u)
+            active_rows = np.ones((u,), bool)
+            primary_rows = np.ones((u,), bool)
+            row_cells = []
+        n = len(rows)
+        c = self.chunk  # fixed lease width: ONE compiled width, always
+        num_chunks = -(-n // c)
+        space = rows[0].env.param_space
+        env0 = rows[0].env
+        use_warmup = use_warmup_u[ridx]
+        warmup = warmup_u[ridx]
+        noise = noise_u[ridx]
 
         def stack_np(trees):
             return jax.tree_util.tree_map(
                 lambda *xs: np.stack([np.asarray(x) for x in xs]), *trees)
 
-        params = stack_np([s.env.model.params for s in sessions])
-        env_states = stack_np([s.env.model_state for s in sessions])
-        ddpg_states = stack_np([s.ddpg for s in sessions])
+        params = stack_np([s.env.model.params for s in rows])
+        env_states = stack_np([s.env.model_state for s in rows])
+        ddpg_states = stack_np([s.ddpg for s in rows])
         lo, span = metric_bounds(env0.metric_specs, env0.state_metrics)
         k = lo.shape[0]
         lo = np.broadcast_to(lo, (n, k))
         span = np.broadcast_to(span, (n, k))
         w_vec = np.stack([s.scalarizer.weight_vector(s.env.state_metrics)
-                          for s in sessions])
+                          for s in rows])
         state_vecs = np.stack([
             normalize_state(s.cur_metrics, s.env.metric_specs,
-                            s.env.state_metrics) for s in sessions])
+                            s.env.state_metrics) for s in rows])
         objectives = np.array(
             [np.float32(s.scalarizer.objective(s.cur_metrics))
-             for s in sessions], np.float32)
-        buf_np = tuple(
-            np.stack([s.buf[key] for s in sessions])
-            for key in ("s", "a", "r", "s2"))
-        next_slots = np.array([s.buf["next"] for s in sessions], np.int32)
-        sizes = np.array([s.buf["size"] for s in sessions], np.int32)
-        learn_keys = np.stack([s.learn_key for s in sessions])
+             for s in rows], np.float32)
+        if shared_replay:
+            # cell-granular merged windows: [G, cap, ...] + [G] cursors
+            cell_ids = sorted(self._cells)
+            cbufs = [self._cells[cid]["buf"] for cid in cell_ids]
+            buf_np = tuple(
+                np.stack([cb[key] for cb in cbufs])
+                for key in ("s", "a", "r", "s2"))
+            next_slots = np.array([cb["next"] for cb in cbufs], np.int32)
+            sizes = np.array([cb["size"] for cb in cbufs], np.int32)
+        else:
+            buf_np = tuple(
+                np.stack([s.buf[key] for s in rows])
+                for key in ("s", "a", "r", "s2"))
+            next_slots = np.array([s.buf["next"] for s in rows], np.int32)
+            sizes = np.array([s.buf["size"] for s in rows], np.int32)
+        learn_keys = np.stack([s.learn_key for s in rows])
 
-        # per-session exploration: each session consumes ITS OWN streams at
-        # ITS OWN age (this is what lets mixed-age chunks be exact)
-        use_warmup = np.zeros((n, steps), bool)
-        warmup = np.zeros((n, steps, m_dim), np.float32)
-        noise = np.zeros((n, steps, m_dim), np.float32)
-        for j, s in enumerate(sessions):
-            s0 = s.steps_taken
-            for t in range(steps):
-                if s0 + t < self.warmup_steps:
-                    use_warmup[j, t] = True
-                    warmup[j, t] = s.warmup_plan[s0 + t]
-                else:
-                    noise[j, t] = s.noise()
-            s.steps_taken += steps
+        if cell_modes:
+            # the averaging cadence fires on each CELL's own step clock (a
+            # cell-level event: every seat agrees, whatever its member ages)
+            avg_now = np.zeros((n, steps), bool)
+            if self.sharing.averaging:
+                for j, cid in enumerate(row_cells):
+                    cst = self._cells[cid]["steps"]
+                    for t in range(steps):
+                        avg_now[j, t] = \
+                            ((cst + t + 1) % self.sharing.avg_every) == 0
+            active = np.broadcast_to(active_rows[:, None],
+                                     (n, steps)).copy()
 
         base_fields = dict(
             action_idx=np.zeros((n, steps, space.dim), space.index_dtype()),
@@ -403,7 +559,7 @@ class FleetService:
         if guarded:
             from repro.core.guardrails import (
                 GuardedCarry, GuardedEpisodeTrace)
-            guard = stack_np([s.guard for s in sessions])
+            guard = stack_np([s.guard for s in rows])
             out = GuardedEpisodeTrace(
                 **base_fields,
                 guard_events=np.zeros((n, steps), np.uint8),
@@ -414,7 +570,8 @@ class FleetService:
         fn = _compiled_episode(env0.model.step_fn, space, cfg,
                                self._actor_tx, self._critic_tx, True,
                                cfg.updates_per_step, fleet=True, devices=None,
-                               policy=self.policy)
+                               policy=self.policy, sharing=self.sharing,
+                               cell_size=cs, obs_mask=obs_mask)
         peak = [live_device_bytes()]
         t0 = time.perf_counter()
 
@@ -426,19 +583,33 @@ class FleetService:
                 return jax.tree_util.tree_map(
                     lambda x: jax.device_put(_pad_rows(x[a:b], pad)), tree)
 
+            def group_chunk_of(tree):
+                # cell-granular slice: chunk ci covers whole cells
+                ga, gb = a // cs, b // cs
+                gpad = pad // cs
+                return jax.tree_util.tree_map(
+                    lambda x: jax.device_put(_pad_rows(x[ga:gb], gpad)),
+                    tree)
+
+            buf_of = group_chunk_of if shared_replay else chunk_of
             carry = EpisodeCarry(
                 env_state=chunk_of(env_states),
                 ddpg=chunk_of(ddpg_states),
                 buffer=BufferState(
-                    s=chunk_of(buf_np[0]), a=chunk_of(buf_np[1]),
-                    r=chunk_of(buf_np[2]), s2=chunk_of(buf_np[3]),
-                    next_slot=chunk_of(next_slots), size=chunk_of(sizes)),
+                    s=buf_of(buf_np[0]), a=buf_of(buf_np[1]),
+                    r=buf_of(buf_np[2]), s2=buf_of(buf_np[3]),
+                    next_slot=buf_of(next_slots), size=buf_of(sizes)),
                 learn_key=chunk_of(learn_keys),
                 state_vec=chunk_of(state_vecs),
                 objective=chunk_of(objectives))
             if guarded:
                 carry = GuardedCarry(base=carry, guard=chunk_of(guard))
-            xs = (chunk_of(use_warmup), chunk_of(warmup), chunk_of(noise))
+            if cell_modes:
+                xs = (chunk_of(use_warmup), chunk_of(warmup),
+                      chunk_of(noise), chunk_of(avg_now), chunk_of(active))
+            else:
+                xs = (chunk_of(use_warmup), chunk_of(warmup),
+                      chunk_of(noise))
             return (chunk_of(params), chunk_of(w_vec), chunk_of(lo),
                     chunk_of(span), carry, xs)
 
@@ -468,22 +639,33 @@ class FleetService:
                 np.asarray(trace.restarts)[:cnt])
             write_back(env_states, carry.env_state)
             write_back(ddpg_states, carry.ddpg)
-            write_back(buf_np[0], carry.buffer.s)
-            write_back(buf_np[1], carry.buffer.a)
-            write_back(buf_np[2], carry.buffer.r)
-            write_back(buf_np[3], carry.buffer.s2)
-            next_slots[a:b] = np.asarray(carry.buffer.next_slot)[:cnt]
-            sizes[a:b] = np.asarray(carry.buffer.size)[:cnt]
+            if shared_replay:
+                ga, gb = a // cs, b // cs
+                gcnt = gb - ga
+                for dst, sr in zip(buf_np, (carry.buffer.s, carry.buffer.a,
+                                            carry.buffer.r,
+                                            carry.buffer.s2)):
+                    dst[ga:gb] = np.asarray(sr)[:gcnt]
+                next_slots[ga:gb] = np.asarray(carry.buffer.next_slot)[:gcnt]
+                sizes[ga:gb] = np.asarray(carry.buffer.size)[:gcnt]
+            else:
+                write_back(buf_np[0], carry.buffer.s)
+                write_back(buf_np[1], carry.buffer.a)
+                write_back(buf_np[2], carry.buffer.r)
+                write_back(buf_np[3], carry.buffer.s2)
+                next_slots[a:b] = np.asarray(carry.buffer.next_slot)[:cnt]
+                sizes[a:b] = np.asarray(carry.buffer.size)[:cnt]
             learn_keys[a:b] = np.asarray(carry.learn_key)[:cnt]
 
         stream_chunks(lambda args: fn(*args), stage, drain, num_chunks,
                       overlap=self.overlap)
         wall = time.perf_counter() - t0
         self.last_stats = dict(
-            sessions=n, chunk=c, num_chunks=num_chunks, steps=steps,
-            overlap=self.overlap, peak_device_bytes=peak[0],
+            sessions=len(sessions), chunk=c, num_chunks=num_chunks,
+            steps=steps, overlap=self.overlap, peak_device_bytes=peak[0],
             executable_cache_size=fn._cache_size(),
-            session_steps_per_sec=n * steps / max(wall, 1e-9), program=fn)
+            session_steps_per_sec=len(sessions) * steps / max(wall, 1e-9),
+            program=fn, cell_size=cs, sharing=self.sharing)
 
         # -- write per-session state + decision history back ----------------
         per_step = wall / max(1, steps)
@@ -491,11 +673,22 @@ class FleetService:
         def row(tree, j):
             return jax.tree_util.tree_map(lambda x: np.asarray(x[j]), tree)
 
+        if shared_replay:
+            for g, cid in enumerate(sorted(self._cells)):
+                cb = self._cells[cid]["buf"]
+                for key, arr in zip(("s", "a", "r", "s2"), buf_np):
+                    cb[key] = np.asarray(arr[g])
+                cb["next"] = int(next_slots[g])
+                cb["size"] = int(sizes[g])
+        for cid in sorted(self._cells):
+            self._cells[cid]["steps"] += steps
         if guarded:
             from repro.core.guardrails import (
                 empty_counters, guardrail_counters, merge_counters)
             round_counters = empty_counters()
-        for j, s in enumerate(sessions):
+        for j, s in enumerate(rows):
+            if not primary_rows[j]:
+                continue  # vacant-seat replica: everything discarded
             if guarded:
                 s.guard = row(guard, j)
                 delta = guardrail_counters(out.guard_events[j],
@@ -505,10 +698,11 @@ class FleetService:
                 round_counters = merge_counters(round_counters, delta)
             s.env.model_state = row(env_states, j)
             s.ddpg = row(ddpg_states, j)
-            for key, arr in zip(("s", "a", "r", "s2"), buf_np):
-                s.buf[key] = np.asarray(arr[j])
-            s.buf["next"] = int(next_slots[j])
-            s.buf["size"] = int(sizes[j])
+            if not shared_replay:
+                for key, arr in zip(("s", "a", "r", "s2"), buf_np):
+                    s.buf[key] = np.asarray(arr[j])
+                s.buf["next"] = int(next_slots[j])
+                s.buf["size"] = int(sizes[j])
             s.learn_key = np.asarray(learn_keys[j])
             rep = replay_compact_trace(
                 s.env, out, j, start=len(s.history), per_step=per_step,
@@ -554,7 +748,29 @@ class FleetService:
             # json round-trips Infinity for an unbounded restart budget
             "policy": (dict(self.policy._asdict())
                        if self.policy is not None else None),
+            "sharing": (dict(self.sharing._asdict())
+                        if self.sharing is not None else None),
+            "cell_size": self.cell_size,
+            "next_cell": self._next_cell,
+            # cell topology: key + seat order are part of durable state —
+            # a member's lane inside the cell program must survive resume
+            "cells": {str(cid): {
+                "workload": rec["key"][0],
+                "weights": [[k, v] for k, v in rec["key"][1]],
+                "seats": [(-1 if sid is None else sid)
+                          for sid in rec["seats"]],
+                "steps": rec["steps"],
+                "buf_next": (rec["buf"]["next"]
+                             if rec["buf"] is not None else -1),
+                "buf_size": (rec["buf"]["size"]
+                             if rec["buf"] is not None else -1),
+            } for cid, rec in self._cells.items()},
             "sessions": {}}
+        if any(rec["buf"] is not None for rec in self._cells.values()):
+            tree["cells"] = {
+                str(cid): {k: rec["buf"][k] for k in ("s", "a", "r", "s2")}
+                for cid, rec in self._cells.items()
+                if rec["buf"] is not None}
         for sid, s in self._sessions.items():
             tree["sessions"][str(sid)] = {
                 "ddpg": s.ddpg,
@@ -619,16 +835,46 @@ class FleetService:
         if extra.get("policy") is not None:
             from repro.core.guardrails import DeploymentPolicy
             policy = DeploymentPolicy(**extra["policy"])
+        sharing = None
+        if extra.get("sharing") is not None:
+            from repro.core.sharing import SharingConfig
+            sh_d = dict(extra["sharing"])
+            if sh_d.get("observation_scopes") is not None:
+                sh_d["observation_scopes"] = tuple(
+                    sh_d["observation_scopes"])
+            sharing = SharingConfig(**sh_d)
         svc = cls(chunk=extra["chunk"], env_factory=env_factory,
                   env_cls=env_cls, ddpg_config=DDPGConfig(**cfg_d),
                   buffer_capacity=extra["buffer_capacity"],
                   warmup_steps=extra["warmup_steps"],
                   eval_runs=extra["eval_runs"], overlap=extra["overlap"],
                   checkpoint_dir=directory, keep=extra["keep"],
-                  policy=policy)
+                  policy=policy, sharing=sharing,
+                  cell_size=extra.get("cell_size", 1))
         svc.total_steps = extra["total_steps"]
         svc._next_sid = extra["next_sid"]
         svc._slots = [None if s < 0 else int(s) for s in extra["slots"]]
+        svc._next_cell = extra.get("next_cell", 0)
+        for cid_s, cm in extra.get("cells", {}).items():
+            cid = int(cid_s)
+            buf = None
+            if cm["buf_next"] >= 0:
+                buf = svc._new_cell_buf()
+                template = {k: buf[k] for k in ("s", "a", "r", "s2")}
+                sub = {k[len(f"cells/{cid_s}/"):]: v for k, v in flat.items()
+                       if k.startswith(f"cells/{cid_s}/")}
+                restored = jax.tree_util.tree_map(
+                    np.asarray, restore_into(template, sub))
+                for k in ("s", "a", "r", "s2"):
+                    buf[k] = restored[k]
+                buf["next"] = int(cm["buf_next"])
+                buf["size"] = int(cm["buf_size"])
+            svc._cells[cid] = {
+                "key": (cm["workload"],
+                        tuple((k, v) for k, v in cm["weights"])),
+                "seats": [None if sid < 0 else int(sid)
+                          for sid in cm["seats"]],
+                "steps": int(cm["steps"]), "buf": buf}
         for sid_s, meta in extra["sessions"].items():
             sid = int(sid_s)
             s = svc._new_session(sid, meta["workload"], dict(meta["weights"]),

@@ -113,7 +113,7 @@ class Tuner:
     def __init__(self, env, scalarizer: Scalarizer,
                  agent: Optional[MagpieAgent] = None,
                  eval_runs: int = 3, seed: int = 0, engine: str = "host",
-                 policy=None):
+                 policy=None, observation_scopes=None):
         """``agent=None`` sizes a default DDPG agent from the environment's
         ``ParamSpace`` (``DDPGConfig.for_env``) — the network's action head and
         the search box both follow the space, whether it is the paper's 2-D
@@ -127,7 +127,15 @@ class Tuner:
         inside the scan, promoted only past the min-gain/restart-budget gate
         and rolled back on regression. Scan engine only — the guarded body
         is an in-graph construct. ``policy=None`` (default) is bitwise the
-        unguarded tuner."""
+        unguarded tuner.
+
+        ``observation_scopes`` (tuple of metric scopes, e.g. ``("OSC",)``)
+        turns on the DIAL-style local-metric observation mode: the actor
+        sees only metrics whose scope is in the tuple (``envs.metrics``
+        scopes), modelling a decentralized client-side tuner that cannot
+        read server counters. Reward/objective still read the full state —
+        only the learner's observation is masked. Scan engine only;
+        ``None`` (default) is bitwise the full-state tuner."""
         if engine not in ("host", "scan"):
             raise ValueError(f"unknown engine {engine!r}; use 'host' or 'scan'")
         if engine == "scan" and getattr(env, "model", None) is None:
@@ -138,9 +146,24 @@ class Tuner:
             raise ValueError(
                 "DeploymentPolicy guardrails run inside the episode scan; "
                 "use engine='scan' (the host loop has no shadow/canary body)")
+        if observation_scopes is not None and engine != "scan":
+            raise ValueError(
+                "observation_scopes masks the actor input inside the episode "
+                "scan; use engine='scan'")
+        if observation_scopes is not None and policy is not None:
+            raise ValueError(
+                "observation_scopes does not compose with DeploymentPolicy "
+                "guardrails; run guarded tuners with full-state observation")
         self.env = env
         self.engine = engine
         self.policy = policy
+        if observation_scopes is None:
+            self._obs_mask = None
+        else:
+            from repro.core.sharing import SharingConfig, resolve_obs_mask
+            self._obs_mask = resolve_obs_mask(
+                SharingConfig(observation_scopes=tuple(observation_scopes)),
+                env.metric_specs, env.state_metrics)
         self._guard = None  # GuardState, persists across progressive runs
         self.guard_events = np.zeros((0,), np.uint8)
         self.shadow_objectives = np.zeros((0,), np.float32)
@@ -245,7 +268,8 @@ class Tuner:
                 guardrail_counters(trace.guard_events, trace.restarts))
         else:
             trace = run_episode_scan(self.env, self.agent, self.scalarizer,
-                                 self._cur_metrics, steps, learn=learn)
+                                 self._cur_metrics, steps, learn=learn,
+                                 obs_mask=self._obs_mask)
         per_step = (time.perf_counter() - t0) / max(1, steps)
 
         configs = self.env.param_space.configs_from_indices(trace.action_idx)

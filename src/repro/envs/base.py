@@ -122,9 +122,14 @@ def fusion_barrier(tree):
     """vmap-compatible ``optimization_barrier`` over a pytree.
 
     ``lax.optimization_barrier`` has no batching rule in current JAX; the
-    fleet engine vmaps episode bodies over the session axis, so the barrier
-    is wrapped in ``custom_vmap`` (batching an identity barrier is the
-    barrier of the batched value)."""
+    fleet engine vmaps episode bodies over the session axis — and the
+    shared-experience cell engine vmaps the cell axis inside the group axis,
+    two levels deep — so the barrier is wrapped in ``custom_vmap`` whose rule
+    re-enters the barrier itself: each vmap level peels one ``custom_vmap``
+    layer (batching an identity barrier is the barrier of the batched
+    value), and the innermost application emits the raw
+    ``optimization_barrier``, so single-vmap callers compile the exact same
+    HLO as before."""
     return _fusion_barrier(tree)
 
 
@@ -140,7 +145,8 @@ def _make_fusion_barrier():
     @barrier.def_vmap
     def _barrier_vmap(axis_size, in_batched, tree):
         del axis_size
-        return jax.lax.optimization_barrier(tree), in_batched[0]
+        # re-enter the custom_vmap so nested vmap peels another layer
+        return barrier(tree), in_batched[0]
 
     return barrier
 

@@ -134,6 +134,64 @@ def test_gate_cli_band_fallback_on_empty_scaling(tmp_path, monkeypatch):
 
 
 # ---------------------------------------------------------------------------
+# shared-experience acceptance is honored by the gate
+# ---------------------------------------------------------------------------
+
+def _se_point(accept_pass, sps=60.0):
+    return {"quick": False, "fleet_session_steps_per_sec": sps,
+            "noise_band": 0.14, "scaling": [],
+            "shared_experience": {"acceptance": {
+                "pass": accept_pass, "steps_ratio": 0.9 if not accept_pass
+                else 0.59, "steps_ratio_max": 0.7,
+                "bytes_ratio": 2.0, "bytes_ratio_min": 2.0}}}
+
+
+def test_gate_fails_failed_shared_experience_acceptance(tmp_path,
+                                                        monkeypatch,
+                                                        capsys):
+    """A BENCH point whose shared-experience acceptance failed exits 1 even
+    when its throughput is squarely within the noise band — the gate
+    enforces BOTH trajectories."""
+    import benchmarks.fleet_throughput as ft
+    from benchmarks import regression_gate
+    monkeypatch.setattr(
+        ft, "_previous_bench",
+        lambda: {"fleet_session_steps_per_sec": 60.0, "_file": "BENCH_2.json"})
+    bad = tmp_path / "BENCH_0.json"
+    bad.write_text(json.dumps(_se_point(accept_pass=False)))
+    assert regression_gate.main(["--bench-json", str(bad)]) == 1
+    assert "shared-experience" in capsys.readouterr().err
+
+    good = tmp_path / "BENCH_1.json"
+    good.write_text(json.dumps(_se_point(accept_pass=True)))
+    assert regression_gate.main(["--bench-json", str(good)]) == 0
+    # a point with no shared_experience entry gates on throughput alone
+    plain = tmp_path / "BENCH_2.json"
+    plain.write_text(json.dumps({
+        "quick": False, "fleet_session_steps_per_sec": 58.0,
+        "noise_band": 0.14, "scaling": []}))
+    assert regression_gate.main(["--bench-json", str(plain)]) == 0
+
+
+def test_committed_bench4_point_passes_the_gate():
+    """The BENCH_4.json this PR commits must itself clear the gate it
+    extends (acceptance pass recorded, throughput within band)."""
+    import os
+    from benchmarks import regression_gate
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, "BENCH_4.json")
+    if not os.path.exists(path):
+        pytest.skip("BENCH_4.json not present")
+    with open(path) as f:
+        point = json.load(f)
+    acc = point["shared_experience"]["acceptance"]
+    assert acc["pass"] is True
+    assert acc["steps_ratio"] <= acc["steps_ratio_max"]
+    assert acc["bytes_ratio"] >= acc["bytes_ratio_min"]
+    assert regression_gate.main(["--bench-json", path]) == 0
+
+
+# ---------------------------------------------------------------------------
 # BENCH_<n>.json --output-dir numbering (benchmarks/run.py)
 # ---------------------------------------------------------------------------
 

@@ -239,10 +239,56 @@ def test_index_dtype_scales_with_cardinality():
     wide = ParamSpace(specs=(
         ParamSpec("big", "discrete", 0, 4000, default=0),))
     assert wide.index_dtype() == np.uint16
+    huge = ParamSpace(specs=(
+        ParamSpec("huge", "discrete", 0, 80_000, default=0),))
+    assert huge.index_dtype() == np.uint32
     with pytest.raises(ValueError):
         ParamSpace(specs=(
             ParamSpec("x", "continuous", 0.0, 1.0, default=0.0),
         )).index_dtype()
+
+
+def test_index_dtype_rejects_beyond_float32_exact_integers():
+    """The index trace is computed in float32 (jax_coord_maps), exact only
+    to 2**24 — a knob past that boundary would silently decode to a
+    NEIGHBOURING level, so it must be a loud error instead."""
+    at_edge = ParamSpace(specs=(
+        ParamSpec("edge", "discrete", 0, 2 ** 24, default=0),))
+    assert at_edge.index_dtype() == np.uint32
+    with pytest.raises(ValueError, match="2\\*\\*24"):
+        ParamSpace(specs=(
+            ParamSpec("over", "discrete", 0, 2 ** 24 + 1, default=0),
+        )).index_dtype()
+
+
+def test_300_level_space_round_trips_through_uint16_trace():
+    """Regression for the uint16 band: a 300-level knob (past uint8, the
+    realistic ceiling for DFS stripe/queue-depth style knobs) keeps the
+    compact index trace lossless end to end — scan == host decision-wise,
+    and every traced index decodes to the exact host config."""
+    from repro.core import MagpieAgent, Scalarizer, Tuner
+    from repro.envs import ModelEnv, SyntheticSurfaceModel
+    from tests.test_episode import _assert_bitwise_equal_runs
+
+    space = ParamSpace(specs=(
+        ParamSpec("levels300", "discrete", 0, 299, default=0),
+        ParamSpec("flag", "boolean", default=False),
+    ))
+    assert space.index_dtype() == np.uint16
+
+    def build(engine):
+        model = SyntheticSurfaceModel(space, n_metrics=3, surface_seed=13)
+        env = ModelEnv(model, seed=4)
+        scal = Scalarizer(weights={"m0": 1.0}, specs=env.metric_specs)
+        agent = MagpieAgent(DDPGConfig.for_env(env, updates_per_step=2),
+                            seed=4, warmup_steps=2, buffer_capacity=8)
+        return Tuner(env, scal, agent, engine=engine, eval_runs=1)
+
+    host = build("host").run(8)
+    scan = build("scan").run(8)
+    _assert_bitwise_equal_runs(host, scan, maxulp=4)
+    assert {h.config["levels300"] for h in scan.history} == \
+        {h.config["levels300"] for h in host.history}
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,483 @@
+"""Cross-session experience sharing (core/sharing.py + the cell episode
+engine + the grouped replay buffer + the sharing service).
+
+Load-bearing properties:
+  * sharing OFF is off by EXECUTABLE IDENTITY — a fleet built with a fully-
+    off ``SharingConfig`` runs the very same cached compiled program as a
+    fleet that never heard of sharing, and the results are bitwise equal;
+  * every sharing splice is an exact identity at the degenerate point: a
+    shared-replay cell of ONE session and an averaging cell that never
+    fires reproduce the independent fleet's decision trajectory on the 2-D
+    and the 8-D space;
+  * the merged cell FIFO interleaves member transitions in session order —
+    the grouped buffer after a shared warmup equals the independent
+    buffers' rows woven together, bit for bit;
+  * chunking stays pure scheduling under sharing (cell-aligned chunks ==
+    monolithic);
+  * the DIAL observation-scope mode masks ONLY the learner's view: a
+    scoped fleet-of-1 equals a scoped single ``Tuner``, and scope
+    resolution rejects unknown scopes;
+  * ``BatchedReplayBuffer(groups=...)`` validates cell topology and
+    merges/samples per group;
+  * ``memory_plan`` models merged cell buffers and still matches the live
+    allocations (including bf16 storage under the host store);
+  * the ``FleetService`` binds cells at boundaries, matches the static
+    sharing fleet exactly, and checkpoint/restore of a sharing service —
+    merged windows included — is bitwise-continue.
+"""
+
+import math
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    DDPGConfig,
+    FleetService,
+    FleetTuner,
+    MagpieAgent,
+    Scalarizer,
+    SharingConfig,
+    Tuner,
+    last_fleet_run_stats,
+    memory_plan,
+    normalize_sharing,
+)
+from repro.core.replay_buffer import BatchedReplayBuffer
+from repro.envs import LustreSimEnv, LustreSimV2, ModelEnv, SyntheticSurfaceModel
+from repro.envs.metrics import scope_mask
+
+from tests.test_episode import _assert_bitwise_equal_runs
+from tests.test_service import _assert_exact_histories
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+W = {"throughput": 1.0}
+
+
+def _fleet(env_cls=LustreSimEnv, seeds=(0, 1), workloads=("seq_write",),
+           sharing=None, chunk=None, updates=4, warmup=3, capacity=16):
+    cfg = DDPGConfig.for_env(env_cls(workloads[0]), updates_per_step=updates)
+    return FleetTuner.from_grid(
+        list(workloads), [W], list(seeds), env_cls=env_cls, engine="scan",
+        ddpg_config=cfg, eval_runs=1, warmup_steps=warmup,
+        buffer_capacity=capacity, chunk=chunk, sharing=sharing)
+
+
+# ---------------------------------------------------------------------------
+# SharingConfig normalization
+# ---------------------------------------------------------------------------
+
+def test_normalize_sharing_canonicalizes_off_to_none():
+    assert normalize_sharing(None) is None
+    assert normalize_sharing(SharingConfig()) is None
+    assert normalize_sharing(SharingConfig(avg_every=math.inf)) is None
+    assert normalize_sharing(SharingConfig(avg_every=0)) is None
+    # opt-state averaging without an averaging cadence is no mode at all
+    assert normalize_sharing(SharingConfig(avg_opt_state=True)) is None
+    with pytest.raises(TypeError):
+        normalize_sharing({"shared_replay": True})
+
+
+def test_normalize_sharing_sorts_scopes_for_hash_identity():
+    a = normalize_sharing(SharingConfig(observation_scopes=("OST", "OSC")))
+    b = normalize_sharing(SharingConfig(observation_scopes=("OSC", "OST")))
+    assert a == b and a.observation_scopes == ("OSC", "OST")
+    on = normalize_sharing(SharingConfig(shared_replay=True, avg_every=4.0))
+    assert on.shared_replay and on.avg_every == 4 and on.averaging
+
+
+# ---------------------------------------------------------------------------
+# Sharing off == off by executable identity (the acceptance pin)
+# ---------------------------------------------------------------------------
+
+def test_sharing_off_is_the_same_executable_and_bitwise():
+    base = _fleet().run(5)
+    program = last_fleet_run_stats()["program"]
+    off = _fleet(sharing=SharingConfig(avg_every=math.inf)).run(5)
+    stats = last_fleet_run_stats()
+    assert stats["program"] is program  # SAME cached executable, not a twin
+    assert stats["sharing"] is None and stats["cell_size"] == 1
+    for ra, rb in zip(base.results, off.results):
+        _assert_bitwise_equal_runs(ra, rb, maxulp=0)
+        _assert_exact_histories(ra.history, rb.history)
+
+
+# ---------------------------------------------------------------------------
+# Degenerate cells == independent fleet (2-D and 8-D)
+# ---------------------------------------------------------------------------
+
+def _check_degenerate_parity(env_cls, sharing, seeds, workloads, maxulp):
+    ind = _fleet(env_cls, seeds=seeds, workloads=workloads).run(6)
+    shr = _fleet(env_cls, seeds=seeds, workloads=workloads,
+                 sharing=sharing).run(6)
+    assert last_fleet_run_stats()["sharing"] == normalize_sharing(sharing)
+    for ra, rb in zip(ind.results, shr.results):
+        _assert_bitwise_equal_runs(ra, rb, maxulp=maxulp)
+
+
+@pytest.mark.parametrize("env_cls", [LustreSimEnv, LustreSimV2])
+def test_shared_replay_cell_of_one_matches_independent(env_cls):
+    """A one-session cell's merged window IS its private window: the
+    cumsum/scatter splices collapse to the independent FIFO write and the
+    merged-window sampling to per-session sampling. The cell program is a
+    different executable (grouped operands), so cross-program codegen gets
+    the usual few-ulp float latitude; decisions must be exact."""
+    _check_degenerate_parity(
+        env_cls, SharingConfig(shared_replay=True), (0,),
+        ("seq_write", "random_rw"), maxulp=4)
+
+
+@pytest.mark.parametrize("env_cls", [LustreSimEnv, LustreSimV2])
+def test_averaging_that_never_fires_matches_independent(env_cls):
+    """avg_every longer than the run: the cell mean is computed but never
+    applied (`avg_now` stays False), so trajectories match the independent
+    fleet; avg_every=inf normalizes to sharing=None entirely."""
+    _check_degenerate_parity(
+        env_cls, SharingConfig(avg_every=10_000, avg_opt_state=True),
+        (0, 1), ("seq_write",), maxulp=4)
+
+
+# ---------------------------------------------------------------------------
+# Merged FIFO: session-order interleave of member transitions, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_merged_window_interleaves_member_transitions():
+    steps, k = 3, 2  # all-warmup steps: both arms run identical actions
+    ind = _fleet(seeds=(0, 1), warmup=4)
+    shr = _fleet(seeds=(0, 1), warmup=4,
+                 sharing=SharingConfig(shared_replay=True))
+    ind.run(steps), shr.run(steps)
+
+    (ms, ma, mr, ms2), nxt, sizes = shr.agent.buffer.grouped_storage()
+    (bs, ba, br, bs2), isizes = ind.agent.buffer.storage()
+    assert ms.shape[0] == 1 and bs.shape[0] == 2
+    assert int(sizes[0]) == steps * k and int(nxt[0]) == steps * k
+    for t in range(steps):
+        for j in range(k):  # env step t, member j -> merged slot t*k + j
+            np.testing.assert_array_equal(ms[0, t * k + j], bs[j, t])
+            np.testing.assert_array_equal(ma[0, t * k + j], ba[j, t])
+            np.testing.assert_array_equal(mr[0, t * k + j], br[j, t])
+            np.testing.assert_array_equal(ms2[0, t * k + j], bs2[j, t])
+
+
+# ---------------------------------------------------------------------------
+# Chunking stays pure scheduling under sharing
+# ---------------------------------------------------------------------------
+
+def test_chunked_matches_monolithic_under_sharing():
+    sharing = SharingConfig(shared_replay=True, avg_every=2)
+    mono = _fleet(seeds=(0, 1), workloads=("seq_write", "random_rw"),
+                  sharing=sharing).run(6)
+    chunked = _fleet(seeds=(0, 1), workloads=("seq_write", "random_rw"),
+                     sharing=sharing, chunk=2).run(6)
+    stats = last_fleet_run_stats()
+    assert stats["chunk"] == 2 and stats["num_chunks"] == 2
+    for rm, rc in zip(mono.results, chunked.results):
+        _assert_bitwise_equal_runs(rm, rc, maxulp=32)  # cross-width codegen
+
+
+def test_chunk_is_rounded_up_to_whole_cells():
+    sharing = SharingConfig(shared_replay=True)
+    fleet = _fleet(seeds=(0, 1, 2), workloads=("seq_write", "random_rw"),
+                   sharing=sharing, chunk=2)
+    fleet.run(2)
+    assert last_fleet_run_stats()["chunk"] == 3  # cells of 3 never split
+
+
+def test_sharing_needs_whole_cells_and_the_scan_engine():
+    env = LustreSimEnv("seq_write")
+    cfg = DDPGConfig.for_env(env, updates_per_step=2)
+    with pytest.raises(ValueError, match="scan"):
+        FleetTuner.from_grid(["seq_write"], [W], [0, 1], env_cls=LustreSimEnv,
+                             engine="host", ddpg_config=cfg,
+                             sharing=SharingConfig(shared_replay=True))
+
+
+# ---------------------------------------------------------------------------
+# DIAL observation scopes: the learner's view, nothing else
+# ---------------------------------------------------------------------------
+
+def test_scope_mask_resolves_compound_scopes_and_rejects_unknown():
+    env = LustreSimV2("seq_write")
+    for scopes in (("OSC",), ("MDS",)):
+        mask = scope_mask(env.metric_specs, env.state_metrics, scopes)
+        names = [n for n, v in zip(env.state_metrics, mask) if v]
+        assert 0 < len(names) < len(env.state_metrics)
+        for n in names:  # '&'-joined scopes are visible to every part
+            assert set(scopes) & set(env.metric_specs[n].scope.split("&"))
+    with pytest.raises(ValueError, match="unknown metric scopes"):
+        scope_mask(env.metric_specs, env.state_metrics, ["QUORUM"])
+
+
+def test_scoped_fleet_of_one_matches_scoped_tuner():
+    seed, steps = 5, 8
+    sharing = SharingConfig(observation_scopes=("OSC",))
+
+    env = LustreSimV2("seq_write", seed=seed).to_model_env()
+    scal = Scalarizer(weights=W, specs=env.metric_specs)
+    agent = MagpieAgent(DDPGConfig.for_env(env, updates_per_step=4),
+                        seed=seed, warmup_steps=3, buffer_capacity=16)
+    single = Tuner(env, scal, agent, engine="scan", eval_runs=1,
+                   observation_scopes=("OSC",)).run(steps)
+
+    cfg = DDPGConfig.for_env(LustreSimV2("seq_write"), updates_per_step=4)
+    fleet = FleetTuner.from_grid(
+        ["seq_write"], [W], [seed], env_cls=LustreSimV2, engine="scan",
+        ddpg_config=cfg, eval_runs=1, warmup_steps=3, buffer_capacity=16,
+        sharing=sharing)
+    got = fleet.run(steps).results[0]
+    _assert_bitwise_equal_runs(single, got, maxulp=4)
+
+
+def test_scoped_tuner_differs_from_full_state_tuner():
+    def run(scopes):
+        env = LustreSimV2("seq_write", seed=2).to_model_env()
+        scal = Scalarizer(weights=W, specs=env.metric_specs)
+        agent = MagpieAgent(DDPGConfig.for_env(env, updates_per_step=4),
+                            seed=2, warmup_steps=2, buffer_capacity=16)
+        return Tuner(env, scal, agent, engine="scan", eval_runs=1,
+                     observation_scopes=scopes).run(10)
+
+    full, scoped = run(None), run(("OSC",))
+    assert any(h.config != g.config
+               for h, g in zip(full.history, scoped.history))
+
+
+def test_observation_scopes_validation():
+    env = LustreSimV2("seq_write", seed=0).to_model_env()
+    scal = Scalarizer(weights=W, specs=env.metric_specs)
+    agent = MagpieAgent(DDPGConfig.for_env(env))
+    with pytest.raises(ValueError, match="scan"):
+        Tuner(env, scal, agent, engine="host",
+              observation_scopes=("OSC",))
+
+
+# ---------------------------------------------------------------------------
+# Grouped replay buffer: topology validation + merge semantics
+# ---------------------------------------------------------------------------
+
+def test_grouped_buffer_validates_cell_topology():
+    with pytest.raises(ValueError, match="one group per session"):
+        BatchedReplayBuffer(3, 4, 2, 1, groups=[0, 0])
+    with pytest.raises(ValueError, match="consecutive"):
+        BatchedReplayBuffer(2, 4, 2, 1, groups=[0, 2])
+    with pytest.raises(ValueError, match="contiguous"):
+        BatchedReplayBuffer(4, 4, 2, 1, groups=[0, 1, 0, 1])
+
+
+def test_grouped_buffer_merges_adds_and_expands_views():
+    buf = BatchedReplayBuffer(4, 8, 2, 1, groups=[0, 0, 1, 1],
+                              storage_backend="host")
+    for t in range(3):
+        v = np.arange(4, dtype=np.float32) + 10 * t
+        buf.add(np.stack([v, v]).T, v[:, None], v, np.stack([v, v]).T)
+    (gs, _, gr, _), nxt, sizes = buf.grouped_storage()
+    assert gs.shape == (2, 8, 2) and list(nxt) == [6, 6]
+    assert list(sizes) == [6, 6] and len(buf) == 6
+    # session order within the group, env-step major: [t0s0, t0s1, t1s0...]
+    np.testing.assert_array_equal(gr[0, :6], [0, 1, 10, 11, 20, 21])
+    np.testing.assert_array_equal(gr[1, :6], [2, 3, 12, 13, 22, 23])
+    # the per-session expansion: every member sees its group's window
+    (es, _, er, _), esizes = buf.storage()
+    assert es.shape == (4, 8, 2) and list(esizes) == [6, 6, 6, 6]
+    np.testing.assert_array_equal(er[0], er[1])
+    np.testing.assert_array_equal(er[2], er[3])
+    assert not np.array_equal(er[0], er[2])
+
+
+def test_grouped_buffer_fifo_wraps_per_group():
+    buf = BatchedReplayBuffer(2, 4, 1, 1, groups=[0, 0],
+                              storage_backend="host")
+    for t in range(3):  # 6 adds into 4 slots: first 2 evicted
+        v = np.array([2 * t, 2 * t + 1], np.float32)
+        buf.add(v[:, None], v[:, None], v, v[:, None])
+    (_, _, gr, _), nxt, sizes = buf.grouped_storage()
+    assert list(sizes) == [4] and list(nxt) == [2]
+    np.testing.assert_array_equal(gr[0], [4, 5, 2, 3])  # wrapped FIFO
+
+
+def test_grouped_buffer_set_storage_roundtrip():
+    buf = BatchedReplayBuffer(4, 4, 2, 1, groups=[0, 0, 1, 1],
+                              storage_backend="host")
+    v = np.ones((4, 2), np.float32)
+    buf.add(v, v[:, :1], v[:, 0], v)
+    (s, a, r, s2), nxt, sizes = buf.grouped_storage()
+    twin = BatchedReplayBuffer(4, 4, 2, 1, groups=[0, 0, 1, 1],
+                               storage_backend="host")
+    twin.set_storage(s, a, r, s2, nxt, sizes)
+    (ts, _, tr, _), tn, tsz = twin.grouped_storage()
+    np.testing.assert_array_equal(ts, s)
+    np.testing.assert_array_equal(tr, r)
+    assert list(tn) == list(nxt) and list(tsz) == list(sizes)
+
+
+# ---------------------------------------------------------------------------
+# memory_plan models merged cell buffers (and matches live under bf16)
+# ---------------------------------------------------------------------------
+
+def test_memory_plan_divides_replay_bytes_by_cell_size():
+    env = LustreSimV2("seq_write")
+    cfg = DDPGConfig.for_env(env)
+    kw = dict(sessions=8, steps=8, capacity=64)
+    ind = memory_plan(cfg, env.param_space, **kw)
+    mrg = memory_plan(cfg, env.param_space, cell_size=4, **kw)
+    assert (mrg["per_session"]["replay_bytes"]
+            == ind["per_session"]["replay_bytes"] // 4)
+    assert mrg["cell_size"] == 4
+    with pytest.raises(ValueError, match="whole cells"):
+        memory_plan(cfg, env.param_space, sessions=6, steps=8, cell_size=4)
+
+
+def test_fleet_memory_plan_matches_live_under_sharing_and_bf16():
+    cfg = DDPGConfig.for_env(LustreSimV2("seq_write"), updates_per_step=2)
+    fleet = FleetTuner.from_grid(
+        ["seq_write"], [W], [0, 1], env_cls=LustreSimV2, engine="scan",
+        ddpg_config=cfg, eval_runs=1, warmup_steps=2, buffer_capacity=32,
+        replay_dtype=jnp.bfloat16, sharing=SharingConfig(shared_replay=True))
+    plan = fleet.memory_plan(steps=6)
+    assert plan["cell_size"] == 2
+    assert plan["replay_dtype"] == "bfloat16"
+    assert plan["matches_live"] is True
+
+
+# ---------------------------------------------------------------------------
+# FleetService: cell binding, static parity, checkpointed sharing
+# ---------------------------------------------------------------------------
+
+def _sharing_service(tmpdir=None, sharing=None, cell_size=2):
+    cfg = DDPGConfig.for_env(LustreSimEnv("seq_write"), updates_per_step=4)
+    return FleetService(
+        chunk=2, env_cls=LustreSimEnv, ddpg_config=cfg, warmup_steps=3,
+        eval_runs=1, buffer_capacity=16, sharing=sharing,
+        cell_size=cell_size,
+        checkpoint_dir=tmpdir)
+
+
+def test_sharing_service_matches_static_sharing_fleet():
+    sharing = SharingConfig(shared_replay=True, avg_every=2)
+    seeds, steps = [0, 1], 6
+    static = _fleet(seeds=seeds, sharing=sharing).run(steps)
+
+    svc = _sharing_service(sharing=sharing)
+    sids = [svc.request_join("seq_write", W, s + 1000 * i)
+            for i, s in enumerate(seeds)]
+    svc.advance(steps)
+    for sid in sids:
+        svc.request_leave(sid)
+    svc.advance(0)
+    for sid, res in zip(sids, static.results):
+        got = svc.result(sid)
+        _assert_bitwise_equal_runs(res, got, maxulp=0)
+        _assert_exact_histories(res.history, got.history)
+
+
+def test_sharing_service_checkpoint_resume_is_bitwise(tmp_path):
+    sharing = SharingConfig(shared_replay=True, avg_every=2)
+    svc = _sharing_service(str(tmp_path / "svc"), sharing=sharing)
+    sids = [svc.request_join("seq_write", W, s) for s in (0, 1)]
+    svc.advance(4)
+    svc.checkpoint()
+
+    svc.advance(3)
+    for sid in sids:
+        svc.request_leave(sid)
+    svc.advance(0)
+
+    res = FleetService.restore(str(tmp_path / "svc"))
+    assert res.sharing == normalize_sharing(sharing)
+    assert res.cell_size == 2
+    res.advance(3)
+    for sid in sids:
+        res.request_leave(sid)
+    res.advance(0)
+    for sid in sids:
+        a, b = svc.result(sid), res.result(sid)
+        _assert_bitwise_equal_runs(a, b, maxulp=0)
+        _assert_exact_histories(a.history, b.history)
+
+
+def test_cell_dies_with_its_last_member():
+    sharing = SharingConfig(shared_replay=True)
+    svc = _sharing_service(sharing=sharing)
+    a = svc.request_join("seq_write", W, 0)
+    svc.advance(2)
+    assert len(svc._cells) == 1
+    svc.request_leave(a)
+    svc.advance(0)
+    assert svc._cells == {}  # merged experience leaves with its tenants
+    b = svc.request_join("seq_write", W, 7)
+    svc.advance(2)
+    assert len(svc._cells) == 1 and b in svc.active
+
+
+def test_service_chunk_must_align_with_cells():
+    cfg = DDPGConfig.for_env(LustreSimEnv("seq_write"), updates_per_step=2)
+    with pytest.raises(ValueError, match="multiple of cell_size"):
+        FleetService(chunk=3, env_cls=LustreSimEnv, ddpg_config=cfg,
+                     sharing=SharingConfig(shared_replay=True), cell_size=2)
+
+
+# ---------------------------------------------------------------------------
+# Random-space parity (hypothesis when available, fixed seeds always)
+# ---------------------------------------------------------------------------
+
+def _check_random_space_sharing_parity(dim, steps, space_seed, seed):
+    from tests.test_episode import _random_space
+    rng = np.random.default_rng(space_seed)
+    space = _random_space(rng, dim)
+
+    def build(sharing):
+        def factory(workload, s):
+            return ModelEnv(SyntheticSurfaceModel(
+                space, n_metrics=3, surface_seed=space_seed), seed=s)
+        cfg = DDPGConfig.for_env(factory("w", 0), updates_per_step=2)
+        return FleetTuner.from_grid(
+            ["w"], [{"m0": 0.7, "m2": 0.3}], [seed], env_factory=factory,
+            engine="scan", ddpg_config=cfg, eval_runs=1, warmup_steps=2,
+            buffer_capacity=8, sharing=sharing)
+
+    ind = build(None).run(steps).results[0]
+    shr = build(SharingConfig(shared_replay=True)).run(steps).results[0]
+    _assert_bitwise_equal_runs(ind, shr, maxulp=4)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(dim=st.integers(2, 6), steps=st.integers(3, 8),
+           space_seed=st.integers(0, 2 ** 16), seed=st.integers(0, 2 ** 16))
+    def test_random_space_cell_of_one_parity_hypothesis(
+            dim, steps, space_seed, seed):
+        _check_random_space_sharing_parity(dim, steps, space_seed, seed)
+else:
+    @pytest.mark.parametrize("dim,steps,space_seed,seed", [
+        (2, 6, 11, 3), (5, 4, 29, 17), (8, 5, 101, 42)])
+    def test_random_space_cell_of_one_parity_fixed(
+            dim, steps, space_seed, seed):
+        _check_random_space_sharing_parity(dim, steps, space_seed, seed)
+
+
+# ---------------------------------------------------------------------------
+# Benchmark helpers (benchmarks/shared_experience.py)
+# ---------------------------------------------------------------------------
+
+def test_steps_to_gain_first_sustained_hit():
+    from benchmarks.shared_experience import WINDOW, _steps_to
+    curve = np.array([0.1, 0.2, 0.55, 0.4, 0.6])
+    assert _steps_to(curve, 0.5, miss=99) == 2 + WINDOW
+    assert _steps_to(curve, 0.7, miss=99) == 99
+
+
+def test_ratio_stats_labels_against_noise_band():
+    from benchmarks.common import ESTABLISHED_NOISE_BAND_REL
+    from benchmarks.shared_experience import _ratio_stats
+    assert _ratio_stats([0.5, 0.6, 0.7])["label"] == "improvement"
+    assert _ratio_stats([1.0, 1.01, 0.99])["label"] == "within_noise"
+    assert _ratio_stats([1.5, 1.6, 1.7])["label"] == "regression"
+    st = _ratio_stats([1.0, 1.0, 1.0])
+    assert st["noise_band"] >= ESTABLISHED_NOISE_BAND_REL
