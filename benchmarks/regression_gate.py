@@ -17,9 +17,10 @@ With no committed full-mode BENCH point the gate passes vacuously (a fresh
 clone has nothing to regress against).
 
 When the gated ``--bench-json`` point carries a ``shared_experience``
-entry (benchmarks/shared_experience.py), its recorded acceptance — the
-steps-to-gain ratio and the replay bytes/session cut — is honored too:
-a point whose acceptance failed exits 1.
+entry (benchmarks/shared_experience.py) or a ``resilience`` entry
+(benchmarks/resilience.py), its recorded acceptance — steps-to-gain ratio
+and replay bytes/session cut, or off-path identity / on-path overhead /
+recovery — is honored too: a point whose acceptance failed exits 1.
 
 Exit-code contract (pinned by tests/test_bench_gate.py):
     0  pass — within noise, improvement, or vacuous (nothing committed)
@@ -126,6 +127,19 @@ def main(argv=None) -> int:
                   f"{acc.get('steps_ratio')} (max {acc.get('steps_ratio_max')}"
                   f"), replay bytes/session ratio {acc.get('bytes_ratio')} "
                   f"(min {acc.get('bytes_ratio_min')})", file=sys.stderr)
+            return 1
+        rz = point.get("resilience")
+        if rz is not None and not rz.get("acceptance", {}).get("pass", True):
+            acc = rz["acceptance"]
+            print(f"regression-gate: FAIL — resilience point misses its "
+                  f"acceptance: program_identity="
+                  f"{acc.get('program_identity')}, off-path ratio "
+                  f"{acc.get('off_path_ratio')} (band "
+                  f"{acc.get('off_path_band')}), on-path overhead "
+                  f"{acc.get('on_path_overhead')} (max "
+                  f"{acc.get('on_path_overhead_max')}), recovered="
+                  f"{acc.get('recovered')}, quarantine_ok="
+                  f"{acc.get('quarantine_ok')}", file=sys.stderr)
             return 1
     else:
         current = measure_steady_state(repeats=args.repeats)

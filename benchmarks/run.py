@@ -70,7 +70,7 @@ def main() -> None:
     p.add_argument("--quick", action="store_true", help="reduced seeds/steps")
     p.add_argument("--only", default="",
                    help="fig4|fig5|fig6|fig7|table3|fleet|scaling|highdim|"
-                        "shared-experience|dryrun")
+                        "shared-experience|resilience|dryrun")
     p.add_argument("--repeats", type=int, default=0,
                    help="timed repetitions per measurement (0 = benchmark "
                    "defaults); medians + noise bands are recorded either way")
@@ -88,7 +88,8 @@ def main() -> None:
 
     from benchmarks import (fig4_single_objective, fig5_multi_objective,
                             fig6_steps, fig7_progressive, fleet_throughput,
-                            highdim_gap, shared_experience, table3_timing)
+                            highdim_gap, resilience, shared_experience,
+                            table3_timing)
 
     benches = {
         "fig4": ("Fig. 4 — single-objective throughput tuning (30 steps)",
@@ -115,6 +116,9 @@ def main() -> None:
         "shared-experience": (
             "Shared-experience fleet — steps-to-gain + replay bytes/session",
             lambda: shared_experience.run(quick=args.quick)),
+        "resilience": (
+            "Self-healing runtime — on/off-path cost, recovery, quarantine",
+            lambda: resilience.run(quick=args.quick)),
         "highdim": ("High-dim gap — Magpie vs BestConfig, 2-D vs 8-knob",
                     lambda: highdim_gap.run(
                         seeds=seeds, steps=steps,
@@ -178,6 +182,18 @@ def main() -> None:
               f"(cell {se['cell_size']}: shared steps-to-gain "
               f"{se['acceptance']['steps_ratio']:.2f}x, replay bytes/session "
               f"{se['acceptance']['bytes_ratio']:.1f}x cut) "
+              f"in {time.time()-t0:.1f}s", flush=True)
+    elif args.only == "resilience":
+        t0 = time.time()
+        print("\n=== bench-json: resilience trajectory point ===",
+              flush=True)
+        summary = resilience.summary(quick=args.quick)
+        path = _write_bench_json(summary, root=args.output_dir)
+        acc = summary["resilience"]["acceptance"]
+        print(f"wrote {path} "
+              f"(off-path {acc['off_path_ratio']:.3f}x, on-path "
+              f"{acc['on_path_overhead']:+.1%}, "
+              f"{'PASS' if acc['pass'] else 'FAIL'}) "
               f"in {time.time()-t0:.1f}s", flush=True)
 
 

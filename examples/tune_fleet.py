@@ -10,6 +10,7 @@ across workloads).
     PYTHONPATH=src python examples/tune_fleet.py --service --checkpoint /tmp/f
     PYTHONPATH=src python examples/tune_fleet.py --resume /tmp/f
     PYTHONPATH=src python examples/tune_fleet.py --guardrails --min-gain 0.02
+    PYTHONPATH=src python examples/tune_fleet.py --chaos --max-resets 3
 
 ``--sessions N`` spreads N sessions (seeds) over the workloads and runs them
 through the streaming chunked scan engine: chunks of ``--chunk`` sessions
@@ -32,6 +33,17 @@ live config, promoted only above ``--min-gain`` within the
 regresses inside ``--rollback-window`` steps. Guarded runs print the fleet's
 promotion/rollback/budget counters; a resumed service keeps the policy it
 was checkpointed with.
+
+``--resilience`` turns on the self-healing scan body (``core/resilience.py``)
+for every session: the engine detects non-finite params/losses/metrics after
+each learn scan and branch-free resets the diverged session to its last-good
+snapshot; past ``--max-resets`` the session degrades to frozen-incumbent
+mode so the rest of the fleet keeps training. ``--chaos`` injects a
+deterministic NaN poison into every session's metric stream (implies
+``--resilience``) so you can watch the recovery happen — the run ends with
+the fleet's health counters (non-finite detections, resets, degraded
+sessions). A service checkpoint keeps the resilience policy: ``--resume``
+continues self-healing with the policy it was checkpointed with.
 
 ``--share`` turns on cross-session experience sharing (``core/sharing.py``)
 within each workload cell — the sessions tuning the same workload under
@@ -57,6 +69,44 @@ def _policy(args):
     return DeploymentPolicy(min_gain=args.min_gain,
                             max_restart_seconds=args.restart_budget,
                             rollback_window=args.rollback_window)
+
+
+def _resilience(args):
+    """The ResiliencePolicy the --resilience/--chaos flags describe
+    (None when off — the plain engine, same compiled program)."""
+    if not (args.resilience or args.chaos):
+        return None
+    from repro.core import ResiliencePolicy
+    return ResiliencePolicy(max_resets=args.max_resets)
+
+
+def _chaos_env_factory(args):
+    """--chaos: every session's env wraps its model in one shared NaN-poison
+    schedule (one step_fn identity keeps the fleet on one compiled
+    program) — the canonical divergence the resilient engine must absorb."""
+    if not args.chaos:
+        return None
+    from repro.envs import ChaosConfig, FaultInjectedModel, ModelEnv
+    from repro.envs.lustre_sim import LustreSimEnv
+    specs = ChaosConfig(nan_metric="throughput", nan_start=6,
+                        nan_duration=2).fault_specs()
+
+    def env_factory(workload, seed):
+        base = LustreSimEnv(workload, seed=seed).as_model()
+        return ModelEnv(FaultInjectedModel(base, specs), seed=seed)
+
+    return env_factory
+
+
+def _print_health_summary(stats) -> None:
+    """Fleet-wide health counters for a resilient run (in-graph totals)."""
+    stats = [s for s in stats if s]
+    if not stats:
+        return
+    print(f"health ({len(stats)} resilient sessions): "
+          f"{sum(s['nonfinite_total'] for s in stats)} non-finite steps, "
+          f"{sum(s['resets_total'] for s in stats)} resets, "
+          f"{sum(1 for s in stats if s['degraded'])} degraded")
 
 
 def _sharing(args):
@@ -96,8 +146,11 @@ def _run_service(args) -> None:
     weights = {"throughput": 1.0}
     if args.resume:
         # restore() rebuilds the policy from the checkpoint, so a resumed
-        # service keeps the guardrails it was running with
-        svc = FleetService.restore(args.resume)
+        # service keeps the guardrails it was running with; the env
+        # DEFINITION is code, not data — a chaos-checkpointed service must
+        # resume with --chaos so the rebuilt envs match (drift raises)
+        svc = FleetService.restore(args.resume,
+                                   env_factory=_chaos_env_factory(args))
         print(f"resumed service from {args.resume}: {len(svc.active)} "
               f"sessions at step {svc.total_steps}/{args.steps}")
         if svc.sharing is not None:
@@ -105,6 +158,10 @@ def _run_service(args) -> None:
             # from the checkpoint — the sharing config is durable state
             print(f"  sharing (from checkpoint): {svc.sharing} "
                   f"cell_size={svc.cell_size}")
+        if svc.resilience is not None:
+            # the resilience policy is durable state too: a resumed service
+            # keeps self-healing exactly as it was checkpointed
+            print(f"  resilience (from checkpoint): {svc.resilience}")
     else:
         workloads = ["seq_write", "video_server", "file_server"]
         seeds = list(range(max(1, round(args.sessions / len(workloads)))))
@@ -114,8 +171,9 @@ def _run_service(args) -> None:
         chunk = args.chunk or max(8 // cs, 1) * cs
         svc = FleetService(chunk=chunk, eval_runs=1,
                            checkpoint_dir=args.checkpoint,
+                           env_factory=_chaos_env_factory(args),
                            policy=_policy(args), sharing=sharing,
-                           cell_size=cs)
+                           cell_size=cs, resilience=_resilience(args))
         # same per-cell seed offsets as FleetTuner.from_grid, so a service
         # run is comparable session-for-session with the batch path
         cell = 0
@@ -158,8 +216,9 @@ def _run_service(args) -> None:
         _print_cell_targets([labels[sid] for sid in sids],
                             [svc.result(sid) for sid in sids],
                             svc.cell_size)
-    _print_guardrail_summary(
-        [svc.result(sid).guardrail_stats for sid in labels])
+    results = [svc.result(sid) for sid in labels]
+    _print_guardrail_summary([r.guardrail_stats for r in results])
+    _print_health_summary([r.health_stats for r in results])
 
 
 def _print_guardrail_summary(stats) -> None:
@@ -215,6 +274,18 @@ def main() -> None:
                         help="guardrails: steps a fresh canary is watched "
                         "for a live regression before it becomes the "
                         "incumbent")
+    parser.add_argument("--resilience", action="store_true",
+                        help="self-heal diverged sessions: snapshot/reset on "
+                        "non-finite detection, degrade-to-frozen past the "
+                        "reset budget (forces the scan engine)")
+    parser.add_argument("--max-resets", type=int, default=3,
+                        help="resilience: snapshot resets a session may "
+                        "spend before the next divergence degrades it")
+    parser.add_argument("--chaos", action="store_true",
+                        help="inject a deterministic NaN poison into every "
+                        "session's metric stream to demonstrate recovery "
+                        "(implies --resilience; a chaos-checkpointed "
+                        "service must --resume with --chaos too)")
     parser.add_argument("--share", choices=["off", "replay", "replay+avg"],
                         default="off",
                         help="cross-session experience sharing per workload "
@@ -245,18 +316,22 @@ def main() -> None:
               f"({len(workloads)} workloads x {len(seeds)} seeds; "
               f"{args.sessions} requested)")
     sharing = _sharing(args)
+    resilience = _resilience(args)
     engine = ("scan" if (args.guardrails or args.chunk is not None
-                         or sharing is not None or n_sessions > 9)
+                         or sharing is not None or resilience is not None
+                         or n_sessions > 9)
               else "host")
     fleet = FleetTuner.from_grid(
         workloads=workloads,
         objectives=[{"throughput": 1.0}],
         seeds=seeds,
+        env_factory=_chaos_env_factory(args),
         engine=engine,
         chunk=args.chunk if engine == "scan" else None,
         eval_runs=1 if n_sessions > 9 else 3,
         policy=_policy(args),
         sharing=sharing,
+        resilience=resilience,
     )
 
     if engine == "scan":
@@ -301,6 +376,7 @@ def main() -> None:
         print(f"sharing: {args.share} over cells of {fleet.cell_size}")
         _print_cell_targets(result.labels, result.results, fleet.cell_size)
     _print_guardrail_summary([r.guardrail_stats for r in result.results])
+    _print_health_summary([r.health_stats for r in result.results])
 
 
 if __name__ == "__main__":

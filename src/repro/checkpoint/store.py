@@ -6,6 +6,12 @@ written to step_<N>.tmp-<nonce> and atomically os.rename'd into place — a
 crash mid-write never corrupts the latest checkpoint (restart resumes from
 the previous one). Every array is CRC'd in the manifest and verified on
 restore (detects torn/partial writes on non-atomic network filesystems).
+Both payload files are fsync'd before the rename and the parent directory
+is fsync'd after it, so a power cut in the publish window cannot surface a
+step_<N> directory whose contents never reached the platter. If the newest
+checkpoint still fails verification (e.g. media corruption after publish),
+``restore_checkpoint(..., fallback=True)`` walks the keep-k history to the
+newest verifiable step instead of abandoning the run.
 
 Resharding: arrays are stored unsharded (gathered); ``restore_into`` places
 them onto the *current* mesh with ``jax.device_put`` against the template's
@@ -23,6 +29,7 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import zipfile
 import zlib
 
 import jax
@@ -42,6 +49,14 @@ def _crc(a: np.ndarray) -> int:
     return zlib.crc32(np.ascontiguousarray(a).tobytes())
 
 
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save_checkpoint(directory: str, step: int, tree, keep: int = 3,
                     extra: dict | None = None) -> str:
     os.makedirs(directory, exist_ok=True)
@@ -49,7 +64,10 @@ def save_checkpoint(directory: str, step: int, tree, keep: int = 3,
     tmp = final + f".tmp-{os.getpid()}"
     os.makedirs(tmp, exist_ok=True)
     flat = _flatten(tree)
-    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+        np.savez(f, **flat)
+        f.flush()
+        os.fsync(f.fileno())
     manifest = {
         "step": int(step),
         "crc": {k: _crc(v) for k, v in flat.items()},
@@ -59,9 +77,15 @@ def save_checkpoint(directory: str, step: int, tree, keep: int = 3,
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    # the tmp dir's entries (file names) must be durable before the rename
+    # publishes them under the final name
+    _fsync_dir(tmp)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)                     # atomic publish
+    _fsync_dir(directory)                     # make the rename itself durable
     _prune(directory, keep)
     return final
 
@@ -96,12 +120,41 @@ def latest_step(directory: str):
 
 
 def restore_checkpoint(directory: str, step: int | None = None,
-                       verify: bool = True) -> tuple:
-    """Returns (step, flat dict of arrays, extra)."""
+                       verify: bool = True, fallback: bool = False) -> tuple:
+    """Returns (step, flat dict of arrays, extra).
+
+    With ``fallback=True`` (and no explicit ``step``), a latest checkpoint
+    that fails to load or verify does not abort the run: the keep-k history
+    is walked newest-to-oldest and the newest verifiable step is returned —
+    the recovered step is the first element of the result, so callers can
+    report how far back the restore had to reach.
+    """
     if step is None:
-        step = latest_step(directory)
-        if step is None:
+        steps = list_steps(directory)
+        if not steps:
             raise FileNotFoundError(f"no checkpoints in {directory}")
+        if not fallback:
+            return _restore_step(directory, steps[-1], verify)
+        last_err = None
+        for s in reversed(steps):
+            try:
+                return _restore_step(directory, s, verify)
+            except _RESTORE_ERRORS as e:
+                last_err = e
+        raise IOError(
+            f"no verifiable checkpoint among steps {steps} in {directory}"
+        ) from last_err
+    return _restore_step(directory, step, verify)
+
+
+# everything a torn or corrupted step directory can throw while loading:
+# missing files, truncated npz (BadZipFile is a zipfile error), mangled
+# json, a manifest missing a key, or the CRC IOError below
+_RESTORE_ERRORS = (OSError, ValueError, KeyError, EOFError,
+                   zipfile.BadZipFile, json.JSONDecodeError)
+
+
+def _restore_step(directory: str, step: int, verify: bool) -> tuple:
     path = os.path.join(directory, f"step_{step:09d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)

@@ -27,6 +27,14 @@ Public API:
                                     scoped observation; default off = bitwise
                                     (and by executable identity) the
                                     independent fleet
+    ResiliencePolicy             -- self-healing episodes (core.resilience):
+                                    in-scan snapshot/reset on non-finite
+                                    divergence, degrade-to-frozen past the
+                                    reset budget; default off = bitwise (and
+                                    by executable identity) the plain engine
+    ChunkSupervisor              -- host-side chunk retry/backoff + watchdog
+                                    for the streaming fleet runtime; failed
+                                    chunks quarantine instead of crashing
     baselines.BestConfigTuner    -- the paper's baseline (plus grid/random)
 """
 
@@ -55,6 +63,12 @@ from repro.core.guardrails import (
     guardrail_counters, guardrail_stats, init_fleet_guard_state,
     init_guard_state, merge_counters, rollback_decision,
 )
+from repro.core.resilience import (
+    ChunkFailure, ChunkSupervisor, HealthState, ResiliencePolicy,
+    ResilientEpisodeTrace, health_counters, health_decision, health_stats,
+    init_fleet_health_state, init_health_state, merge_health_counters,
+    normalize_resilience, normalize_supervisor,
+)
 from repro.core.baselines import (
     BestConfigTuner, GridSearchTuner, RandomSearchTuner,
 )
@@ -75,5 +89,9 @@ __all__ = [
     "DeploymentPolicy", "GuardState", "GuardedEpisodeTrace", "gate_decision",
     "rollback_decision", "init_guard_state", "init_fleet_guard_state",
     "guardrail_counters", "guardrail_stats", "merge_counters",
+    "ResiliencePolicy", "HealthState", "ResilientEpisodeTrace",
+    "ChunkSupervisor", "ChunkFailure", "health_decision", "health_counters",
+    "health_stats", "merge_health_counters", "init_health_state",
+    "init_fleet_health_state", "normalize_resilience", "normalize_supervisor",
     "BestConfigTuner", "GridSearchTuner", "RandomSearchTuner",
 ]

@@ -61,6 +61,7 @@ from __future__ import annotations
 import functools
 import math
 import os
+import time
 from typing import Any, NamedTuple, Optional, Sequence
 
 import jax
@@ -143,7 +144,7 @@ def decode_restarts(fp: np.ndarray) -> np.ndarray:
 
 def _build_episode(step_fn, space: ParamSpace, cfg: DDPGConfig, actor_tx,
                    critic_tx, learn: bool, num_updates: int, kernel_mode=None,
-                   policy=None, obs_mask=None):
+                   policy=None, obs_mask=None, resilience=None):
     """episode(params, w_vec, lo, span, carry, xs) -> (carry, EpisodeTrace).
 
     ``xs`` = (use_warmup [T] bool, warmup_actions [T, m], noise [T, m]).
@@ -166,9 +167,31 @@ def _build_episode(step_fn, space: ParamSpace, cfg: DDPGConfig, actor_tx,
     replay) is masked to the visible metrics, while the env dynamics,
     objective, reward and trace all keep the full state. ``obs_mask=None``
     leaves every line of the build untouched.
+
+    ``resilience`` (a ``core.resilience.ResiliencePolicy``) swaps the body
+    for the self-healing step: carry becomes ``ResilientCarry`` and the
+    trace grows the uint8 health byte (``ResilientEpisodeTrace``). With
+    ``resilience=None`` this function is byte-for-byte the pre-resilience
+    build — the off path never touches ``core.resilience``.
     """
     # lazy: envs.base imports repro.core at its own top level
     from repro.envs.base import barriered_step, fusion_barrier
+
+    if resilience is not None:
+        if policy is not None:
+            raise ValueError(
+                "resilience does not compose with DeploymentPolicy "
+                "guardrails (the guarded step owns its own learn path)")
+        from repro.core.resilience import build_resilient_step
+        resilient = build_resilient_step(step_fn, space, cfg, actor_tx,
+                                         critic_tx, learn, num_updates,
+                                         kernel_mode, resilience, obs_mask)
+
+        def resilient_episode(params, w_vec, lo, span, carry, xs):
+            body = functools.partial(resilient, params, w_vec, lo, span)
+            return jax.lax.scan(body, carry, xs)
+
+        return resilient_episode
 
     if policy is not None:
         if obs_mask is not None:
@@ -278,7 +301,8 @@ def _build_episode(step_fn, space: ParamSpace, cfg: DDPGConfig, actor_tx,
 
 def _build_cell_episode(step_fn, space: ParamSpace, cfg: DDPGConfig,
                         actor_tx, critic_tx, learn: bool, num_updates: int,
-                        kernel_mode, sharing, cell_size: int, obs_mask):
+                        kernel_mode, sharing, cell_size: int, obs_mask,
+                        resilience=None):
     """One CELL's episode: ``cell_size`` member sessions stepping in lockstep
     with shared experience (``core.sharing.SharingConfig``).
 
@@ -298,6 +322,14 @@ def _build_cell_episode(step_fn, space: ParamSpace, cfg: DDPGConfig,
     cell mean of the actor/critic pytrees when ``avg_now`` fires. At
     ``cell_size=1`` every splice is an exact identity (one-element cumsum,
     one-element mean), which is what the sharing-off property tests pin.
+
+    ``resilience`` threads the per-lane health layer through the cell: a
+    lane with a corrupted observation or a degraded member contributes
+    NOTHING to the merged window or the cell mean (its write mask and
+    averaging weight drop), so one NaN cannot poison cellmates; the
+    snapshot/reset/degrade lifecycle runs per lane exactly as in the
+    single-session resilient body. ``resilience=None`` leaves every line of
+    the build untouched.
     """
     from repro.envs.base import barriered_step, fusion_barrier
 
@@ -308,6 +340,12 @@ def _build_cell_episode(step_fn, space: ParamSpace, cfg: DDPGConfig,
     mask = None if obs_mask is None else jnp.asarray(obs_mask, jnp.float32)
     shared = bool(sharing.shared_replay)
     averaging = sharing.avg_every is not None
+    rz = resilience
+    if rz is not None:
+        from repro.core.resilience import (
+            EVENT_DEGRADED, EVENT_NONFINITE, EVENT_RESET, HealthState,
+            ResilientCarry, ResilientEpisodeTrace, health_decision,
+            select_tree, tree_nonfinite_rows)
 
     def idx_of(action):  # [m] -> compact per-knob quantization indices
         return jnp.stack([coord_maps[j](action[j])["idx"]
@@ -315,6 +353,9 @@ def _build_cell_episode(step_fn, space: ParamSpace, cfg: DDPGConfig,
 
     def one_step(params, w_vec, lo, span, carry, x):
         use_warmup, warmup_a, noise, avg_now, active = x
+        health = None
+        if rz is not None:
+            health, carry = carry.health, carry.base
 
         # act (per session, vmapped over the cell)
         actor, state_vec = fusion_barrier(
@@ -340,6 +381,16 @@ def _build_cell_episode(step_fn, space: ParamSpace, cfg: DDPGConfig,
         reward = (obj - carry.objective) / jnp.maximum(
             carry.objective, jnp.float32(1e-6))
 
+        if rz is not None:
+            # per-lane corrupted-observation flag: these lanes are recorded
+            # in the trace but contribute nothing stateful this step
+            bad_obs = jnp.any(~jnp.isfinite(metrics_vec), axis=1)
+            # a corrupted or degraded member's transitions never enter the
+            # merged window (the one-NaN-poisons-the-cell hazard)
+            contrib = active & ~bad_obs & ~health.degraded
+        else:
+            contrib = active
+
         s_row = (carry.state_vec if mask is None
                  else carry.state_vec * mask)
         s2_row = norm if mask is None else norm * mask
@@ -350,10 +401,10 @@ def _build_cell_episode(step_fn, space: ParamSpace, cfg: DDPGConfig,
             # BatchedReplayBuffer(groups=...).add); inactive (padding)
             # lanes scatter out of bounds and are dropped
             capacity = buf.s.shape[0]
-            n_act = active.astype(jnp.int32)
+            n_act = contrib.astype(jnp.int32)
             offs = jnp.cumsum(n_act) - 1
             wrote = jnp.sum(n_act)
-            pos = jnp.where(active, (buf.next_slot + offs) % capacity,
+            pos = jnp.where(contrib, (buf.next_slot + offs) % capacity,
                             capacity)
             buf = BufferState(
                 s=buf.s.at[pos].set(s_row.astype(buf.s.dtype), mode="drop"),
@@ -371,42 +422,85 @@ def _build_cell_episode(step_fn, space: ParamSpace, cfg: DDPGConfig,
             capacity = buf.s.shape[1]
             lane = jnp.arange(cs)
             i = buf.next_slot
-            buf = BufferState(
-                s=buf.s.at[lane, i].set(s_row.astype(buf.s.dtype)),
-                a=buf.a.at[lane, i].set(action.astype(buf.a.dtype)),
-                r=buf.r.at[lane, i].set(reward.astype(buf.r.dtype)),
-                s2=buf.s2.at[lane, i].set(s2_row.astype(buf.s2.dtype)),
-                next_slot=(i + 1) % capacity,
-                size=jnp.minimum(buf.size + 1, capacity))
+            if rz is not None:
+                pos = jnp.where(contrib, i, capacity)  # OOB -> drop
+                buf = BufferState(
+                    s=buf.s.at[lane, pos].set(s_row.astype(buf.s.dtype),
+                                              mode="drop"),
+                    a=buf.a.at[lane, pos].set(action.astype(buf.a.dtype),
+                                              mode="drop"),
+                    r=buf.r.at[lane, pos].set(reward.astype(buf.r.dtype),
+                                              mode="drop"),
+                    s2=buf.s2.at[lane, pos].set(s2_row.astype(buf.s2.dtype),
+                                                mode="drop"),
+                    next_slot=jnp.where(contrib, (i + 1) % capacity, i),
+                    size=jnp.where(contrib,
+                                   jnp.minimum(buf.size + 1, capacity),
+                                   buf.size))
+            else:
+                buf = BufferState(
+                    s=buf.s.at[lane, i].set(s_row.astype(buf.s.dtype)),
+                    a=buf.a.at[lane, i].set(action.astype(buf.a.dtype)),
+                    r=buf.r.at[lane, i].set(reward.astype(buf.r.dtype)),
+                    s2=buf.s2.at[lane, i].set(s2_row.astype(buf.s2.dtype)),
+                    next_slot=(i + 1) % capacity,
+                    size=jnp.minimum(buf.size + 1, capacity))
 
+        lmetrics = None
         if do_updates:
             ks = jax.vmap(jax.random.split)(carry.learn_key)
             learn_key, k = ks[:, 0], ks[:, 1]
             learn_in = fusion_barrier((carry.ddpg, buf, k))
             dbuf = learn_in[1]
+            # dropped writes mean the window CAN be empty under resilience
+            # (every lane corrupted at step 0); clamp the sampled size and
+            # discard the no-data update below
+            size_of = ((lambda sz: jnp.maximum(sz, 1)) if rz is not None
+                       else (lambda sz: sz))
             if shared:
                 # every member learner samples its own minibatches from the
                 # MERGED window: data broadcast, state/key batched
                 data = (dbuf.s, dbuf.a, dbuf.r, dbuf.s2)
-                ddpg, _ = fusion_barrier(jax.vmap(
+                ddpg, lmetrics = fusion_barrier(jax.vmap(
                     lambda st, kk: _learn_scan(
-                        st, data, dbuf.size, kk, cfg, actor_tx, critic_tx,
-                        num_updates, kernel_mode=kernel_mode)
+                        st, data, size_of(dbuf.size), kk, cfg, actor_tx,
+                        critic_tx, num_updates, kernel_mode=kernel_mode)
                 )(learn_in[0], learn_in[2]))
+                empty = dbuf.size == 0
             else:
-                ddpg, _ = fusion_barrier(jax.vmap(
+                ddpg, lmetrics = fusion_barrier(jax.vmap(
                     lambda st, d, sz, kk: _learn_scan(
-                        st, d, sz, kk, cfg, actor_tx, critic_tx,
+                        st, d, size_of(sz), kk, cfg, actor_tx, critic_tx,
                         num_updates, kernel_mode=kernel_mode)
                 )(learn_in[0], (dbuf.s, dbuf.a, dbuf.r, dbuf.s2),
                   dbuf.size, learn_in[2]))
+                empty = dbuf.size == 0
+            if rz is not None:
+                ddpg = select_tree(jnp.broadcast_to(empty, (cs,)),
+                                   carry.ddpg, ddpg)
         else:
             learn_key, ddpg = carry.learn_key, carry.ddpg
 
+        if rz is not None:
+            if do_updates:
+                bad_learn = (~jnp.broadcast_to(empty, (cs,))
+                             & (tree_nonfinite_rows(ddpg)
+                                | tree_nonfinite_rows(lmetrics)))
+            else:
+                bad_learn = jnp.zeros((cs,), bool)
+            bad = bad_obs | bad_learn
+            do_reset, degraded, resets, nf_total = health_decision(
+                bad, health.resets, health.nonfinite, health.degraded, rz)
+        else:
+            bad = degraded = None
+
         if averaging:
             # masked cell mean, applied when the host-computed cadence
-            # fires; active-weighted so padding lanes contribute nothing
-            w = active.astype(jnp.float32)
+            # fires; active-weighted so padding lanes contribute nothing —
+            # and, under resilience, corrupted/degraded lanes neither
+            # (their params are pinned to the snapshot right after this)
+            w = (contrib if rz is None
+                 else (contrib & ~bad)).astype(jnp.float32)
             denom = jnp.maximum(jnp.sum(w), jnp.float32(1.0))
             do_avg = avg_now[0]
 
@@ -429,6 +523,37 @@ def _build_cell_episode(step_fn, space: ParamSpace, cfg: DDPGConfig,
                 ddpg = ddpg._replace(actor_opt=avg_tree(ddpg.actor_opt),
                                      critic_opt=avg_tree(ddpg.critic_opt))
 
+        if rz is not None:
+            # per-lane reset/freeze + snapshot cadence, exactly the
+            # single-session resilient body's lifecycle (including the
+            # snapshot_every=1 shortcut: the revert target is the lane's
+            # step-entry state — pre-learn, pre-averaging — which IS what
+            # an every-step snapshot refresh would have stored)
+            if rz.snapshot_every == 1:
+                ddpg = select_tree(do_reset | degraded, carry.ddpg, ddpg)
+                snapshot = health.snapshot          # () — no leaves
+                refresh = ~bad & ~degraded
+            else:
+                ddpg = select_tree(do_reset | degraded, health.snapshot,
+                                   ddpg)
+                due = (health.since_snap + 1) >= rz.snapshot_every
+                refresh = due & ~bad & ~degraded
+                snapshot = select_tree(refresh, ddpg, health.snapshot)
+            since = jnp.where(refresh, 0, health.since_snap + 1)
+            event = (bad.astype(jnp.uint8) * EVENT_NONFINITE
+                     + do_reset.astype(jnp.uint8) * EVENT_RESET
+                     + degraded.astype(jnp.uint8) * EVENT_DEGRADED)
+            carry = ResilientCarry(
+                base=EpisodeCarry(
+                    env_state, ddpg, buf, learn_key,
+                    jnp.where(bad_obs[:, None], carry.state_vec, norm),
+                    jnp.where(bad_obs, carry.objective, obj)),
+                health=HealthState(snapshot, resets, nf_total, degraded,
+                                   since))
+            return carry, ResilientEpisodeTrace(
+                action_idx, metrics_vec, reward, obj,
+                _encode_restart(restart), event)
+
         carry = EpisodeCarry(env_state, ddpg, buf, learn_key, norm, obj)
         return carry, EpisodeTrace(action_idx, metrics_vec, reward, obj,
                                    _encode_restart(restart))
@@ -442,7 +567,8 @@ def _build_cell_episode(step_fn, space: ParamSpace, cfg: DDPGConfig,
 
 def _build_cell_fleet_episode(step_fn, space, cfg, actor_tx, critic_tx,
                               learn, num_updates, kernel_mode, sharing,
-                              cell_size: int, obs_mask, devices):
+                              cell_size: int, obs_mask, devices,
+                              resilience=None):
     """The sharing fleet program: cells vmapped over the group axis, wrapped
     so callers keep the session-leading calling convention.
 
@@ -456,7 +582,7 @@ def _build_cell_fleet_episode(step_fn, space, cfg, actor_tx, critic_tx,
     shared = bool(sharing.shared_replay)
     cell = _build_cell_episode(step_fn, space, cfg, actor_tx, critic_tx,
                                learn, num_updates, kernel_mode, sharing,
-                               cs, obs_mask)
+                               cs, obs_mask, resilience=resilience)
     gmapped = jax.vmap(cell, in_axes=(0, 0, 0, 0, 0, (0, 0, 0, 0, 0)))
     if devices is not None and len(devices) > 1:
         from jax.sharding import Mesh, PartitionSpec as P
@@ -474,6 +600,10 @@ def _build_cell_fleet_episode(step_fn, space, cfg, actor_tx, critic_tx,
             out_specs=P("session"), check_rep=False)
 
     def episode(params, w_vec, lo, span, carry, xs):
+        health = None
+        if resilience is not None:
+            from repro.core.resilience import ResilientCarry
+            health, carry = carry.health, carry.base
         n = carry.state_vec.shape[0]
         assert n % cs == 0, (n, cs)
         g = n // cs
@@ -495,9 +625,14 @@ def _build_cell_fleet_episode(step_fn, space, cfg, actor_tx, critic_tx,
             learn_key=group(carry.learn_key),
             state_vec=group(carry.state_vec),
             objective=group(carry.objective))
+        if resilience is not None:
+            gcarry = ResilientCarry(base=gcarry, health=gt(group, health))
         out_carry, trace = gmapped(gt(group, params), group(w_vec),
                                    group(lo), group(span), gcarry,
                                    gt(group_xs, xs))
+        out_health = None
+        if resilience is not None:
+            out_health, out_carry = out_carry.health, out_carry.base
         obuf = (out_carry.buffer if shared
                 else gt(ungroup, out_carry.buffer))
         out_carry = EpisodeCarry(
@@ -506,6 +641,9 @@ def _build_cell_fleet_episode(step_fn, space, cfg, actor_tx, critic_tx,
             learn_key=ungroup(out_carry.learn_key),
             state_vec=ungroup(out_carry.state_vec),
             objective=ungroup(out_carry.objective))
+        if resilience is not None:
+            out_carry = ResilientCarry(base=out_carry,
+                                       health=gt(ungroup, out_health))
 
         def ungroup_trace(x):  # [g, T, cs, ...] -> [n, T, ...]
             y = jnp.swapaxes(x, 1, 2)
@@ -522,7 +660,7 @@ _EPISODE_CACHE: dict = {}
 def _compiled_episode(step_fn, space, cfg, actor_tx, critic_tx, learn,
                       num_updates, fleet: bool, devices: Optional[tuple],
                       policy=None, sharing=None, cell_size: int = 1,
-                      obs_mask=None):
+                      obs_mask=None, resilience=None):
     """Jitted (and optionally vmapped + shard_mapped) episode, cached so
     repeated ``run()`` calls and same-space fleets reuse one compilation.
     The learner kernel mode is part of the cache key: flipping
@@ -536,6 +674,9 @@ def _compiled_episode(step_fn, space, cfg, actor_tx, critic_tx, learn,
 
     kernel_mode = ops.ddpg_kernel_mode()
     sharing = normalize_sharing(sharing)
+    if resilience is not None:
+        from repro.core.resilience import normalize_resilience
+        resilience = normalize_resilience(resilience)
     cell = sharing is not None and (sharing.shared_replay
                                     or sharing.averaging)
     if not cell:
@@ -547,9 +688,13 @@ def _compiled_episode(step_fn, space, cfg, actor_tx, critic_tx, learn,
     # program, so guardrails-off tuners share one executable with pre-PR
     # code. sharing/cell_size/obs_mask normalize to (None, 1, None) when
     # every sharing mode is off, so sharing-off keys — and IS, by executable
-    # identity — the exact same cached program.
+    # identity — the exact same cached program. resilience follows the same
+    # precedent: a ResiliencePolicy is hashable and baked into the resilient
+    # build; resilience=None (the canonical off value) keys the exact
+    # pre-resilience program.
     key = (step_fn, space, cfg, actor_tx, critic_tx, learn, num_updates,
-           fleet, devices, kernel_mode, policy, sharing, cell_size, obs_mask)
+           fleet, devices, kernel_mode, policy, sharing, cell_size, obs_mask,
+           resilience)
     if key in _EPISODE_CACHE:
         return _EPISODE_CACHE[key]
     if policy is not None and sharing is not None:
@@ -557,18 +702,25 @@ def _compiled_episode(step_fn, space, cfg, actor_tx, critic_tx, learn,
             "experience sharing does not compose with DeploymentPolicy "
             "guardrails (the guarded step owns its own observe/learn path); "
             "run guarded fleets with sharing off")
+    if policy is not None and resilience is not None:
+        raise ValueError(
+            "resilience does not compose with DeploymentPolicy guardrails "
+            "(the guarded step owns its own learn path); run guarded "
+            "fleets with resilience off")
     if cell and not fleet:
         raise ValueError("cell experience sharing requires the fleet engine")
     if cell:
         episode = _build_cell_fleet_episode(
             step_fn, space, cfg, actor_tx, critic_tx, learn, num_updates,
-            kernel_mode, sharing, cell_size, obs_mask, devices)
+            kernel_mode, sharing, cell_size, obs_mask, devices,
+            resilience=resilience)
         fn = jax.jit(episode, donate_argnums=(4,))
         _EPISODE_CACHE[key] = fn
         return fn
     episode = _build_episode(step_fn, space, cfg, actor_tx, critic_tx, learn,
                              num_updates, kernel_mode=kernel_mode,
-                             policy=policy, obs_mask=obs_mask)
+                             policy=policy, obs_mask=obs_mask,
+                             resilience=resilience)
     if fleet:
         # session axis: params/w_vec/lo/span/carry stacked; xs — including
         # the warmup mask — are per-session so sessions of DIFFERENT ages
@@ -632,7 +784,8 @@ def _decode_trace(trace) -> EpisodeTrace:
 
 
 def run_episode_scan(env, agent, scalarizer, cur_metrics: dict, steps: int,
-                 learn: bool = True, policy=None, guard=None, obs_mask=None):
+                 learn: bool = True, policy=None, guard=None, obs_mask=None,
+                 resilience=None, health=None):
     """Run ``steps`` fused tuning iterations for one session.
 
     ``env`` must be a ``ModelEnv``. Mutates ``env`` (model state, last
@@ -645,7 +798,16 @@ def run_episode_scan(env, agent, scalarizer, cur_metrics: dict, steps: int,
     ``GuardState`` (``init_guard_state`` for a fresh session) and the return
     value becomes ``(GuardedEpisodeTrace, GuardState)`` — the updated guard
     carries to the next progressive run.
+
+    ``resilience`` (``core.resilience.ResiliencePolicy``) runs the
+    self-healing body instead; ``health`` must then be the session's
+    ``HealthState`` (``init_health_state`` for a fresh session) and the
+    return value becomes ``(ResilientEpisodeTrace, HealthState)``. An
+    all-off policy normalizes to ``None`` (plain trace returned).
     """
+    if resilience is not None:
+        from repro.core.resilience import normalize_resilience
+        resilience = normalize_resilience(resilience)
     model = env.model
     lo, span = metric_bounds(env.metric_specs, env.state_metrics)
     w_vec = scalarizer.weight_vector(env.state_metrics)
@@ -671,16 +833,27 @@ def run_episode_scan(env, agent, scalarizer, cur_metrics: dict, steps: int,
                 "init_guard_state seeded from the live config)")
         carry = GuardedCarry(
             base=carry, guard=jax.tree_util.tree_map(jnp.asarray, guard))
+    if resilience is not None:
+        from repro.core.resilience import ResilientCarry
+        if health is None:
+            raise ValueError(
+                "resilient runs need a HealthState (core.resilience."
+                "init_health_state seeded from the learner state)")
+        carry = ResilientCarry(
+            base=carry, health=jax.tree_util.tree_map(jnp.asarray, health))
 
     fn = _compiled_episode(model.step_fn, env.param_space, agent.cfg,
                            agent._actor_tx, agent._critic_tx, learn,
                            agent.cfg.updates_per_step,
                            fleet=False, devices=None, policy=policy,
-                           obs_mask=obs_mask)
+                           obs_mask=obs_mask, resilience=resilience)
     carry, trace = fn(model.params, jnp.asarray(w_vec), jnp.asarray(lo),
                       jnp.asarray(span), carry, xs)
 
-    guard_out = None
+    guard_out = health_out = None
+    if resilience is not None:
+        health_out = jax.tree_util.tree_map(np.asarray, carry.health)
+        carry = carry.base
     if policy is not None:
         guard_out = jax.tree_util.tree_map(np.asarray, carry.guard)
         carry = carry.base
@@ -694,6 +867,8 @@ def run_episode_scan(env, agent, scalarizer, cur_metrics: dict, steps: int,
             int(carry.buffer.next_slot), int(carry.buffer.size))
     if policy is not None:
         return _decode_trace(trace), guard_out
+    if resilience is not None:
+        return _decode_trace(trace), health_out
     return _decode_trace(trace)
 
 
@@ -752,7 +927,7 @@ def _pad_rows(x: np.ndarray, pad: int) -> np.ndarray:
 
 
 def stream_chunks(call, stage, drain, num_chunks: int,
-                  overlap: bool = True) -> None:
+                  overlap: bool = True, supervisor=None, chaos=None):
     """Drive the chunked episode pipeline, optionally double-buffered.
 
     ``stage(ci)`` builds chunk ``ci``'s device operands (host -> device,
@@ -772,9 +947,31 @@ def stream_chunks(call, stage, drain, num_chunks: int,
     (still O(chunk)). Chunks cover disjoint sessions, so the schedule change
     cannot affect any session's results: outputs are bitwise identical to
     the serial schedule, which is pinned by tests/test_chunked_fleet.py.
+
+    ``supervisor`` (a ``core.resilience.ChunkSupervisor``) runs the stream
+    under host supervision: strictly serial (chunking/overlap are pure
+    scheduling, so results are unchanged), each chunk wrapped in
+    retry-with-exponential-backoff. The caller's host state is only mutated
+    by ``drain`` — and each drain materializes device results BEFORE its
+    first host write — so a failed attempt left the chunk's inputs intact
+    and ``stage(ci)`` re-stages them deterministically: retries are bitwise
+    invisible on success. A chunk exceeding ``watchdog_seconds`` wall clock
+    counts as a stall in the returned stats. After ``max_retries`` the chunk
+    raises ``ChunkFailure`` (``on_failure="raise"``) or is skipped with its
+    host state untouched (``on_failure="skip"`` — the quarantine path).
+    Returns a stats dict when supervised, else ``None``. ``chaos`` (an
+    object with ``before_chunk(ci, attempt)``, e.g.
+    ``envs.faults.HostChaos``) injects deterministic failures/stalls ahead
+    of each staged attempt and requires a supervisor.
     """
+    if chaos is not None and supervisor is None:
+        raise ValueError("host chaos injection needs a ChunkSupervisor "
+                         "(unsupervised streams have no retry path)")
     if num_chunks <= 0:
-        return
+        return None if supervisor is None else _empty_stream_stats()
+    if supervisor is not None:
+        return _stream_supervised(call, stage, drain, num_chunks,
+                                  supervisor, chaos)
     inflight = None
     staged = stage(0)
     for ci in range(num_chunks):
@@ -792,6 +989,48 @@ def stream_chunks(call, stage, drain, num_chunks: int,
                 staged = stage(ci + 1)
     if inflight is not None:
         drain(*inflight)
+    return None
+
+
+def _empty_stream_stats() -> dict:
+    return {"retries": 0, "watchdog_trips": 0, "failed_chunks": [],
+            "chunk_seconds": []}
+
+
+def _stream_supervised(call, stage, drain, num_chunks, supervisor, chaos):
+    """Serial chunk schedule with per-chunk retry/backoff/watchdog (see
+    ``stream_chunks``)."""
+    from repro.core.resilience import ChunkFailure, normalize_supervisor
+
+    sup = normalize_supervisor(supervisor)
+    stats = _empty_stream_stats()
+    for ci in range(num_chunks):
+        attempt = 0
+        while True:
+            t0 = time.perf_counter()
+            try:
+                if chaos is not None:
+                    chaos.before_chunk(ci, attempt)
+                out = call(stage(ci))
+                drain(ci, out)
+            except Exception as err:  # noqa: BLE001 — retry any chunk fault
+                if attempt >= sup.max_retries:
+                    stats["failed_chunks"].append(ci)
+                    if sup.on_failure == "skip":
+                        break  # quarantine: host state untouched, continue
+                    raise ChunkFailure(ci, attempt + 1, err) from err
+                time.sleep(sup.backoff_seconds
+                           * sup.backoff_multiplier ** attempt)
+                attempt += 1
+                stats["retries"] += 1
+                continue
+            elapsed = time.perf_counter() - t0
+            stats["chunk_seconds"].append(elapsed)
+            if (sup.watchdog_seconds is not None
+                    and elapsed > sup.watchdog_seconds):
+                stats["watchdog_trips"] += 1
+            break
+    return stats
 
 
 def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
@@ -799,7 +1038,9 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
                        devices: Optional[Sequence] = None,
                        chunk: Optional[int] = None,
                        overlap: bool = True, policy=None, guard=None,
-                       sharing=None, cell_size: int = 1, obs_mask=None):
+                       sharing=None, cell_size: int = 1, obs_mask=None,
+                       resilience=None, health=None, supervisor=None,
+                       chaos=None):
     """Fleet variant: N sessions' episodes streamed through one compiled
     chunk program. Trace leaves are [N, T, ...] host numpy arrays.
 
@@ -832,10 +1073,24 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
     chunking stays pure scheduling. With shared replay the agent's buffer
     must be grouped (``BatchedReplayBuffer(groups=...)``); its cell-level
     storage is staged and drained at group granularity.
+
+    ``resilience``/``health`` run the self-healing body
+    (``core.resilience``): ``health`` is a stacked [N, ...] ``HealthState``
+    (``init_fleet_health_state``); it rides the chunk carry like all fleet
+    state and the return value becomes ``(ResilientEpisodeTrace,
+    HealthState)``. Composes with sharing (per-lane health in the cell
+    body), never with guardrails.
+
+    ``supervisor``/``chaos`` put the chunk stream under host supervision
+    (retry/backoff/watchdog — see ``stream_chunks``); the supervised run's
+    stats land in ``last_fleet_run_stats()["supervisor"]``.
     """
     from repro.core.sharing import normalize_sharing
 
     sharing = normalize_sharing(sharing)
+    if resilience is not None:
+        from repro.core.resilience import normalize_resilience
+        resilience = normalize_resilience(resilience)
     cell = sharing is not None and (sharing.shared_replay
                                     or sharing.averaging)
     cs = int(cell_size) if cell else 1
@@ -949,6 +1204,17 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
             **base_fields,
             guard_events=np.zeros((n, steps), np.uint8),
             shadow_objectives=np.zeros((n, steps), np.float32))
+    elif resilience is not None:
+        from repro.core.resilience import (ResilientCarry,
+                                           ResilientEpisodeTrace)
+        if health is None:
+            raise ValueError(
+                "resilient fleet runs need a stacked HealthState "
+                "(core.resilience.init_fleet_health_state)")
+        # fresh host arrays: the caller's health is never mutated in place
+        health = jax.tree_util.tree_map(np.array, health)
+        out = ResilientEpisodeTrace(
+            **base_fields, health_events=np.zeros((n, steps), np.uint8))
     else:
         out = EpisodeTrace(**base_fields)
 
@@ -956,7 +1222,8 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
                            agent._actor_tx, agent._critic_tx, learn,
                            agent.cfg.updates_per_step,
                            fleet=True, devices=devices, policy=policy,
-                           sharing=sharing, cell_size=cs, obs_mask=obs_mask)
+                           sharing=sharing, cell_size=cs, obs_mask=obs_mask,
+                           resilience=resilience)
 
     peak = [live_device_bytes()]
 
@@ -993,6 +1260,8 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
             xs = (chunk_of(use_warmup), chunk_of(warmup), chunk_of(noise))
         if policy is not None:
             carry = GuardedCarry(base=carry, guard=chunk_of(guard))
+        elif resilience is not None:
+            carry = ResilientCarry(base=carry, health=chunk_of(health))
         return (chunk_of(params), chunk_of(w_vec), chunk_of(lo),
                 chunk_of(span), carry, xs)
 
@@ -1020,6 +1289,8 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
             out.guard_events[a:b] = np.asarray(trace.guard_events)[:cnt]
             out.shadow_objectives[a:b] = np.asarray(
                 trace.shadow_objectives)[:cnt]
+        elif resilience is not None:
+            out.health_events[a:b] = np.asarray(trace.health_events)[:cnt]
 
         # write the chunk's carry back into the fleet's host state
         def write_back(dst_tree, src_tree):
@@ -1029,6 +1300,9 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
 
         if policy is not None:
             write_back(guard, carry.guard)
+            carry = carry.base
+        elif resilience is not None:
+            write_back(health, carry.health)
             carry = carry.base
         write_back(env_states, carry.env_state)
         write_back(ddpg_states, carry.ddpg)
@@ -1050,7 +1324,9 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
             sizes[a:b] = np.asarray(carry.buffer.size)[:cnt]
         learn_keys[a:b] = np.asarray(carry.learn_key)[:cnt]
 
-    stream_chunks(call, stage, drain, num_chunks, overlap=overlap)
+    stream_stats = stream_chunks(call, stage, drain, num_chunks,
+                                 overlap=overlap, supervisor=supervisor,
+                                 chaos=chaos)
 
     _LAST_FLEET_STATS.clear()
     _LAST_FLEET_STATS.update(
@@ -1058,6 +1334,8 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
         padded_sessions=pad_total, peak_device_bytes=peak[0],
         executable_cache_size=fn._cache_size(), program=fn,
         cell_size=cs, sharing=sharing)
+    if stream_stats is not None:
+        _LAST_FLEET_STATS["supervisor"] = stream_stats
 
     for e, st in zip(envs, _unstack(env_states, n)):
         e.model_state = st
@@ -1069,6 +1347,8 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
         agent.buffer.set_storage(*buf_np, int(next_slots[0]), int(sizes[0]))
     if policy is not None:
         return out, guard
+    if resilience is not None:
+        return out, health
     return out
 
 

@@ -190,7 +190,8 @@ class FleetResult:
 
 def replay_compact_trace(env, trace, i: int, *, start: int, per_step: float,
                          prev_config: dict, best_objective: float,
-                         restart_seconds: float = 0.0) -> dict:
+                         restart_seconds: float = 0.0,
+                         finite_baseline: bool = False) -> dict:
     """Reconstruct session ``i``'s decision history from a compact trace.
 
     The scan engine returns action INDICES and fixed-point restarts; this
@@ -206,6 +207,12 @@ def replay_compact_trace(env, trace, i: int, *, start: int, per_step: float,
     config/metrics/objective beating ``best_objective``) and
     ``restart_seconds`` (the running total, accumulated step-by-step from
     the passed-in value so the float addition order matches the host loop).
+
+    ``finite_baseline=True`` (the resilient engines) mirrors the in-graph
+    carry's sanitization: ``cur_metrics`` is the LAST all-finite metrics row
+    — a corrupted reading stays raw in the records but never becomes the
+    session's observation baseline — and ``None`` when the whole trace is
+    corrupted (the caller keeps its previous finite metrics).
     """
     steps = trace.rewards.shape[1]
     configs = env.param_space.configs_from_indices(trace.action_idx[i])
@@ -230,8 +237,15 @@ def replay_compact_trace(env, trace, i: int, *, start: int, per_step: float,
         ))
         prev_config = configs[t]
     cur_config = configs[-1] if steps else prev_config
-    cur_metrics = ({n: float(v) for n, v in zip(names, trace.metrics[i, -1])}
-                   if steps else None)
+    cur_metrics = None
+    if steps:
+        last = steps - 1
+        if finite_baseline:
+            finite = np.isfinite(trace.metrics[i]).all(axis=1)
+            last = int(np.nonzero(finite)[0][-1]) if finite.any() else None
+        if last is not None:
+            cur_metrics = {n: float(v)
+                           for n, v in zip(names, trace.metrics[i, last])}
     env._last_config = dict(cur_config)
     return {"records": records, "cur_config": cur_config,
             "cur_metrics": cur_metrics, "best": best,
@@ -254,7 +268,8 @@ class FleetTuner:
                  vectorized: Optional[bool] = None, engine: str = "host",
                  devices: Optional[Sequence] = None,
                  chunk: Optional[int] = None, overlap: bool = True,
-                 policy=None, sharing=None, cell_size: int = 1):
+                 policy=None, sharing=None, cell_size: int = 1,
+                 resilience=None, supervisor=None, chaos=None):
         from repro.core.sharing import normalize_sharing
         if not (len(envs) == len(scalarizers) == agent.num_sessions):
             raise ValueError("envs, scalarizers and agent sessions must align")
@@ -273,6 +288,24 @@ class FleetTuner:
             raise ValueError(
                 "experience sharing does not compose with DeploymentPolicy "
                 "guardrails; run guarded fleets with sharing off")
+        if resilience is not None:
+            from repro.core.resilience import normalize_resilience
+            resilience = normalize_resilience(resilience)
+        if resilience is not None and engine != "scan":
+            raise ValueError(
+                "ResiliencePolicy runs inside the episode scan; use "
+                "engine='scan' (the host loop has no snapshot/reset body)")
+        if resilience is not None and policy is not None:
+            raise ValueError(
+                "resilience does not compose with DeploymentPolicy "
+                "guardrails; run guarded fleets without a ResiliencePolicy")
+        if supervisor is not None:
+            from repro.core.resilience import normalize_supervisor
+            supervisor = normalize_supervisor(supervisor)
+        if (supervisor is not None or chaos is not None) and engine != "scan":
+            raise ValueError(
+                "chunk supervision is a scan-engine feature (the host loop "
+                "has no chunk stream to supervise)")
         cell_modes = sharing is not None and (sharing.shared_replay
                                               or sharing.averaging)
         self.cell_size = int(cell_size) if cell_modes else 1
@@ -308,6 +341,12 @@ class FleetTuner:
         self.guard_events = np.zeros((len(envs), 0), np.uint8)
         self.shadow_objectives = np.zeros((len(envs), 0), np.float32)
         self._guard_counters: Optional[list] = None  # one dict per session
+        self.resilience = resilience
+        self.supervisor = supervisor
+        self.chaos = chaos
+        self._health = None  # stacked HealthState, persists across run()
+        self.health_events = np.zeros((len(envs), 0), np.uint8)
+        self._health_counters: Optional[list] = None  # one dict per session
         self.envs = list(envs)
         self.scalarizers = list(scalarizers)
         self.agent = agent
@@ -349,7 +388,8 @@ class FleetTuner:
                   devices: Optional[Sequence] = None,
                   chunk: Optional[int] = None, overlap: bool = True,
                   replay_dtype=jnp.float32, policy=None,
-                  sharing=None) -> "FleetTuner":
+                  sharing=None, resilience=None, supervisor=None,
+                  chaos=None) -> "FleetTuner":
         """Build a fleet for the full seeds x workloads x objectives grid.
 
         ``env_factory(workload, seed)`` defaults to ``env_cls(workload,
@@ -381,6 +421,15 @@ class FleetTuner:
         ``policy`` (``core.guardrails.DeploymentPolicy``) turns on the
         shadow/canary guardrails for every session (scan engine only;
         default off — bitwise the unguarded fleet).
+
+        ``resilience`` (``core.resilience.ResiliencePolicy``) turns on the
+        self-healing scan body for every session: snapshot/reset on
+        non-finite detection, degrade-to-frozen past the reset budget (scan
+        engine only; default off — bitwise the plain fleet, same compiled
+        program). ``supervisor`` (``core.resilience.ChunkSupervisor``) adds
+        host-side chunk retry/backoff + a wall-clock watchdog to the chunk
+        stream; ``chaos`` (``envs.faults.HostChaos``) injects deterministic
+        transient staging failures for testing (needs a supervisor).
 
         ``sharing`` (``core.sharing.SharingConfig``) turns on cross-session
         experience sharing within each workload×objective CELL — the
@@ -459,7 +508,8 @@ class FleetTuner:
                    engine=engine, devices=devices if engine == "scan" else None,
                    chunk=chunk if engine == "scan" else None, overlap=overlap,
                    policy=policy, sharing=sharing,
-                   cell_size=cell_size if cell_modes else 1)
+                   cell_size=cell_size if cell_modes else 1,
+                   resilience=resilience, supervisor=supervisor, chaos=chaos)
 
     # ------------------------------------------------------------------
 
@@ -582,12 +632,36 @@ class FleetTuner:
                 merge_counters(c, guardrail_counters(trace.guard_events[i],
                                                      trace.restarts[i]))
                 for i, c in enumerate(self._guard_counters)]
+        elif self.resilience is not None:
+            from repro.core.resilience import (
+                empty_health_counters, health_counters,
+                init_fleet_health_state, merge_health_counters)
+            if self._health is None:
+                self._health = init_fleet_health_state(
+                    self.agent.states, n_sessions, self.resilience)
+            trace, self._health = run_fleet_episode_scan(
+                self.envs, self.agent, self.scalarizers, self._cur_metrics,
+                steps, learn=True, devices=self.devices, chunk=self.chunk,
+                overlap=self.overlap, sharing=self.sharing,
+                cell_size=self.cell_size, obs_mask=self._obs_mask,
+                resilience=self.resilience, health=self._health,
+                supervisor=self.supervisor, chaos=self.chaos)
+            self.health_events = np.concatenate(
+                [self.health_events, trace.health_events], axis=1)
+            if self._health_counters is None:
+                self._health_counters = [empty_health_counters()
+                                         for _ in range(n_sessions)]
+            self._health_counters = [
+                merge_health_counters(c,
+                                      health_counters(trace.health_events[i]))
+                for i, c in enumerate(self._health_counters)]
         else:
             trace = run_fleet_episode_scan(
                 self.envs, self.agent, self.scalarizers, self._cur_metrics,
                 steps, learn=True, devices=self.devices, chunk=self.chunk,
                 overlap=self.overlap, sharing=self.sharing,
-                cell_size=self.cell_size, obs_mask=self._obs_mask)
+                cell_size=self.cell_size, obs_mask=self._obs_mask,
+                supervisor=self.supervisor, chaos=self.chaos)
         per_step = (time.perf_counter() - t0) / max(1, steps)
 
         for i in range(n_sessions):
@@ -595,7 +669,8 @@ class FleetTuner:
                 self.envs[i], trace, i, start=start, per_step=per_step,
                 prev_config=self._cur_configs[i],
                 best_objective=self.best_objectives[i],
-                restart_seconds=float(self.simulated_restart_seconds[i]))
+                restart_seconds=float(self.simulated_restart_seconds[i]),
+                finite_baseline=self.resilience is not None)
             self.histories[i].extend(rep["records"])
             self.simulated_restart_seconds[i] = rep["restart_seconds"]
             if rep["best"] is not None:
@@ -666,6 +741,17 @@ class FleetTuner:
         return guardrail_stats(self.policy, guard_i, counters,
                                space=self.envs[i].param_space)
 
+    def health_stats(self, i: int) -> Optional[dict]:
+        """Session ``i``'s exported health record (None when off)."""
+        if self.resilience is None:
+            return None
+        from repro.core.resilience import empty_health_counters, health_stats
+        health_i = (jax.tree_util.tree_map(lambda x: x[i], self._health)
+                    if self._health is not None else None)
+        counters = (self._health_counters[i] if self._health_counters
+                    else empty_health_counters())
+        return health_stats(self.resilience, health_i, counters)
+
     def _finish(self, t_wall: float) -> FleetResult:
         # Final recommendation per session (the same §III-E rule as Tuner.run,
         # via the shared recommend_final helper).
@@ -697,6 +783,7 @@ class FleetTuner:
                     self.simulated_restart_seconds[i]),
                 wall_seconds=wall,
                 guardrail_stats=self.guardrail_stats(i),
+                health_stats=self.health_stats(i),
             ))
         return FleetResult(results=results, labels=list(self.labels),
                            wall_seconds=wall)

@@ -9,6 +9,15 @@ the fused learner (``ddpg_learn_scan``), which samples minibatches on-device.
 ``BatchedReplayBuffer`` is the device-resident fleet variant: one buffer per
 tuning session stacked on a leading session axis, written in lockstep, with
 identical FIFO semantics per session.
+
+Dropped writes (resilience): the in-graph FIFO write these buffers hand
+their storage to is branch-free — when ``core.resilience`` flags a step's
+transition as corrupted (non-finite metrics), the scan body scatters the row
+OUT of bounds with ``mode="drop"`` and freezes ``next_slot``/``size``, so
+the poisoned sample never lands and the window's cursor arithmetic stays
+exactly the FIFO described here. A merged cell window (``groups=``) gets the
+same treatment per contributing lane: a corrupted or degraded member simply
+stops contributing; the survivors' interleave order is unchanged.
 """
 
 from __future__ import annotations

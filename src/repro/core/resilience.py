@@ -1,0 +1,485 @@
+"""Self-healing episode engine: in-scan divergence quarantine + chunk retry.
+
+Guardrails (PR 7) protect the *tuned system* from bad configurations; this
+module protects the *tuner* from its own failures, at two layers:
+
+In-graph (``ResiliencePolicy``): the resilient scan body keeps a last-good
+snapshot of the learner (params + targets + opt state) in the carry, detects
+non-finite params/losses/metrics after each learn scan, and branch-free
+(``jnp.where``) resets a diverged session to the snapshot. Every step emits a
+uint8 ``health_events`` bitmask (NONFINITE / RESET / DEGRADED) into the
+compact trace. Once a session has spent ``max_resets`` resets (or crossed
+``degrade_after`` total non-finite detections), it DEGRADES to
+frozen-incumbent mode: its learner pins to the snapshot so the env keeps
+serving the incumbent config while cellmates keep training — and
+shared-replay cells mask a corrupted or degraded member's contributions
+(FIFO writes and the parameter-averaging mean), so one NaN cannot poison a
+merged window.
+
+Host supervisor (``ChunkSupervisor``): ``core.episode.stream_chunks`` gains
+retry-with-exponential-backoff on transient chunk failures and a wall-clock
+watchdog per chunk. Host numpy between chunks is the source of truth, so a
+failed chunk re-stages and re-runs deterministically — retries are bitwise
+invisible on success. After ``max_retries`` the chunk either raises
+``ChunkFailure`` (``on_failure="raise"``) or is skipped so the fleet
+survives (``on_failure="skip"`` — ``FleetService.advance`` quarantines the
+chunk's sessions through the existing leave path, bit-neutral for
+survivors).
+
+Resilience defaults OFF. ``resilience=None`` never touches this module: the
+episode builder compiles the exact pre-resilience program (same cache key,
+same program object), pinned bitwise by tests/test_resilience.py — the same
+off-by-executable-identity precedent as guardrails and sharing.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.action_mapping import ParamSpace, jax_coord_maps
+from repro.core.ddpg import DDPGConfig, actor_apply, _learn_scan
+
+# health_events bitmask (uint8): one trace byte records the step's health
+EVENT_NONFINITE = 1  # non-finite detected in metrics/losses/params this step
+EVENT_RESET = 2      # learner restored to the last-good snapshot
+EVENT_DEGRADED = 4   # session is in frozen-incumbent (degraded) mode
+
+
+class ResiliencePolicy(NamedTuple):
+    """Static divergence-recovery policy, baked into the compiled episode.
+
+    Hashable on purpose: the policy joins the episode program's cache key,
+    so ``resilience=None`` compiles the exact pre-resilience program.
+
+    ``nonfinite_check``  master switch; ``False`` normalizes the whole
+                         policy to ``None`` (fully off).
+    ``max_resets``       snapshot resets a session may spend before the next
+                         divergence degrades it (in-graph counter, can never
+                         be exceeded).
+    ``snapshot_every``   cadence (steps) of the last-good snapshot refresh —
+                         a reset rolls the learner back at most this many
+                         steps.
+    ``degrade_after``    optional cap on TOTAL non-finite detections; once
+                         crossed the session degrades even with resets left
+                         (``None`` = only the exhausted-resets path).
+    """
+
+    nonfinite_check: bool = True
+    max_resets: int = 3
+    snapshot_every: int = 1
+    degrade_after: Optional[int] = None
+
+
+def normalize_resilience(policy) -> Optional[ResiliencePolicy]:
+    """Canonicalize a resilience policy; fully-off collapses to ``None``.
+
+    ``None`` stays ``None``; ``nonfinite_check=False`` IS off (no detector,
+    nothing downstream can fire), so it returns ``None`` too — callers and
+    the episode cache key therefore agree on one canonical off value."""
+    if policy is None:
+        return None
+    p = ResiliencePolicy(*policy)
+    if not p.nonfinite_check:
+        return None
+    if p.max_resets < 0:
+        raise ValueError(f"max_resets must be >= 0, got {p.max_resets}")
+    if p.snapshot_every < 1:
+        raise ValueError(
+            f"snapshot_every must be >= 1, got {p.snapshot_every}")
+    if p.degrade_after is not None and p.degrade_after < 1:
+        raise ValueError(
+            f"degrade_after must be >= 1 (or None), got {p.degrade_after}")
+    return ResiliencePolicy(True, int(p.max_resets), int(p.snapshot_every),
+                            None if p.degrade_after is None
+                            else int(p.degrade_after))
+
+
+class HealthState(NamedTuple):
+    """Per-session health carry (numpy between chunks, like all fleet state).
+
+    ``snapshot`` is the last-good learner state (a full ``DDPGState``
+    pytree); ``resets``/``nonfinite`` are lifetime i32 counters;
+    ``degraded`` is the sticky frozen-incumbent flag; ``since_snap`` counts
+    steps since the snapshot was last refreshed."""
+
+    snapshot: Any     # DDPGState pytree (last-good params/targets/opt)
+    resets: Any       # i32 scalar, lifetime count (never exceeds max_resets)
+    nonfinite: Any    # i32 scalar, lifetime non-finite detections
+    degraded: Any     # bool scalar, sticky
+    since_snap: Any   # i32 scalar
+
+
+class ResilientCarry(NamedTuple):
+    base: Any    # core.episode.EpisodeCarry
+    health: HealthState
+
+
+class ResilientEpisodeTrace(NamedTuple):
+    """``EpisodeTrace`` plus the per-step health byte.
+
+    Field names (not positions) are the contract: the first five fields
+    mirror ``EpisodeTrace`` exactly, so every trace consumer
+    (``replay_compact_trace``, the tuner history reconstruction) reads a
+    resilient trace unchanged."""
+
+    action_idx: Any
+    metrics: Any
+    rewards: Any
+    objectives: Any
+    restarts: Any
+    health_events: Any  # [T] uint8
+
+
+# ---------------------------------------------------------------------------
+# Pure decision function (numpy AND jnp operands — the property tests run it
+# on host scalars; the scan body runs it on traced arrays)
+# ---------------------------------------------------------------------------
+
+def health_decision(bad, resets, nonfinite, degraded,
+                    policy: ResiliencePolicy):
+    """One step of the health state machine (branch-free).
+
+    ``bad``/``degraded`` are bool arrays (np.bool\\_ or traced), ``resets``/
+    ``nonfinite`` i32. Returns ``(do_reset, new_degraded, new_resets,
+    new_nonfinite)``. Invariants (pinned by the property suite): resets
+    never exceed ``max_resets``; ``degraded`` is sticky; a degraded step
+    never resets."""
+    nf = nonfinite + bad.astype(nonfinite.dtype)
+    new_degraded = degraded | (bad & (resets >= policy.max_resets))
+    if policy.degrade_after is not None:
+        new_degraded = new_degraded | (nf >= policy.degrade_after)
+    do_reset = bad & ~new_degraded
+    return do_reset, new_degraded, resets + do_reset.astype(resets.dtype), nf
+
+
+# ---------------------------------------------------------------------------
+# Non-finite detection + branch-free pytree selection
+# ---------------------------------------------------------------------------
+
+def tree_nonfinite(tree):
+    """Scalar bool: any non-finite value in any float leaf of ``tree``."""
+    bad = jnp.zeros((), bool)
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            bad = bad | jnp.any(~jnp.isfinite(leaf))
+    return bad
+
+
+def tree_nonfinite_rows(tree):
+    """[rows] bool: per-row (leading axis) non-finite flag across all float
+    leaves of a row-stacked pytree (the cell body's per-lane detector)."""
+    bad = None
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            continue
+        row_bad = jnp.any(~jnp.isfinite(leaf.reshape(leaf.shape[0], -1)),
+                          axis=1)
+        bad = row_bad if bad is None else (bad | row_bad)
+    if bad is None:
+        raise ValueError("tree has no float leaves to health-check")
+    return bad
+
+
+def select_tree(flag, when_true, when_false):
+    """Branch-free pytree select: ``flag`` is a scalar bool or a [rows] bool
+    matching the leaves' leading axis; it is broadcast across each leaf's
+    trailing dims (the ``jnp.where`` reset/freeze primitive)."""
+    def sel(a, b):
+        f = jnp.reshape(flag, jnp.shape(flag)
+                        + (1,) * (a.ndim - jnp.ndim(flag)))
+        return jnp.where(f, a, b)
+    return jax.tree_util.tree_map(sel, when_true, when_false)
+
+
+# ---------------------------------------------------------------------------
+# Health-state construction
+# ---------------------------------------------------------------------------
+
+def _snapshot_tree(states, resilience):
+    """The snapshot payload for a policy: the full learner state, or an
+    EMPTY pytree for the every-step cadence — ``snapshot_every=1`` resolves
+    the revert target in-graph as the step-entry state (see
+    ``build_resilient_step``), so staging a second learner copy through the
+    scan carry would be pure overhead."""
+    if resilience is not None and resilience.snapshot_every == 1:
+        return ()
+    return jax.tree_util.tree_map(np.array, states)
+
+
+def init_health_state(ddpg_state, resilience=None) -> HealthState:
+    """Fresh health state for one session: the snapshot starts at the
+    session's current learner state (host numpy leaves); pass the
+    session's ``ResiliencePolicy`` so the every-step cadence can skip the
+    snapshot copy entirely."""
+    return HealthState(
+        snapshot=_snapshot_tree(ddpg_state, resilience),
+        resets=np.int32(0), nonfinite=np.int32(0),
+        degraded=np.bool_(False), since_snap=np.int32(0))
+
+
+def init_fleet_health_state(stacked_states, n: int,
+                            resilience=None) -> HealthState:
+    """Stacked [N, ...] health state for a fleet (host numpy leaves).
+    ``stacked_states`` is the agent's session-stacked ``DDPGState``."""
+    return HealthState(
+        snapshot=_snapshot_tree(stacked_states, resilience),
+        resets=np.zeros(n, np.int32), nonfinite=np.zeros(n, np.int32),
+        degraded=np.zeros(n, bool), since_snap=np.zeros(n, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# The resilient episode step (the scan body `core.episode` builds when a
+# ResiliencePolicy is set)
+# ---------------------------------------------------------------------------
+
+def build_resilient_step(step_fn, space: ParamSpace, cfg: DDPGConfig,
+                         actor_tx, critic_tx, learn: bool, num_updates: int,
+                         kernel_mode, resilience: ResiliencePolicy,
+                         obs_mask=None):
+    """one_step(params, w_vec, lo, span, ResilientCarry, x) ->
+    (ResilientCarry, ResilientEpisodeTrace-row).
+
+    Mirrors ``core.episode._build_episode``'s body (same fusion islands,
+    same f32 fixed-order arithmetic) with the health layer threaded around
+    the FIFO write and the learn scan:
+
+      * a corrupted observation (non-finite metric reading) is recorded in
+        the trace as-is but never enters the carry (the next actor input and
+        reward baseline keep the previous finite state) or the replay FIFO
+        (the write scatters out of bounds and drops);
+      * after the learn scan, non-finite params/losses/metrics trigger a
+        branch-free reset to the last-good snapshot — or, past the policy's
+        budgets, the sticky degraded freeze (learner pinned to the
+        snapshot, env keeps serving the incumbent).
+    """
+    from repro.core.episode import (  # lazy: episode imports us lazily too
+        BufferState, EpisodeCarry, _encode_restart)
+    from repro.envs.base import barriered_step, fusion_barrier
+
+    do_updates = learn and num_updates > 0
+    coord_maps = jax_coord_maps(space)
+    idx_dtype = space.index_dtype()
+    mask = None if obs_mask is None else jnp.asarray(obs_mask, jnp.float32)
+    rz = resilience
+
+    def one_step(params, w_vec, lo, span, carry, x):
+        base, health = carry.base, carry.health
+        use_warmup, warmup_a, noise = x
+
+        # act: identical to the unguarded body (the carry's state_vec is
+        # finite by induction — see the sanitization below)
+        actor, state_vec = fusion_barrier(
+            (base.ddpg.actor, base.state_vec))
+        obs = state_vec if mask is None else state_vec * mask
+        policy = fusion_barrier(actor_apply(actor, obs))
+        explored = jnp.clip(policy + noise, 0.0, 1.0)
+        action = jnp.where(use_warmup, jnp.clip(warmup_a, 0.0, 1.0), explored)
+        action_idx = jnp.stack(
+            [coord_maps[j](action[j])["idx"] for j in range(space.dim)]
+        ).astype(idx_dtype)
+
+        env_state, metrics_vec, restart = barriered_step(
+            step_fn, params, base.env_state, action, False)
+        norm = jnp.where(span > 0,
+                         jnp.clip((metrics_vec - lo) / span, 0.0, 1.0), 0.0)
+        obj = jnp.float32(0.0)
+        for j in range(norm.shape[0]):
+            obj = obj + w_vec[j] * norm[j]
+        reward = (obj - base.objective) / jnp.maximum(
+            base.objective, jnp.float32(1e-6))
+
+        # a corrupted reading poisons norm/obj/reward; the trace records the
+        # raw observation, everything stateful below is masked on bad_obs
+        bad_obs = jnp.any(~jnp.isfinite(metrics_vec))
+
+        if learn:  # FIFO write, dropped entirely when the transition is bad
+            buf = base.buffer
+            capacity = buf.s.shape[0]
+            i = buf.next_slot
+            s_row = (base.state_vec if mask is None
+                     else base.state_vec * mask)
+            s2_row = norm if mask is None else norm * mask
+            pos = jnp.where(bad_obs, capacity, i)  # OOB scatter -> drop
+            buf = BufferState(
+                s=buf.s.at[pos].set(s_row.astype(buf.s.dtype), mode="drop"),
+                a=buf.a.at[pos].set(action.astype(buf.a.dtype), mode="drop"),
+                r=buf.r.at[pos].set(reward.astype(buf.r.dtype), mode="drop"),
+                s2=buf.s2.at[pos].set(s2_row.astype(buf.s2.dtype),
+                                      mode="drop"),
+                next_slot=jnp.where(bad_obs, i, (i + 1) % capacity),
+                size=jnp.where(bad_obs, buf.size,
+                               jnp.minimum(buf.size + 1, capacity)))
+        else:
+            buf = base.buffer
+        if do_updates:
+            # dropped writes mean the buffer CAN be empty here (a corrupted
+            # step 0): clamp the sampled size so the gather stays in bounds
+            # and mark the step bad-by-observation. No discard select is
+            # needed — ``empty`` implies this step's write dropped
+            # (``bad_obs``), ``bad`` always restores the snapshot below, and
+            # an all-bad prefix keeps snapshot == base.ddpg by induction. A
+            # select here would also pin ``base.ddpg`` live across the learn
+            # scan and cost its in-place buffer reuse (~10% step time).
+            empty = buf.size == 0
+            learn_key, k = jax.random.split(base.learn_key)
+            learn_in = fusion_barrier((base.ddpg, buf, k))
+            ddpg_new, lmetrics = fusion_barrier(_learn_scan(
+                learn_in[0],
+                (learn_in[1].s, learn_in[1].a, learn_in[1].r,
+                 learn_in[1].s2),
+                jnp.maximum(learn_in[1].size, 1), learn_in[2],
+                cfg, actor_tx, critic_tx, num_updates,
+                kernel_mode=kernel_mode))
+            bad_learn = ~empty & (tree_nonfinite(ddpg_new)
+                                  | tree_nonfinite(lmetrics))
+        else:
+            learn_key, ddpg_new = base.learn_key, base.ddpg
+            bad_learn = jnp.zeros((), bool)
+
+        bad = bad_obs | bad_learn
+        do_reset, degraded, resets, nf_total = health_decision(
+            bad, health.resets, health.nonfinite, health.degraded, rz)
+        # reset restores the snapshot; degraded pins to it permanently
+        # (frozen incumbent — cellmates, and the env, keep running)
+        if rz.snapshot_every == 1:
+            # the every-step cadence admits an exact algebraic shortcut: a
+            # refreshed snapshot is always next step's ENTRY state, so the
+            # revert target IS ``base.ddpg`` and no snapshot tree needs to
+            # ride the scan carry (``init_health_state`` stages an empty
+            # pytree) — this removes a full learner-state copy per step
+            # for the default policy, bitwise-identically
+            ddpg_out = select_tree(do_reset | degraded, base.ddpg, ddpg_new)
+            snapshot = health.snapshot              # () — no leaves
+            refresh = ~bad & ~degraded
+        else:
+            ddpg_out = select_tree(do_reset | degraded, health.snapshot,
+                                   ddpg_new)
+            due = (health.since_snap + 1) >= rz.snapshot_every
+            refresh = due & ~bad & ~degraded
+            snapshot = select_tree(refresh, ddpg_out, health.snapshot)
+        since = jnp.where(refresh, 0, health.since_snap + 1)
+
+        event = (bad.astype(jnp.uint8) * EVENT_NONFINITE
+                 + do_reset.astype(jnp.uint8) * EVENT_RESET
+                 + degraded.astype(jnp.uint8) * EVENT_DEGRADED)
+
+        carry = ResilientCarry(
+            base=EpisodeCarry(
+                env_state, ddpg_out, buf, learn_key,
+                jnp.where(bad_obs, base.state_vec, norm),
+                jnp.where(bad_obs, base.objective, obj)),
+            health=HealthState(snapshot, resets, nf_total, degraded, since))
+        return carry, ResilientEpisodeTrace(
+            action_idx, metrics_vec, reward, obj, _encode_restart(restart),
+            event)
+
+    return one_step
+
+
+# ---------------------------------------------------------------------------
+# Host-side counter export (OTEL-ish, derived from the compact trace)
+# ---------------------------------------------------------------------------
+
+HEALTH_COUNTER_KEYS = ("steps", "nonfinite", "resets", "degraded_steps")
+
+
+def health_counters(events: np.ndarray) -> dict:
+    """Structured counters from a session's health trace ([T] uint8). Pure
+    accounting — accumulate across runs with ``merge_health_counters``."""
+    ev = np.asarray(events)
+    return {
+        "steps": int(ev.size),
+        "nonfinite": int(((ev & EVENT_NONFINITE) != 0).sum()),
+        "resets": int(((ev & EVENT_RESET) != 0).sum()),
+        "degraded_steps": int(((ev & EVENT_DEGRADED) != 0).sum()),
+    }
+
+
+def merge_health_counters(a: dict, b: dict) -> dict:
+    """Sum two counter dicts (missing keys count as zero)."""
+    return {k: a.get(k, 0) + b.get(k, 0) for k in dict.fromkeys((*a, *b))}
+
+
+def empty_health_counters() -> dict:
+    return {k: 0 for k in HEALTH_COUNTER_KEYS}
+
+
+def health_stats(policy: ResiliencePolicy, health: HealthState,
+                 counters: dict) -> dict:
+    """One session's exported health record: policy + cumulative counters +
+    the authoritative in-graph totals (cross-checked against the
+    trace-derived counters by the tests)."""
+    d = dict(counters)
+    d.update(
+        policy=dict(policy._asdict()),
+        resets_total=int(health.resets) if health is not None else 0,
+        nonfinite_total=int(health.nonfinite) if health is not None else 0,
+        degraded=bool(health.degraded) if health is not None else False)
+    return d
+
+
+# ---------------------------------------------------------------------------
+# Host supervisor: chunk retry / backoff / watchdog configuration
+# ---------------------------------------------------------------------------
+
+class ChunkSupervisor(NamedTuple):
+    """Host-side chunk supervision for ``core.episode.stream_chunks``.
+
+    ``max_retries``        re-runs of a failed chunk before giving up. Host
+                           numpy between chunks is the source of truth, so a
+                           retry re-stages the SAME inputs and is bitwise
+                           invisible on success.
+    ``backoff_seconds``    initial retry delay; grows by
+                           ``backoff_multiplier`` per attempt.
+    ``watchdog_seconds``   per-chunk wall-clock budget; a chunk exceeding it
+                           is counted as a ``watchdog_trips`` stall in the
+                           run stats (an in-process chunk cannot be
+                           preempted, so detection is post-hoc).
+    ``on_failure``         ``"raise"`` propagates ``ChunkFailure`` after
+                           retries are exhausted; ``"skip"`` leaves the
+                           chunk's host state untouched and continues with
+                           the remaining chunks (``FleetService`` then
+                           quarantines the chunk's sessions via the leave
+                           path).
+    """
+
+    max_retries: int = 2
+    backoff_seconds: float = 0.05
+    backoff_multiplier: float = 2.0
+    watchdog_seconds: Optional[float] = None
+    on_failure: str = "raise"
+
+
+class ChunkFailure(RuntimeError):
+    """A chunk kept failing after every supervised retry."""
+
+    def __init__(self, chunk_index: int, attempts: int, cause: Exception):
+        super().__init__(
+            f"chunk {chunk_index} failed after {attempts} attempt(s): "
+            f"{cause!r}")
+        self.chunk_index = int(chunk_index)
+        self.attempts = int(attempts)
+        self.cause = cause
+
+
+@functools.lru_cache(maxsize=None)
+def _canon_supervisor(sup: ChunkSupervisor) -> ChunkSupervisor:
+    if sup.max_retries < 0:
+        raise ValueError(f"max_retries must be >= 0, got {sup.max_retries}")
+    if sup.on_failure not in ("raise", "skip"):
+        raise ValueError(
+            f"on_failure must be 'raise' or 'skip', got {sup.on_failure!r}")
+    return sup
+
+
+def normalize_supervisor(sup) -> Optional[ChunkSupervisor]:
+    """Validate a supervisor config; ``None`` stays ``None`` (unsupervised:
+    the pristine pipeline with zero added host work)."""
+    if sup is None:
+        return None
+    return _canon_supervisor(ChunkSupervisor(*sup))

@@ -104,6 +104,9 @@ class _Session:
     # guardrails (service-wide policy; None when guardrails are off)
     guard: object = None        # core.guardrails.GuardState, numpy leaves
     guard_counters: Optional[dict] = None
+    # resilience (service-wide policy; None when resilience is off)
+    health: object = None       # core.resilience.HealthState, numpy leaves
+    health_counters: Optional[dict] = None
 
 
 class FleetService:
@@ -127,7 +130,8 @@ class FleetService:
                  buffer_capacity: int = 64, warmup_steps: int = 8,
                  eval_runs: int = 3, overlap: bool = True,
                  checkpoint_dir: Optional[str] = None, keep: int = 3,
-                 policy=None, sharing=None, cell_size: int = 1):
+                 policy=None, sharing=None, cell_size: int = 1,
+                 resilience=None, supervisor=None, chaos=None):
         from repro.core.sharing import normalize_sharing
         if chunk <= 0:
             raise ValueError(f"chunk must be positive, got {chunk}")
@@ -136,6 +140,16 @@ class FleetService:
             raise ValueError(
                 "experience sharing does not compose with DeploymentPolicy "
                 "guardrails; run guarded services with sharing off")
+        if resilience is not None:
+            from repro.core.resilience import normalize_resilience
+            resilience = normalize_resilience(resilience)
+        if resilience is not None and policy is not None:
+            raise ValueError(
+                "resilience does not compose with DeploymentPolicy "
+                "guardrails; run guarded services without a ResiliencePolicy")
+        if supervisor is not None:
+            from repro.core.resilience import normalize_supervisor
+            supervisor = normalize_supervisor(supervisor)
         cell_modes = sharing is not None and (sharing.shared_replay
                                               or sharing.averaging)
         cell_size = int(cell_size) if cell_modes else 1
@@ -166,6 +180,16 @@ class FleetService:
         # service-wide DeploymentPolicy (core.guardrails); None = off,
         # bitwise the unguarded service
         self.policy = policy
+        # service-wide ResiliencePolicy (core.resilience); None = off,
+        # bitwise (and by executable identity) the plain service
+        self.resilience = resilience
+        # host-side chunk supervision: retries are bitwise-invisible on
+        # success; a chunk that keeps failing is SKIPPED and its sessions
+        # quarantined through the leave path at the next boundary (the
+        # supervisor's on_failure is forced to "skip" inside advance —
+        # a persistent service must survive, not crash)
+        self.supervisor = supervisor
+        self.chaos = chaos
         # service-wide SharingConfig (core.sharing); None = off, bitwise
         # (and by executable identity) the non-sharing service. Sessions
         # with the same workload x objective bind into cells of up to
@@ -264,6 +288,10 @@ class FleetService:
             guard = init_guard_state(
                 env.param_space, default_config,
                 scal.objective(default_metrics) if default_metrics else 0.0)
+        health = None
+        if self.resilience is not None:
+            from repro.core.resilience import init_health_state
+            health = init_health_state(ddpg, self.resilience)
         return _Session(
             sid=sid, label=label, workload=workload, weights=weights,
             seed=seed, env=env, scalarizer=scal, ddpg=ddpg, buf=buf,
@@ -281,7 +309,7 @@ class FleetService:
             best_objective=(scal.objective(default_metrics)
                             if default_metrics else float("-inf")),
             history=[], restart_seconds=0.0, joined_at=time.perf_counter(),
-            guard=guard)
+            guard=guard, health=health)
 
     # -- boundary: apply the request queue -----------------------------------
 
@@ -376,6 +404,19 @@ class FleetService:
             raise KeyError(f"session {sid} is not active")
         return self._session_guardrail_stats(self._sessions[sid])
 
+    def _session_health_stats(self, sess: _Session) -> Optional[dict]:
+        if self.resilience is None:
+            return None
+        from repro.core.resilience import empty_health_counters, health_stats
+        return health_stats(self.resilience, sess.health,
+                            sess.health_counters or empty_health_counters())
+
+    def health_stats(self, sid: int) -> Optional[dict]:
+        """An ACTIVE session's exported health record (None when off)."""
+        if sid not in self._sessions:
+            raise KeyError(f"session {sid} is not active")
+        return self._session_health_stats(self._sessions[sid])
+
     def _finalize(self, sess: _Session) -> None:
         """§III-E final recommendation for one departing session."""
         state_vec = normalize_state(sess.cur_metrics, sess.env.metric_specs,
@@ -399,7 +440,8 @@ class FleetService:
             history=list(sess.history),
             simulated_restart_seconds=float(sess.restart_seconds),
             wall_seconds=time.perf_counter() - sess.joined_at,
-            guardrail_stats=self._session_guardrail_stats(sess))
+            guardrail_stats=self._session_guardrail_stats(sess),
+            health_stats=self._session_health_stats(sess))
 
     # -- the serving loop ----------------------------------------------------
 
@@ -411,8 +453,13 @@ class FleetService:
         if not order or steps <= 0:
             return []
         sessions = [self._sessions[sid] for sid in order]
-        self._advance_sessions(sessions, steps)
+        quarantined = self._advance_sessions(sessions, steps)
         self.total_steps += steps
+        for sid in quarantined:
+            # the chunk exhausted its supervised retries: its sessions keep
+            # their pre-episode state and leave through the normal path at
+            # the next boundary — bit-neutral for every surviving session
+            self.request_leave(sid)
         return order
 
     def _resolve_obs_mask(self, env):
@@ -425,7 +472,7 @@ class FleetService:
         return self._obs_mask
 
     def _advance_sessions(self, sessions: Sequence[_Session],
-                          steps: int) -> None:
+                          steps: int) -> list:
         """Run one ``steps``-long episode segment for ``sessions`` through
         the chunked (double-buffered) episode program — the service-side
         mirror of ``core.episode.run_fleet_episode_scan``, with per-session
@@ -436,7 +483,13 @@ class FleetService:
         as inactive replicas of the cell's first live member — they compute
         but never write to the merged window, carry zero averaging weight,
         and their results are discarded — so a ragged cell runs the same
-        fixed-shape cell program as a full one."""
+        fixed-shape cell program as a full one.
+
+        Returns the sids to QUARANTINE: with a ``ChunkSupervisor``, a chunk
+        that exhausts its retries is skipped — its rows' host state is
+        untouched (the drain never ran) and its sessions are handed back to
+        ``advance`` for the leave path. The chunk schedule is pure
+        scheduling, so skipping chunk i never perturbs chunk j."""
         step_fns = {s.env.model.step_fn for s in sessions}
         if len(step_fns) != 1:
             raise ValueError("all service sessions must share one env model "
@@ -556,6 +609,7 @@ class FleetService:
             objectives=np.zeros((n, steps), np.float32),
             restarts=np.zeros((n, steps), np.float32))
         guarded = self.policy is not None
+        resilient = self.resilience is not None
         if guarded:
             from repro.core.guardrails import (
                 GuardedCarry, GuardedEpisodeTrace)
@@ -564,6 +618,13 @@ class FleetService:
                 **base_fields,
                 guard_events=np.zeros((n, steps), np.uint8),
                 shadow_objectives=np.zeros((n, steps), np.float32))
+        elif resilient:
+            from repro.core.resilience import (
+                ResilientCarry, ResilientEpisodeTrace)
+            health = stack_np([s.health for s in rows])
+            out = ResilientEpisodeTrace(
+                **base_fields,
+                health_events=np.zeros((n, steps), np.uint8))
         else:
             out = EpisodeTrace(**base_fields)
 
@@ -571,7 +632,8 @@ class FleetService:
                                self._actor_tx, self._critic_tx, True,
                                cfg.updates_per_step, fleet=True, devices=None,
                                policy=self.policy, sharing=self.sharing,
-                               cell_size=cs, obs_mask=obs_mask)
+                               cell_size=cs, obs_mask=obs_mask,
+                               resilience=self.resilience)
         peak = [live_device_bytes()]
         t0 = time.perf_counter()
 
@@ -604,6 +666,8 @@ class FleetService:
                 objective=chunk_of(objectives))
             if guarded:
                 carry = GuardedCarry(base=carry, guard=chunk_of(guard))
+            elif resilient:
+                carry = ResilientCarry(base=carry, health=chunk_of(health))
             if cell_modes:
                 xs = (chunk_of(use_warmup), chunk_of(warmup),
                       chunk_of(noise), chunk_of(avg_now), chunk_of(active))
@@ -631,6 +695,11 @@ class FleetService:
                     trace.shadow_objectives)[:cnt]
                 write_back(guard, carry.guard)
                 carry = carry.base
+            elif resilient:
+                out.health_events[a:b] = np.asarray(
+                    trace.health_events)[:cnt]
+                write_back(health, carry.health)
+                carry = carry.base
             out.action_idx[a:b] = np.asarray(trace.action_idx)[:cnt]
             out.metrics[a:b] = np.asarray(trace.metrics)[:cnt]
             out.rewards[a:b] = np.asarray(trace.rewards)[:cnt]
@@ -657,15 +726,31 @@ class FleetService:
                 sizes[a:b] = np.asarray(carry.buffer.size)[:cnt]
             learn_keys[a:b] = np.asarray(carry.learn_key)[:cnt]
 
-        stream_chunks(lambda args: fn(*args), stage, drain, num_chunks,
-                      overlap=self.overlap)
+        sup = self.supervisor
+        if sup is not None and sup.on_failure != "skip":
+            # a persistent service must survive a dead chunk: quarantine,
+            # never crash (see __init__)
+            sup = sup._replace(on_failure="skip")
+        stream_stats = stream_chunks(
+            lambda args: fn(*args), stage, drain, num_chunks,
+            overlap=self.overlap, supervisor=sup, chaos=self.chaos)
         wall = time.perf_counter() - t0
+        failed_rows: set = set()
+        quarantined: list = []
+        if stream_stats is not None:
+            for ci in stream_stats["failed_chunks"]:
+                failed_rows.update(range(ci * c, min(n, (ci + 1) * c)))
+            quarantined = sorted({rows[j].sid for j in failed_rows
+                                  if primary_rows[j]})
         self.last_stats = dict(
             sessions=len(sessions), chunk=c, num_chunks=num_chunks,
             steps=steps, overlap=self.overlap, peak_device_bytes=peak[0],
             executable_cache_size=fn._cache_size(),
             session_steps_per_sec=len(sessions) * steps / max(wall, 1e-9),
             program=fn, cell_size=cs, sharing=self.sharing)
+        if stream_stats is not None:
+            self.last_stats["supervisor"] = stream_stats
+            self.last_stats["quarantined"] = list(quarantined)
 
         # -- write per-session state + decision history back ----------------
         per_step = wall / max(1, steps)
@@ -686,9 +771,24 @@ class FleetService:
             from repro.core.guardrails import (
                 empty_counters, guardrail_counters, merge_counters)
             round_counters = empty_counters()
+        if resilient:
+            from repro.core.resilience import (
+                empty_health_counters, health_counters,
+                merge_health_counters)
         for j, s in enumerate(rows):
             if not primary_rows[j]:
                 continue  # vacant-seat replica: everything discarded
+            if j in failed_rows:
+                # skipped chunk: the drain never ran, so the stacked arrays
+                # still hold this row's PRE-episode state and its trace rows
+                # are zeros — write nothing back; the session leaves with
+                # the state it had at the boundary
+                continue
+            if resilient:
+                s.health = row(health, j)
+                s.health_counters = merge_health_counters(
+                    s.health_counters or empty_health_counters(),
+                    health_counters(out.health_events[j]))
             if guarded:
                 s.guard = row(guard, j)
                 delta = guardrail_counters(out.guard_events[j],
@@ -707,7 +807,8 @@ class FleetService:
             rep = replay_compact_trace(
                 s.env, out, j, start=len(s.history), per_step=per_step,
                 prev_config=s.cur_config, best_objective=s.best_objective,
-                restart_seconds=s.restart_seconds)
+                restart_seconds=s.restart_seconds,
+                finite_baseline=resilient)
             s.history.extend(rep["records"])
             s.restart_seconds = rep["restart_seconds"]
             if rep["best"] is not None:
@@ -719,6 +820,7 @@ class FleetService:
                 s.cur_metrics = rep["cur_metrics"]
         if guarded:  # this round's fleet-aggregate guardrail counters
             self.last_stats["guardrails"] = round_counters
+        return quarantined
 
     # -- checkpoint / restore ------------------------------------------------
 
@@ -748,6 +850,10 @@ class FleetService:
             # json round-trips Infinity for an unbounded restart budget
             "policy": (dict(self.policy._asdict())
                        if self.policy is not None else None),
+            "resilience": (dict(self.resilience._asdict())
+                           if self.resilience is not None else None),
+            "supervisor": (dict(self.supervisor._asdict())
+                           if self.supervisor is not None else None),
             "sharing": (dict(self.sharing._asdict())
                         if self.sharing is not None else None),
             "cell_size": self.cell_size,
@@ -786,6 +892,11 @@ class FleetService:
                     np.asarray(s.guard.live_action, np.float32)
                 tree["sessions"][str(sid)]["guard_fallback_action"] = \
                     np.asarray(s.guard.fallback_action, np.float32)
+            if s.health is not None:
+                # the last-good snapshot is a full DDPGState pytree: a
+                # resumed session must be able to reset to the SAME state
+                tree["sessions"][str(sid)]["health_snapshot"] = \
+                    s.health.snapshot
             nd = s.noise.state_dict()
             extra["sessions"][str(sid)] = {
                 "label": s.label, "workload": s.workload,
@@ -813,12 +924,21 @@ class FleetService:
                     "rollbacks": int(s.guard.rollbacks),
                     "counters": dict(s.guard_counters or {}),
                 }
+            if s.health is not None:
+                extra["sessions"][str(sid)]["health"] = {
+                    "resets": int(s.health.resets),
+                    "nonfinite": int(s.health.nonfinite),
+                    "degraded": bool(s.health.degraded),
+                    "since_snap": int(s.health.since_snap),
+                    "counters": dict(s.health_counters or {}),
+                }
         return save_checkpoint(directory, self.total_steps, tree,
                                keep=self.keep, extra=extra)
 
     @classmethod
     def restore(cls, directory: str, *, env_factory=None, env_cls=None,
-                step: Optional[int] = None) -> "FleetService":
+                step: Optional[int] = None,
+                fallback: bool = False) -> "FleetService":
         """Rebuild a service from a checkpoint, bit-identically.
 
         Environments are rebuilt from ``env_factory(workload, seed)`` (they
@@ -827,14 +947,29 @@ class FleetService:
         raises). Array state is CRC-verified by the store and restored
         through ``restore_into`` against the freshly-built template, so a
         missing leaf raises ``KeyError`` instead of reinitializing.
+
+        ``fallback=True`` survives a corrupted newest checkpoint by walking
+        the keep-k history to the newest verifiable step (the restored
+        service's ``total_steps`` tells how far back it reached); the
+        checkpointed resilience/supervisor policies come along, so a crashed
+        self-healing service resumes still self-healing.
         """
-        step, flat, extra = restore_checkpoint(directory, step)
+        step, flat, extra = restore_checkpoint(directory, step,
+                                               fallback=fallback)
         cfg_d = dict(extra["cfg"])
         cfg_d["hidden"] = tuple(cfg_d["hidden"])
         policy = None
         if extra.get("policy") is not None:
             from repro.core.guardrails import DeploymentPolicy
             policy = DeploymentPolicy(**extra["policy"])
+        resilience = None
+        if extra.get("resilience") is not None:
+            from repro.core.resilience import ResiliencePolicy
+            resilience = ResiliencePolicy(**extra["resilience"])
+        supervisor = None
+        if extra.get("supervisor") is not None:
+            from repro.core.resilience import ChunkSupervisor
+            supervisor = ChunkSupervisor(**extra["supervisor"])
         sharing = None
         if extra.get("sharing") is not None:
             from repro.core.sharing import SharingConfig
@@ -850,7 +985,8 @@ class FleetService:
                   eval_runs=extra["eval_runs"], overlap=extra["overlap"],
                   checkpoint_dir=directory, keep=extra["keep"],
                   policy=policy, sharing=sharing,
-                  cell_size=extra.get("cell_size", 1))
+                  cell_size=extra.get("cell_size", 1),
+                  resilience=resilience, supervisor=supervisor)
         svc.total_steps = extra["total_steps"]
         svc._next_sid = extra["next_sid"]
         svc._slots = [None if s < 0 else int(s) for s in extra["slots"]]
@@ -894,6 +1030,8 @@ class FleetService:
                     s.guard.live_action, np.float32)
                 template["guard_fallback_action"] = np.asarray(
                     s.guard.fallback_action, np.float32)
+            if resilience is not None:
+                template["health_snapshot"] = s.health.snapshot
             sub = {k[len(f"sessions/{sid_s}/"):]: v for k, v in flat.items()
                    if k.startswith(f"sessions/{sid_s}/")}
             restored = jax.tree_util.tree_map(
@@ -940,5 +1078,15 @@ class FleetService:
                     promotions=np.int32(gm["promotions"]),
                     rollbacks=np.int32(gm["rollbacks"]))
                 s.guard_counters = dict(gm["counters"])
+            if resilience is not None:
+                from repro.core.resilience import HealthState
+                hm = meta["health"]
+                s.health = HealthState(
+                    snapshot=restored["health_snapshot"],
+                    resets=np.int32(hm["resets"]),
+                    nonfinite=np.int32(hm["nonfinite"]),
+                    degraded=np.bool_(hm["degraded"]),
+                    since_snap=np.int32(hm["since_snap"]))
+                s.health_counters = dict(hm["counters"])
             svc._sessions[sid] = s
         return svc

@@ -24,6 +24,13 @@ Three composable, default-off modes, configured by ``SharingConfig``:
 ``normalize_sharing`` canonicalizes a fully-off config to ``None`` so that
 "sharing off" keys the exact same ``_compiled_episode`` cache entry as code
 that never heard of sharing — bitwise-off by executable identity.
+
+Sharing composes with ``core.resilience``: in a resilient cell body the
+contribution mask that gates merged-FIFO writes and the averaging mean is
+narrowed to ``active & ~corrupted & ~degraded``, so one member's NaN can
+never poison the cell's shared window or drag the averaged parameters —
+while the degraded member keeps riding the cell program as a frozen
+incumbent (it computes, it just no longer contributes).
 """
 
 from __future__ import annotations

@@ -102,6 +102,9 @@ class TuningResult:
     #: promotion/rollback counters + restart-budget accounting; None when
     #: guardrails are off
     guardrail_stats: Optional[dict] = None
+    #: resilient sessions only (core.resilience): policy + cumulative
+    #: non-finite/reset counters + degraded flag; None when resilience is off
+    health_stats: Optional[dict] = None
 
     def gain(self, metric: str) -> float:
         """Proportional raw-metric gain of best vs default (paper's reported %)."""
@@ -113,7 +116,7 @@ class Tuner:
     def __init__(self, env, scalarizer: Scalarizer,
                  agent: Optional[MagpieAgent] = None,
                  eval_runs: int = 3, seed: int = 0, engine: str = "host",
-                 policy=None, observation_scopes=None):
+                 policy=None, observation_scopes=None, resilience=None):
         """``agent=None`` sizes a default DDPG agent from the environment's
         ``ParamSpace`` (``DDPGConfig.for_env``) — the network's action head and
         the search box both follow the space, whether it is the paper's 2-D
@@ -128,6 +131,14 @@ class Tuner:
         and rolled back on regression. Scan engine only — the guarded body
         is an in-graph construct. ``policy=None`` (default) is bitwise the
         unguarded tuner.
+
+        ``resilience`` (``core.resilience.ResiliencePolicy``) turns on the
+        self-healing body: a last-good snapshot rides the scan carry, a
+        non-finite learner state or observation branch-free resets the
+        session to it, and past ``max_resets`` the session degrades to
+        frozen-incumbent mode. Scan engine only; does not compose with
+        ``policy``. ``resilience=None`` (default) is bitwise the plain
+        tuner (program-identity off-path).
 
         ``observation_scopes`` (tuple of metric scopes, e.g. ``("OSC",)``)
         turns on the DIAL-style local-metric observation mode: the actor
@@ -154,9 +165,24 @@ class Tuner:
             raise ValueError(
                 "observation_scopes does not compose with DeploymentPolicy "
                 "guardrails; run guarded tuners with full-state observation")
+        if resilience is not None:
+            from repro.core.resilience import normalize_resilience
+            resilience = normalize_resilience(resilience)
+        if resilience is not None and engine != "scan":
+            raise ValueError(
+                "ResiliencePolicy runs inside the episode scan; use "
+                "engine='scan' (the host loop has no snapshot/reset body)")
+        if resilience is not None and policy is not None:
+            raise ValueError(
+                "resilience does not compose with DeploymentPolicy "
+                "guardrails; run guarded tuners without a ResiliencePolicy")
         self.env = env
         self.engine = engine
         self.policy = policy
+        self.resilience = resilience
+        self._health = None  # HealthState, persists across progressive runs
+        self.health_events = np.zeros((0,), np.uint8)
+        self._health_counters: Optional[dict] = None
         if observation_scopes is None:
             self._obs_mask = None
         else:
@@ -266,6 +292,22 @@ class Tuner:
             self._guard_counters = merge_counters(
                 self._guard_counters or empty_counters(),
                 guardrail_counters(trace.guard_events, trace.restarts))
+        elif self.resilience is not None:
+            from repro.core.resilience import (
+                empty_health_counters, health_counters, init_health_state,
+                merge_health_counters)
+            if self._health is None:
+                self._health = init_health_state(self.agent.state,
+                                                 self.resilience)
+            trace, self._health = run_episode_scan(
+                self.env, self.agent, self.scalarizer, self._cur_metrics,
+                steps, learn=learn, obs_mask=self._obs_mask,
+                resilience=self.resilience, health=self._health)
+            self.health_events = np.concatenate(
+                [self.health_events, trace.health_events])
+            self._health_counters = merge_health_counters(
+                self._health_counters or empty_health_counters(),
+                health_counters(trace.health_events))
         else:
             trace = run_episode_scan(self.env, self.agent, self.scalarizer,
                                  self._cur_metrics, steps, learn=learn,
@@ -292,7 +334,12 @@ class Tuner:
             ))
             prev_config = configs[t]
             self._cur_config = configs[t]
-            self._cur_metrics = metrics
+            if (self.resilience is None
+                    or bool(np.isfinite(trace.metrics[t]).all())):
+                # resilient carry semantics: a corrupted reading is recorded
+                # raw in the history but never becomes the next observation
+                # baseline (or the final recommendation's actor input)
+                self._cur_metrics = metrics
         self.env._last_config = dict(self._cur_config)
 
     def guardrail_stats(self) -> Optional[dict]:
@@ -305,6 +352,16 @@ class Tuner:
         return guardrail_stats(self.policy, self._guard,
                                self._guard_counters or empty_counters(),
                                space=self.env.param_space)
+
+    def health_stats(self) -> Optional[dict]:
+        """Exported health record (None when resilience is off): the policy,
+        cumulative non-finite/reset counters, the degraded flag and how many
+        steps ran since the last snapshot refresh."""
+        if self.resilience is None:
+            return None
+        from repro.core.resilience import empty_health_counters, health_stats
+        return health_stats(self.resilience, self._health,
+                            self._health_counters or empty_health_counters())
 
     def _finish(self, t_wall: float) -> TuningResult:
         """§III-E final recommendation + result assembly (shared by engines)."""
@@ -327,4 +384,5 @@ class Tuner:
             simulated_restart_seconds=self.simulated_restart_seconds,
             wall_seconds=time.perf_counter() - t_wall,
             guardrail_stats=self.guardrail_stats(),
+            health_stats=self.health_stats(),
         )

@@ -17,10 +17,14 @@ from repro.envs.lustre_sim import (
 from repro.envs.lustre_model import LustreParams, LustreSimModel
 from repro.envs.synthetic import SyntheticSurfaceModel
 from repro.envs.faults import (
+    ChaosConfig,
     FaultInjectedModel,
     FaultSpec,
+    HostChaos,
+    TransientChunkError,
     latency_spike,
     metric_dropout,
+    nan_poison,
     throughput_collapse,
 )
 
@@ -33,7 +37,8 @@ __all__ = [
     "LustreSimModel", "LustreParams", "SyntheticSurfaceModel",
     "paper_param_space", "extended_param_space", "magpie8_param_space",
     "FaultSpec", "FaultInjectedModel",
-    "throughput_collapse", "latency_spike", "metric_dropout",
+    "throughput_collapse", "latency_spike", "metric_dropout", "nan_poison",
+    "ChaosConfig", "HostChaos", "TransientChunkError",
 ]
 
 # NB: envs.sharding_env is imported lazily (it pulls in launch/roofline);

@@ -17,16 +17,26 @@ k-th committed tuning step regardless of how many shadow probes ran. A
 fault row is active for ``start <= t < start + duration``; shadow and live
 draws within one guarded step see the SAME clock, so a shadow probe scores
 a proposal under the same fault regime the live system would run it in.
+
+Runtime chaos (PR 9): ``ChaosConfig`` bundles the fault classes the
+resilience subsystem defends against — in-graph NaN corruption of an
+observed metric (mode="nan", which the ``ResiliencePolicy`` health check
+must catch and quarantine) plus host-side transient staging exceptions and
+slow-chunk stalls, delivered through ``HostChaos.before_chunk`` which the
+supervised ``stream_chunks`` path invokes before every stage attempt.
+Transient failures are DETERMINISTIC (chunk i fails its first n attempts,
+then succeeds), so a retried run is byte-for-byte reproducible.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Sequence
+import time
+from typing import NamedTuple, Sequence, Tuple
 
 from repro.envs.base import EnvModel
 
-FAULT_MODES = ("scale", "dropout")
+FAULT_MODES = ("scale", "dropout", "nan")
 
 
 class FaultSpec(NamedTuple):
@@ -36,8 +46,9 @@ class FaultSpec(NamedTuple):
     ``start``     first tuning step (0-based) the fault is active.
     ``duration``  number of tuning steps the fault stays active.
     ``mode``      "scale" multiplies the metric by ``scale``; "dropout"
-                  zeroes it (a collector blackout).
-    ``scale``     multiplier for mode="scale" (ignored for dropout).
+                  zeroes it (a collector blackout); "nan" replaces it with
+                  NaN (a poisoned sample the resilience layer must catch).
+    ``scale``     multiplier for mode="scale" (ignored otherwise).
     """
 
     metric: str
@@ -70,8 +81,12 @@ def _build_fault_fns(base_init, base_step, rows: tuple):
         for mi, start, duration, mode, scale in rows:
             active = (t >= start) & (t < start + duration)
             v = vec[mi]
-            faulted = (jnp.float32(0.0) if mode == "dropout"
-                       else v * jnp.float32(scale))
+            if mode == "dropout":
+                faulted = jnp.float32(0.0)
+            elif mode == "nan":
+                faulted = jnp.float32(jnp.nan)
+            else:
+                faulted = v * jnp.float32(scale)
             vec = vec.at[mi].set(jnp.where(active, faulted, v))
         # eval_run is a static bool: probes replay the same clock
         step = t if eval_run else t + jnp.int32(1)
@@ -144,3 +159,86 @@ def latency_spike(start: int, duration: int = 8, factor: float = 4.0,
 def metric_dropout(metric: str, start: int, duration: int = 8) -> FaultSpec:
     """Collector blackout: ``metric`` reads zero while active."""
     return FaultSpec(metric, start, duration, "dropout")
+
+
+def nan_poison(metric: str, start: int, duration: int = 1) -> FaultSpec:
+    """``metric`` reads NaN while active — the canonical divergence trigger
+    for the resilience suite (the health check must catch it before the
+    poisoned sample reaches the replay window)."""
+    return FaultSpec(metric, start, duration, "nan")
+
+
+# ---------------------------------------------------------------------------
+# Runtime chaos: the fault classes the resilience subsystem defends against
+# ---------------------------------------------------------------------------
+
+class TransientChunkError(RuntimeError):
+    """A deterministic, injected transient staging failure (the kind a real
+    fleet sees from a flaky device transfer or a preempted host thread).
+    The supervised ``stream_chunks`` path retries these; an unsupervised
+    stream propagates them."""
+
+
+class ChaosConfig(NamedTuple):
+    """Declarative chaos plan spanning both failure domains.
+
+    In-graph (compiled into the episode program via ``FaultInjectedModel``):
+      ``nan_metric``    metric name to poison with NaN, or None.
+      ``nan_start``     first tuning step the poison is active.
+      ``nan_duration``  number of poisoned tuning steps.
+
+    Host-side (delivered by ``HostChaos.before_chunk``):
+      ``fail_chunks``   ((chunk_index, n_failures), ...) — chunk fails its
+                        first ``n_failures`` stage attempts with
+                        ``TransientChunkError``, then succeeds.
+      ``stall_chunks``  ((chunk_index, seconds), ...) — chunk sleeps before
+                        staging (trips a wall-clock watchdog, no failure).
+    """
+
+    nan_metric: str | None = None
+    nan_start: int = 0
+    nan_duration: int = 1
+    fail_chunks: Tuple[Tuple[int, int], ...] = ()
+    stall_chunks: Tuple[Tuple[int, float], ...] = ()
+
+    def fault_specs(self) -> Tuple[FaultSpec, ...]:
+        """The in-graph half, as ``FaultSpec`` rows for
+        ``FaultInjectedModel``; empty when no metric poison is planned."""
+        if self.nan_metric is None:
+            return ()
+        return (nan_poison(self.nan_metric, self.nan_start,
+                           self.nan_duration),)
+
+    def host(self) -> "HostChaos | None":
+        """The host-side half; None when no host faults are planned."""
+        if not self.fail_chunks and not self.stall_chunks:
+            return None
+        return HostChaos(self)
+
+
+class HostChaos:
+    """Stateless-per-attempt chaos driver handed to supervised streams.
+
+    ``before_chunk(ci, attempt)`` is called by ``stream_chunks`` before each
+    stage attempt: it raises ``TransientChunkError`` while ``attempt`` is
+    below the planned failure count for chunk ``ci`` (so retries
+    deterministically clear the fault), and sleeps for planned stalls.
+    Because the failure schedule keys on (chunk, attempt) rather than wall
+    clock or randomness, the retried run's numerics are byte-for-byte those
+    of a fault-free run.
+    """
+
+    def __init__(self, config: ChaosConfig):
+        self.config = config
+        self._fails = {int(c): int(n) for c, n in config.fail_chunks}
+        self._stalls = {int(c): float(s) for c, s in config.stall_chunks}
+
+    def before_chunk(self, chunk_index: int, attempt: int) -> None:
+        stall = self._stalls.get(chunk_index)
+        if stall:
+            time.sleep(stall)
+        n = self._fails.get(chunk_index, 0)
+        if attempt < n:
+            raise TransientChunkError(
+                f"injected transient failure {attempt + 1}/{n} staging "
+                f"chunk {chunk_index}")

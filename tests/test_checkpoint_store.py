@@ -114,6 +114,79 @@ def test_shape_drift_raises_valueerror(tmp_path):
         restore_into(grown, flat)
 
 
+def test_crash_window_stale_tmp_dir_is_invisible_and_pruned(tmp_path):
+    """A writer that died mid-write leaves step_<N>.tmp-<pid> behind: the
+    torn directory is never listed as a restorable step, the previous
+    checkpoint stays the restore target, and the next successful save
+    sweeps the debris."""
+    rng = np.random.default_rng(5)
+    tree = _fleet_state_tree(rng)
+    save_checkpoint(str(tmp_path), 1, tree)
+    crashed = tmp_path / "step_000000002.tmp-99999"
+    crashed.mkdir()
+    (crashed / "arrays.npz").write_bytes(b"PK\x03\x04torn")
+    from repro.checkpoint.store import latest_step, list_steps
+    assert list_steps(str(tmp_path)) == [1]
+    assert latest_step(str(tmp_path)) == 1
+    step, _, _ = restore_checkpoint(str(tmp_path))
+    assert step == 1
+    save_checkpoint(str(tmp_path), 2, tree)
+    assert not crashed.exists()
+    assert list_steps(str(tmp_path)) == [1, 2]
+
+
+def test_truncated_npz_raises_instead_of_reinitializing(tmp_path):
+    """A torn arrays.npz (power cut before the payload hit the platter) is a
+    hard load error — never a silent fresh session."""
+    rng = np.random.default_rng(6)
+    path = save_checkpoint(str(tmp_path), 4, _fleet_state_tree(rng))
+    npz = os.path.join(path, "arrays.npz")
+    with open(npz, "rb") as f:
+        payload = f.read()
+    with open(npz, "wb") as f:
+        f.write(payload[: len(payload) // 3])
+    with pytest.raises(Exception) as exc_info:
+        restore_checkpoint(str(tmp_path))
+    from repro.checkpoint.store import _RESTORE_ERRORS
+    assert isinstance(exc_info.value, _RESTORE_ERRORS)
+
+
+def test_fallback_restore_walks_history_to_a_verifiable_step(tmp_path):
+    """``fallback=True`` survives a corrupted newest checkpoint by walking
+    the keep-k history newest-to-oldest; the recovered step is reported so
+    callers know how far back the restore reached."""
+    rng = np.random.default_rng(7)
+    trees = {s: _fleet_state_tree(rng) for s in (1, 2, 3)}
+    for s in (1, 2, 3):
+        save_checkpoint(str(tmp_path), s, trees[s], extra={"step": s})
+    # corrupt the newest payload after publish (media corruption)
+    npz = os.path.join(str(tmp_path), "step_000000003", "arrays.npz")
+    with np.load(npz) as z:
+        flat = {k: z[k] for k in z.files}
+    flat["sessions/1/learn_key"] = flat["sessions/1/learn_key"] ^ 0xFFFF
+    np.savez(npz, **flat)
+    # default stays strict: the newest checkpoint fails loudly
+    with pytest.raises(IOError, match="corruption"):
+        restore_checkpoint(str(tmp_path))
+    step, flat, extra = restore_checkpoint(str(tmp_path), fallback=True)
+    assert step == 2 and extra == {"step": 2}
+    restored = restore_into(trees[2], flat)
+    for a, b in zip(_leaves(trees[2]), _leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # an explicit step never falls back — the caller asked for THAT one
+    with pytest.raises(IOError, match="corruption"):
+        restore_checkpoint(str(tmp_path), step=3, fallback=True)
+
+
+def test_fallback_with_every_step_corrupted_raises(tmp_path):
+    rng = np.random.default_rng(8)
+    for s in (1, 2):
+        path = save_checkpoint(str(tmp_path), s, _fleet_state_tree(rng))
+        os.remove(os.path.join(path, "arrays.npz"))
+    with pytest.raises(IOError, match="no verifiable checkpoint"):
+        restore_checkpoint(str(tmp_path), fallback=True)
+
+
 def test_tampered_manifest_crc_raises(tmp_path):
     rng = np.random.default_rng(4)
     path = save_checkpoint(str(tmp_path), 5, _fleet_state_tree(rng))
