@@ -397,7 +397,8 @@ def bench_overlap_ab(n: int, chunk: int, steps: int, updates: int = 96,
         key = "on" if overlap else "off"
         out[key] = {"session_steps_per_sec": meas["median"],
                     "min": meas["min"], "noise_band": meas["noise_band"],
-                    "peak_device_bytes": stats["peak_device_bytes"]}
+                    "peak_device_bytes": stats["peak_device_bytes"],
+                    "staging": dict(stats.get("staging", {}))}
         rows.append(csv_row(key, n, stats["num_chunks"],
                             f"{meas['median']:.2f}", f"{meas['min']:.2f}",
                             f"{meas['noise_band']:.3f}"))
@@ -405,6 +406,10 @@ def bench_overlap_ab(n: int, chunk: int, steps: int, updates: int = 96,
                                 / out["off"]["session_steps_per_sec"])
     rows.append(csv_row("speedup_on_vs_off",
                         f"{out['speedup_on_vs_off']:.2f}", "", "", "", ""))
+    eff = out["on"]["staging"].get("overlap_efficiency")
+    if eff is not None:
+        rows.append(csv_row("overlap_efficiency", f"{eff:.3f}", "", "", "",
+                            ""))
     return rows, out
 
 

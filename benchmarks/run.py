@@ -14,6 +14,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 import time
 
 
@@ -69,8 +70,9 @@ def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--quick", action="store_true", help="reduced seeds/steps")
     p.add_argument("--only", default="",
-                   help="fig4|fig5|fig6|fig7|table3|fleet|scaling|highdim|"
-                        "shared-experience|resilience|dryrun")
+                   help="run a single benchmark by name (see --list)")
+    p.add_argument("--list", action="store_true",
+                   help="print the available --only targets and exit")
     p.add_argument("--repeats", type=int, default=0,
                    help="timed repetitions per measurement (0 = benchmark "
                    "defaults); medians + noise bands are recorded either way")
@@ -88,8 +90,8 @@ def main() -> None:
 
     from benchmarks import (fig4_single_objective, fig5_multi_objective,
                             fig6_steps, fig7_progressive, fleet_throughput,
-                            highdim_gap, resilience, shared_experience,
-                            table3_timing)
+                            highdim_gap, megakernel, resilience,
+                            shared_experience, table3_timing)
 
     benches = {
         "fig4": ("Fig. 4 — single-objective throughput tuning (30 steps)",
@@ -119,6 +121,10 @@ def main() -> None:
         "resilience": (
             "Self-healing runtime — on/off-path cost, recovery, quarantine",
             lambda: resilience.run(quick=args.quick)),
+        "megakernel": (
+            "Episode megakernel + async chunk staging — equivalence, "
+            "VMEM fit, staging A/B",
+            lambda: megakernel.run(quick=args.quick, repeats=repeats)),
         "highdim": ("High-dim gap — Magpie vs BestConfig, 2-D vs 8-knob",
                     lambda: highdim_gap.run(
                         seeds=seeds, steps=steps,
@@ -131,6 +137,14 @@ def main() -> None:
         "dryrun": ("Dry-run / roofline table — post-hillclimb (optimized)",
                    _dryrun_summary),
     }
+    if args.list:
+        for name, (title, _) in benches.items():
+            print(f"{name}: {title}")
+        return
+    if args.only and args.only not in benches:
+        print(f"unknown --only target {args.only!r}; available: "
+              f"{', '.join(benches)} (see --list)", file=sys.stderr)
+        sys.exit(2)
     for name, (title, fn) in benches.items():
         if args.only and name != args.only:
             continue
@@ -193,6 +207,20 @@ def main() -> None:
         print(f"wrote {path} "
               f"(off-path {acc['off_path_ratio']:.3f}x, on-path "
               f"{acc['on_path_overhead']:+.1%}, "
+              f"{'PASS' if acc['pass'] else 'FAIL'}) "
+              f"in {time.time()-t0:.1f}s", flush=True)
+    elif args.only == "megakernel":
+        t0 = time.time()
+        print("\n=== bench-json: megakernel + async staging trajectory "
+              "point ===", flush=True)
+        summary = megakernel.summary(quick=args.quick, repeats=repeats)
+        path = _write_bench_json(summary, root=args.output_dir)
+        acc = summary["acceptance"]
+        ab = summary["async_staging_ab"]
+        print(f"wrote {path} "
+              f"(async staging {ab['speedup_on_vs_off']:.2f}x "
+              f"[{acc['async_ab_label']}], bitwise maxulp="
+              f"{acc['bitwise_pin_maxulp']}, "
               f"{'PASS' if acc['pass'] else 'FAIL'}) "
               f"in {time.time()-t0:.1f}s", flush=True)
 

@@ -654,6 +654,119 @@ def _build_cell_fleet_episode(step_fn, space, cfg, actor_tx, critic_tx,
     return episode
 
 
+def _build_mega_episode(step_fn, space: ParamSpace, cfg: DDPGConfig,
+                        learn: bool, num_updates: int, mega_mode: str,
+                        fleet: bool):
+    """The whole-episode megakernel wrapped in the standard episode calling
+    convention: ``episode(params, w_vec, lo, span, carry, xs)`` with the
+    fleet layout (every leaf session-leading), so the chunked runtime,
+    ``FleetService`` staging and both ``run_*_episode_scan`` entry points
+    drive it UNCHANGED.
+
+    Per chunk this dispatches ONE fused program
+    (``kernels.ops.episode_inner_loop``): under ``pallas``/``interpret`` a
+    single Pallas kernel whose grid is the session axis runs all T env
+    steps — act, env transition, reward scalarization, FIFO store and the
+    full inner loop — with the packed learner state, replay window and env
+    state VMEM-resident across the episode; ``xla`` runs the identical
+    per-session body vmapped. The learner stays in the packed layout
+    ACROSS steps (pack∘unpack is the identity on the real regions and the
+    padded regions are a zero fixed point), so the decision trajectory is
+    exact vs the scan engine whenever the scan engine runs the same packed
+    learner (``REPRO_KERNELS=interpret``/``pallas``); see
+    tests/test_megakernel.py for the pinned ladder.
+
+    ``mega_mode`` is host-resolved by ``_compiled_episode`` (from
+    ``REPRO_MEGAKERNEL``) and baked into the build, like ``kernel_mode``.
+    """
+    from repro.kernels import episode_fused as _ef
+    from repro.kernels import ops as _ops
+    from repro.kernels.ddpg_fused import (pack_params, packed_dims,
+                                          unpack_params)
+
+    dims = packed_dims(cfg.state_dim, cfg.action_dim, cfg.hidden)
+    idx_dtype = space.index_dtype()
+
+    def _pack_one(ddpg):
+        a_adam, c_adam = ddpg.actor_opt[0], ddpg.critic_opt[0]
+        return pack_params(
+            ddpg.actor, ddpg.critic, ddpg.actor_targ, ddpg.critic_targ,
+            a_adam.mu, a_adam.nu, c_adam.mu, c_adam.nu,
+            a_adam.count, c_adam.count, dims)
+
+    def episode(params, w_vec, lo, span, carry, xs):
+        from repro.core.ddpg import DDPGState, _packable
+        from repro.optim.transform import ScaleByAdamState
+
+        if not fleet:
+            one = jax.tree_util.tree_map(lambda x: x[None],
+                                         (params, w_vec, lo, span, carry, xs))
+            params, w_vec, lo, span, carry, xs = one
+        if not _packable(jax.tree_util.tree_map(lambda x: x[0], carry.ddpg),
+                         cfg):
+            raise ValueError(
+                "the whole-episode megakernel needs the packed learner "
+                "layout (two hidden layers, stock optim.adam transforms); "
+                "run this configuration with REPRO_MEGAKERNEL=off")
+        use_warmup, warmup, noise = xs
+        packed = jax.vmap(_pack_one)(carry.ddpg)
+        param_leaves, param_treedef = jax.tree_util.tree_flatten(params)
+        env_leaves, env_treedef = jax.tree_util.tree_flatten(carry.env_state)
+        spec = _ef.EpisodeKernelSpec(
+            step_fn=step_fn, space=space, cfg=cfg, learn=learn,
+            num_updates=num_updates, dims=dims,
+            param_treedef=param_treedef, env_treedef=env_treedef)
+        buf = carry.buffer
+        operands = _ef.EpisodeOperands(
+            use_warmup=use_warmup, warmup=warmup, noise=noise,
+            w_vec=w_vec, lo=lo, span=span,
+            params=tuple(param_leaves), env=tuple(env_leaves),
+            packed=tuple(packed),
+            buffer=(buf.s, buf.a, buf.r, buf.s2, buf.next_slot, buf.size),
+            learn_key=carry.learn_key, state_vec=carry.state_vec,
+            objective=carry.objective)
+        outs = _ops.episode_inner_loop(operands, spec=spec, mode=mega_mode)
+
+        T = use_warmup.shape[1]
+        do_updates = learn and num_updates > 0
+
+        def _unpack_one(packed_one, ddpg):
+            parts = unpack_params(*packed_one, dims)
+            a_rest = ddpg.actor_opt[1:]
+            c_rest = ddpg.critic_opt[1:]
+            return DDPGState(
+                actor=parts["actor"], critic=parts["critic"],
+                actor_targ=parts["actor_targ"],
+                critic_targ=parts["critic_targ"],
+                actor_opt=(ScaleByAdamState(count=parts["actor_count"],
+                                            mu=parts["actor_mu"],
+                                            nu=parts["actor_nu"]), *a_rest),
+                critic_opt=(ScaleByAdamState(count=parts["critic_count"],
+                                             mu=parts["critic_mu"],
+                                             nu=parts["critic_nu"]),
+                            *c_rest),
+                step=ddpg.step + (T * num_updates if do_updates else 0))
+
+        ddpg = jax.vmap(_unpack_one)(tuple(outs.packed), carry.ddpg)
+        out_carry = EpisodeCarry(
+            env_state=jax.tree_util.tree_unflatten(env_treedef,
+                                                   list(outs.env)),
+            ddpg=ddpg,
+            buffer=BufferState(*outs.buffer),
+            learn_key=outs.learn_key, state_vec=outs.state_vec,
+            objective=outs.objective)
+        trace = EpisodeTrace(
+            action_idx=outs.action_idx.astype(idx_dtype),
+            metrics=outs.metrics, rewards=outs.rewards,
+            objectives=outs.objectives, restarts=outs.restarts)
+        if not fleet:
+            out_carry, trace = jax.tree_util.tree_map(
+                lambda x: x[0], (out_carry, trace))
+        return out_carry, trace
+
+    return episode
+
+
 _EPISODE_CACHE: dict = {}
 
 
@@ -673,6 +786,7 @@ def _compiled_episode(step_fn, space, cfg, actor_tx, critic_tx, learn,
     from repro.kernels import ops
 
     kernel_mode = ops.ddpg_kernel_mode()
+    mega_mode = ops.episode_kernel_mode()
     sharing = normalize_sharing(sharing)
     if resilience is not None:
         from repro.core.resilience import normalize_resilience
@@ -692,9 +806,13 @@ def _compiled_episode(step_fn, space, cfg, actor_tx, critic_tx, learn,
     # precedent: a ResiliencePolicy is hashable and baked into the resilient
     # build; resilience=None (the canonical off value) keys the exact
     # pre-resilience program.
+    # mega_mode joins the key on the same precedent: None (REPRO_MEGAKERNEL
+    # unset/off) keys — and IS, by cached-object identity — the exact
+    # pre-megakernel program; any active mode compiles the fused-episode
+    # formulation instead.
     key = (step_fn, space, cfg, actor_tx, critic_tx, learn, num_updates,
-           fleet, devices, kernel_mode, policy, sharing, cell_size, obs_mask,
-           resilience)
+           fleet, devices, kernel_mode, mega_mode, policy, sharing, cell_size,
+           obs_mask, resilience)
     if key in _EPISODE_CACHE:
         return _EPISODE_CACHE[key]
     if policy is not None and sharing is not None:
@@ -709,6 +827,41 @@ def _compiled_episode(step_fn, space, cfg, actor_tx, critic_tx, learn,
             "fleets with resilience off")
     if cell and not fleet:
         raise ValueError("cell experience sharing requires the fleet engine")
+    if mega_mode is not None:
+        # the megakernel refuses (rather than silently degrades) every
+        # policy layer that rewrites the scan body: those compose with the
+        # SCAN engine, and composition pins live in tests/test_megakernel.py
+        if policy is not None:
+            raise ValueError(
+                "the whole-episode megakernel does not compose with "
+                "DeploymentPolicy guardrails (the guarded step owns its own "
+                "observe/learn path); run guarded fleets with "
+                "REPRO_MEGAKERNEL=off")
+        if resilience is not None:
+            raise ValueError(
+                "the whole-episode megakernel does not compose with "
+                "ResiliencePolicy self-healing (health runs in the scan "
+                "body); run resilient fleets with REPRO_MEGAKERNEL=off")
+        if cell:
+            raise ValueError(
+                "the whole-episode megakernel does not compose with cell "
+                "experience sharing (the merged-FIFO cell body is a scan "
+                "program); run sharing fleets with REPRO_MEGAKERNEL=off")
+        if obs_mask is not None:
+            raise ValueError(
+                "the whole-episode megakernel does not support observation "
+                "masking yet; run scoped-observation fleets with "
+                "REPRO_MEGAKERNEL=off")
+        if devices is not None and len(devices) > 1:
+            raise ValueError(
+                "the whole-episode megakernel runs single-device (its grid "
+                "is the session axis); drop `devices` or set "
+                "REPRO_MEGAKERNEL=off")
+        episode = _build_mega_episode(step_fn, space, cfg, learn,
+                                      num_updates, mega_mode, fleet)
+        fn = jax.jit(episode, donate_argnums=(4,))
+        _EPISODE_CACHE[key] = fn
+        return fn
     if cell:
         episode = _build_cell_fleet_episode(
             step_fn, space, cfg, actor_tx, critic_tx, learn, num_updates,
@@ -891,7 +1044,10 @@ def last_fleet_run_stats() -> dict:
     lower bound that captures the persistent footprint the chunked runtime
     controls), ``executable_cache_size`` (compiled shape buckets held by the
     episode program) and ``program`` (the jitted callable itself, so tests
-    can pin that two grid shapes shared one executable)."""
+    can pin that two grid shapes shared one executable). ``staging`` holds
+    the transfer-stream measurements from ``stream_chunks`` (``async``,
+    ``stage_seconds``, ``stage_wait_seconds``, ``drain_seconds``,
+    ``overlap_efficiency``)."""
     return dict(_LAST_FLEET_STATS)
 
 
@@ -926,27 +1082,71 @@ def _pad_rows(x: np.ndarray, pad: int) -> np.ndarray:
     return np.concatenate([x, np.repeat(x[-1:], pad, axis=0)])
 
 
+_STAGE_EXECUTOR = None
+
+
+def _stage_executor():
+    """Lazy singleton single-worker pool: the dedicated transfer stream.
+
+    One worker by construction — staged chunks are consumed in submission
+    order, so a single thread preserves the serial schedule's staging order
+    while letting ``jax.device_put`` (which releases the GIL inside the
+    runtime) overlap with the main thread's compute dispatch and drain."""
+    global _STAGE_EXECUTOR
+    if _STAGE_EXECUTOR is None:
+        import concurrent.futures
+        _STAGE_EXECUTOR = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="repro-stage")
+    return _STAGE_EXECUTOR
+
+
+def _start_host_copy(tree):
+    """Enqueue device->host copies for every leaf that supports it.
+
+    ``copy_to_host_async`` schedules the D2H transfer to start the moment
+    the producing computation finishes, so by the time ``drain`` calls
+    ``np.asarray`` the bytes are already on the host (or in flight) instead
+    of being fetched synchronously. Purely a prefetch hint: values are
+    unchanged."""
+    for x in jax.tree_util.tree_leaves(tree):
+        cp = getattr(x, "copy_to_host_async", None)
+        if cp is not None:
+            cp()
+
+
 def stream_chunks(call, stage, drain, num_chunks: int,
-                  overlap: bool = True, supervisor=None, chaos=None):
+                  overlap: bool = True, supervisor=None, chaos=None,
+                  staging: Optional[dict] = None):
     """Drive the chunked episode pipeline, optionally double-buffered.
 
-    ``stage(ci)`` builds chunk ``ci``'s device operands (host -> device,
-    asynchronous under JAX's async dispatch), ``call(args)`` dispatches the
-    compiled episode program (returns device futures immediately), and
-    ``drain(ci, out)`` blocks on chunk ``ci``'s results, copies them to host
-    and decodes the compact trace.
+    ``stage(ci)`` builds chunk ``ci``'s device operands (host -> device),
+    ``call(args)`` dispatches the compiled episode program (returns device
+    futures immediately), and ``drain(ci, out)`` blocks on chunk ``ci``'s
+    results, copies them to host and decodes the compact trace.
 
     ``overlap=False`` is the strictly serial schedule: stage -> compute ->
     drain, one chunk at a time (the pre-overlap behaviour; one chunk of
     device state resident).
 
-    ``overlap=True`` double-buffers: while chunk k computes on device,
-    chunk k+1's operands are staged host -> device and chunk k-1's results
-    are drained and decoded on the host — transfer and host decode hide
-    under compute, at the cost of at most TWO chunks of state in flight
-    (still O(chunk)). Chunks cover disjoint sessions, so the schedule change
-    cannot affect any session's results: outputs are bitwise identical to
-    the serial schedule, which is pinned by tests/test_chunked_fleet.py.
+    ``overlap=True`` double-buffers with a dedicated transfer stream: while
+    chunk k computes on device, chunk k+1's operands are staged host ->
+    device on a single background worker thread (``_stage_executor``) and
+    chunk k-1's results — whose device->host copies were enqueued via
+    ``copy_to_host_async`` right after dispatch — are drained and decoded
+    on the main thread. Transfer and host decode hide under compute, at the
+    cost of at most TWO chunks of state in flight plus the staged chunk
+    (still O(chunk)). Chunks cover disjoint sessions and staging produces
+    the same arrays on any thread, so the schedule change cannot affect any
+    session's results: outputs are bitwise identical to the serial
+    schedule, which is pinned by tests/test_chunked_fleet.py and
+    tests/test_megakernel.py.
+
+    ``staging`` (optional dict) receives the transfer-stream measurements:
+    ``async`` (whether the background stream ran), ``stage_seconds`` (time
+    the worker spent building + staging operands), ``stage_wait_seconds``
+    (time the main thread blocked waiting for a staged chunk),
+    ``drain_seconds`` and ``overlap_efficiency`` (fraction of staging time
+    hidden under compute: ``1 - wait / stage``).
 
     ``supervisor`` (a ``core.resilience.ChunkSupervisor``) runs the stream
     under host supervision: strictly serial (chunking/overlap are pure
@@ -967,28 +1167,62 @@ def stream_chunks(call, stage, drain, num_chunks: int,
     if chaos is not None and supervisor is None:
         raise ValueError("host chaos injection needs a ChunkSupervisor "
                          "(unsupervised streams have no retry path)")
+    st = staging if staging is not None else {}
+    st.update(**{"async": False, "stage_seconds": 0.0,
+                 "stage_wait_seconds": 0.0, "drain_seconds": 0.0,
+                 "overlap_efficiency": 0.0})
     if num_chunks <= 0:
         return None if supervisor is None else _empty_stream_stats()
     if supervisor is not None:
         return _stream_supervised(call, stage, drain, num_chunks,
                                   supervisor, chaos)
-    inflight = None
-    staged = stage(0)
-    for ci in range(num_chunks):
-        out = call(staged)
-        staged = None  # drop our handle; donation invalidated the carry
-        if overlap:
+
+    def timed_stage(ci):
+        t0 = time.perf_counter()
+        args = stage(ci)
+        return args, time.perf_counter() - t0
+
+    def timed_drain(ci, out):
+        t0 = time.perf_counter()
+        drain(ci, out)
+        st["drain_seconds"] += time.perf_counter() - t0
+
+    if overlap:
+        st["async"] = True
+        ex = _stage_executor()
+        inflight = None
+        fut = ex.submit(timed_stage, 0)
+        for ci in range(num_chunks):
+            t0 = time.perf_counter()
+            staged, sdt = fut.result()  # block until chunk ci is on device
+            st["stage_wait_seconds"] += time.perf_counter() - t0
+            st["stage_seconds"] += sdt
+            out = call(staged)
+            staged = None  # drop our handle; donation invalidated the carry
+            _start_host_copy(out)  # D2H drains the moment compute finishes
             if ci + 1 < num_chunks:
-                staged = stage(ci + 1)  # host->device under chunk ci's compute
+                # host->device of chunk ci+1 on the transfer stream, under
+                # chunk ci's compute and chunk ci-1's drain
+                fut = ex.submit(timed_stage, ci + 1)
             if inflight is not None:
-                drain(*inflight)        # blocks on chunk ci-1, ci still runs
+                timed_drain(*inflight)  # blocks on chunk ci-1, ci still runs
             inflight = (ci, out)
-        else:
-            drain(ci, out)
+        if inflight is not None:
+            timed_drain(*inflight)
+    else:
+        staged, sdt = timed_stage(0)
+        st["stage_seconds"] += sdt
+        for ci in range(num_chunks):
+            out = call(staged)
+            staged = None
+            timed_drain(ci, out)
             if ci + 1 < num_chunks:
-                staged = stage(ci + 1)
-    if inflight is not None:
-        drain(*inflight)
+                staged, sdt = timed_stage(ci + 1)
+                st["stage_seconds"] += sdt
+        st["stage_wait_seconds"] = st["stage_seconds"]  # nothing hidden
+    if st["stage_seconds"] > 0.0:
+        st["overlap_efficiency"] = max(
+            0.0, 1.0 - st["stage_wait_seconds"] / st["stage_seconds"])
     return None
 
 
@@ -1262,8 +1496,14 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
             carry = GuardedCarry(base=carry, guard=chunk_of(guard))
         elif resilience is not None:
             carry = ResilientCarry(base=carry, health=chunk_of(health))
-        return (chunk_of(params), chunk_of(w_vec), chunk_of(lo),
+        args = (chunk_of(params), chunk_of(w_vec), chunk_of(lo),
                 chunk_of(span), carry, xs)
+        # sample peak while the freshly staged operands are live: under
+        # async overlap this is the window where the in-flight transfer
+        # buffers coexist with the computing chunk — invisible to the
+        # drain-side sample, which runs after they were consumed
+        peak[0] = max(peak[0], live_device_bytes())
+        return args
 
     def call(args):
         return fn(*args)
@@ -1324,16 +1564,17 @@ def run_fleet_episode_scan(envs: Sequence, agent, scalarizers: Sequence,
             sizes[a:b] = np.asarray(carry.buffer.size)[:cnt]
         learn_keys[a:b] = np.asarray(carry.learn_key)[:cnt]
 
+    staging_stats: dict = {}
     stream_stats = stream_chunks(call, stage, drain, num_chunks,
                                  overlap=overlap, supervisor=supervisor,
-                                 chaos=chaos)
+                                 chaos=chaos, staging=staging_stats)
 
     _LAST_FLEET_STATS.clear()
     _LAST_FLEET_STATS.update(
         sessions=n, chunk=c, num_chunks=num_chunks, overlap=overlap,
         padded_sessions=pad_total, peak_device_bytes=peak[0],
         executable_cache_size=fn._cache_size(), program=fn,
-        cell_size=cs, sharing=sharing)
+        cell_size=cs, sharing=sharing, staging=staging_stats)
     if stream_stats is not None:
         _LAST_FLEET_STATS["supervisor"] = stream_stats
 

@@ -812,9 +812,10 @@ def memory_plan(cfg: DDPGConfig, space, *, sessions: int, steps: int,
       * ``chunk_device_bytes`` — what one chunk keeps resident on device
         (state + replay + env state + exploration inputs + the chunk's
         trace): the streaming runtime's peak, O(chunk·steps);
-      * ``overlap_device_bytes`` — the double-buffered schedule's bound:
-        at most TWO chunks in flight (chunk k computing while k+1 stages
-        and k-1 drains), still O(chunk·steps);
+      * ``overlap_device_bytes`` — the async double-buffered schedule's
+        bound: up to THREE chunks of device state coexist (chunk k
+        computing, chunk k+1's operands in flight on the transfer stream,
+        chunk k-1's results draining to host), still O(chunk·steps);
       * ``fleet_host_bytes`` — the whole fleet's host-side state and trace
         buffers, O(sessions·steps).
 
@@ -868,6 +869,8 @@ def memory_plan(cfg: DDPGConfig, space, *, sessions: int, steps: int,
             "trace_bytes_per_step": trace_bytes_per_step,
         },
         "chunk_device_bytes": chunk_device_bytes,
-        "overlap_device_bytes": 2 * chunk_device_bytes,
+        # async staging keeps up to three chunks of state alive at once:
+        # computing (k), staged-in-flight (k+1), draining (k-1)
+        "overlap_device_bytes": 3 * chunk_device_bytes,
         "fleet_host_bytes": fleet_host_bytes,
     }

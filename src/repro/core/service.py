@@ -674,8 +674,12 @@ class FleetService:
             else:
                 xs = (chunk_of(use_warmup), chunk_of(warmup),
                       chunk_of(noise))
-            return (chunk_of(params), chunk_of(w_vec), chunk_of(lo),
+            args = (chunk_of(params), chunk_of(w_vec), chunk_of(lo),
                     chunk_of(span), carry, xs)
+            # sample peak while the staged operands are live — counts the
+            # in-flight transfer buffers the drain-side sample misses
+            peak[0] = max(peak[0], live_device_bytes())
+            return args
 
         def drain(ci, out_pair):
             carry, trace = out_pair
@@ -731,9 +735,11 @@ class FleetService:
             # a persistent service must survive a dead chunk: quarantine,
             # never crash (see __init__)
             sup = sup._replace(on_failure="skip")
+        staging_stats: dict = {}
         stream_stats = stream_chunks(
             lambda args: fn(*args), stage, drain, num_chunks,
-            overlap=self.overlap, supervisor=sup, chaos=self.chaos)
+            overlap=self.overlap, supervisor=sup, chaos=self.chaos,
+            staging=staging_stats)
         wall = time.perf_counter() - t0
         failed_rows: set = set()
         quarantined: list = []
@@ -747,7 +753,8 @@ class FleetService:
             steps=steps, overlap=self.overlap, peak_device_bytes=peak[0],
             executable_cache_size=fn._cache_size(),
             session_steps_per_sec=len(sessions) * steps / max(wall, 1e-9),
-            program=fn, cell_size=cs, sharing=self.sharing)
+            program=fn, cell_size=cs, sharing=self.sharing,
+            staging=staging_stats)
         if stream_stats is not None:
             self.last_stats["supervisor"] = stream_stats
             self.last_stats["quarantined"] = list(quarantined)

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels.ddpg_fused import ddpg_fused_learn as _ddpg_fused_learn
 from repro.kernels.ddpg_fused import ddpg_fused_xla as _ddpg_fused_xla
+from repro.kernels.episode_fused import episode_fused_learn as _episode_learn
+from repro.kernels.episode_fused import episode_fused_xla as _episode_xla
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.gmm import gmm as _gmm
 from repro.kernels.mamba2_scan import ssd_scan as _ssd_scan
@@ -70,6 +72,48 @@ def ddpg_inner_loop(packed, batches, *, dims, gamma, tau, actor_lr,
             interpret=mode == "interpret")
     return _ddpg_fused_xla(packed, batches, dims=dims, gamma=gamma, tau=tau,
                            actor_lr=actor_lr, critic_lr=critic_lr)
+
+
+# ---------------------------------------------------------------------------
+# Whole-episode megakernel (act -> env -> reward -> store -> inner loop)
+# ---------------------------------------------------------------------------
+
+_MEGAKERNEL_MODES = ("xla", "pallas", "interpret")
+
+
+def episode_kernel_mode():
+    """Resolve ``REPRO_MEGAKERNEL``: ``None`` (unset/``off``/``0``/``none``)
+    keeps the standard scan engine — ``core.episode._compiled_episode`` keys
+    on this value, so ``None`` compiles the exact pre-megakernel program.
+    ``xla``/``pallas``/``interpret`` select the whole-episode fused
+    formulation; ``auto`` means the Pallas kernel on TPU and the XLA twin
+    elsewhere. Host-resolved only — never call this inside a jit trace."""
+    m = os.environ.get("REPRO_MEGAKERNEL", "off").strip().lower()
+    if m in ("", "off", "0", "none"):
+        return None
+    if m == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if m not in _MEGAKERNEL_MODES:
+        raise ValueError(
+            f"REPRO_MEGAKERNEL={m!r}: expected one of "
+            f"{('off', 'auto') + _MEGAKERNEL_MODES}")
+    return m
+
+
+def episode_inner_loop(operands, *, spec, mode=None):
+    """Whole chunk of T-step episodes in one fused program.
+
+    ``pallas``/``interpret`` run the megakernel (one grid instance per
+    session, every stateful operand VMEM-resident and aliased across the
+    call); ``xla`` runs the identical per-session body vmapped. Inputs
+    follow ``kernels.episode_fused.EpisodeOperands``; like
+    ``ddpg_inner_loop``, jit-traced callers must resolve the mode on the
+    host and pass it explicitly."""
+    mode = episode_kernel_mode() if mode is None else mode
+    if mode in ("pallas", "interpret"):
+        return _episode_learn(operands, spec=spec,
+                              interpret=mode == "interpret")
+    return _episode_xla(operands, spec=spec)
 
 
 # ---------------------------------------------------------------------------

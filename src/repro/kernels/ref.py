@@ -176,3 +176,102 @@ def ddpg_fused_ref(packed, batches, *, state_dim, action_dim, pad,
 
     packed, (cl, al, qm) = jax.lax.scan(step, packed, batches)
     return packed, {"critic_loss": cl, "actor_loss": al, "q_mean": qm}
+
+
+def episode_fused_ref(op, *, spec):
+    """Sequential whole-episode oracle (the definition of the megakernel).
+
+    One session, no fleet axis: a plain Python loop over the T tuning steps,
+    each running act -> env step -> scalarized reward -> FIFO store ->
+    ``ddpg_fused_ref`` for the ``updates_per_step`` inner loop. No fusion
+    barriers, no packed-across-steps trickery — parameters are sliced out of
+    the packed layout with ordinary indexing every step. ``op`` is a
+    per-session ``kernels.episode_fused.EpisodeOperands`` (leading session
+    axis dropped); returns ``EpisodeOutputs``. Quantized knob indices come
+    from the space's own coordinate maps (they are the definition of the
+    action decode, not an implementation detail under test).
+    """
+    from repro.core.action_mapping import jax_coord_maps
+    from repro.core.episode import _encode_restart
+    from repro.kernels.ddpg_fused import _unpack_net
+    from repro.kernels.episode_fused import EpisodeOutputs
+
+    cfg, dims, space = spec.cfg, spec.dims, spec.space
+    coord_maps = jax_coord_maps(space)
+    params = jax.tree_util.tree_unflatten(spec.param_treedef,
+                                          list(op.params))
+    env_state = jax.tree_util.tree_unflatten(spec.env_treedef, list(op.env))
+    packed = tuple(op.packed)
+    bs, ba, br, bs2, next_slot, size = op.buffer
+    learn_key, state_vec, objective = op.learn_key, op.state_vec, op.objective
+    T = int(op.use_warmup.shape[0])
+    m, k, P = space.dim, int(op.state_vec.shape[0]), dims.pad
+    do_updates = spec.learn and spec.num_updates > 0
+
+    tr_idx, tr_met, tr_rew, tr_obj, tr_rst = [], [], [], [], []
+    for t in range(T):
+        weights, biases = packed[0], packed[1]
+        actor = _unpack_net(weights[0], biases[0], dims.actor_sizes)
+        h = state_vec
+        for li in range(len(actor) - 1):
+            h = jax.nn.relu(h @ actor[li]["w"] + actor[li]["b"])
+        policy = jax.nn.sigmoid(h @ actor[-1]["w"] + actor[-1]["b"])
+        explored = jnp.clip(policy + op.noise[t], 0.0, 1.0)
+        action = jnp.where(op.use_warmup[t],
+                           jnp.clip(op.warmup[t], 0.0, 1.0), explored)
+        action_idx = jnp.stack(
+            [coord_maps[j](action[j])["idx"] for j in range(m)]
+        ).astype(jnp.int32)
+
+        env_state, metrics_vec, restart = spec.step_fn(params, env_state,
+                                                       action, False)
+        norm = jnp.where(op.span > 0,
+                         jnp.clip((metrics_vec - op.lo) / op.span, 0.0, 1.0),
+                         0.0)
+        obj = jnp.float32(0.0)
+        for j in range(k):
+            obj = obj + op.w_vec[j] * norm[j]
+        reward = (obj - objective) / jnp.maximum(objective, jnp.float32(1e-6))
+
+        if spec.learn:
+            i = next_slot
+            bs = bs.at[i].set(state_vec.astype(bs.dtype))
+            ba = ba.at[i].set(action.astype(ba.dtype))
+            br = br.at[i].set(reward.astype(br.dtype))
+            bs2 = bs2.at[i].set(norm.astype(bs2.dtype))
+            next_slot = (i + 1) % bs.shape[0]
+            size = jnp.minimum(size + 1, bs.shape[0])
+        if do_updates:
+            learn_key, kk = jax.random.split(learn_key)
+            U, B = spec.num_updates, cfg.batch_size
+            idx = jax.random.randint(kk, (U, B), 0, size)
+            flat = idx.reshape(-1)
+
+            def take(x):
+                return x[flat].reshape(U, B, *x.shape[1:]).astype(
+                    jnp.float32)
+
+            s_b, a_b, r_b, s2_b = take(bs), take(ba), take(br), take(bs2)
+            zk = jnp.zeros((U, B, P - k), jnp.float32)
+            sx = jnp.concatenate([s_b, zk], axis=-1)
+            s2x = jnp.concatenate([s2_b, zk], axis=-1)
+            cx = jnp.concatenate(
+                [s_b, a_b, jnp.zeros((U, B, P - k - m), jnp.float32)],
+                axis=-1)
+            packed, _ = ddpg_fused_ref(
+                packed, (sx, cx, s2x, r_b), state_dim=k, action_dim=m,
+                pad=P, gamma=cfg.gamma, tau=cfg.tau, actor_lr=cfg.actor_lr,
+                critic_lr=cfg.critic_lr)
+
+        tr_idx.append(action_idx)
+        tr_met.append(metrics_vec)
+        tr_rew.append(reward)
+        tr_obj.append(obj)
+        tr_rst.append(_encode_restart(restart))
+        state_vec, objective = norm, obj
+
+    return EpisodeOutputs(
+        tuple(jax.tree_util.tree_leaves(env_state)), packed,
+        (bs, ba, br, bs2, next_slot, size), learn_key, state_vec, objective,
+        jnp.stack(tr_idx), jnp.stack(tr_met), jnp.stack(tr_rew),
+        jnp.stack(tr_obj), jnp.stack(tr_rst))

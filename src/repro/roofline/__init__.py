@@ -2,6 +2,11 @@ from repro.roofline.hw import TPU_V5E
 from repro.roofline.analysis import (
     collective_bytes_from_hlo, roofline_terms, model_flops,
 )
+from repro.roofline.vmem import (
+    VMEM_BYTES, check_episode_vmem_fit, episode_vmem_plan,
+    suggest_max_capacity,
+)
 
 __all__ = ["TPU_V5E", "collective_bytes_from_hlo", "roofline_terms",
-           "model_flops"]
+           "model_flops", "VMEM_BYTES", "check_episode_vmem_fit",
+           "episode_vmem_plan", "suggest_max_capacity"]
